@@ -1,0 +1,73 @@
+"""Kernel micro-benchmarks: VWR Pallas kernels (interpret mode on CPU)
+vs the XLA-compiled jnp reference.  On CPU the interesting output is
+the arithmetic-intensity table (the VWR width-ratio knob), not wall
+time; on a real TPU the same harness times Mosaic kernels."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) \
+        else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def kernel_microbench():
+    key = jax.random.PRNGKey(0)
+    print("\n# kernel_microbench: name,us_pallas_interp,us_xla_ref,"
+          "flops,staged_bytes,arith_intensity")
+    rows = []
+
+    # matmul: arithmetic intensity = flops / staged HBM bytes; the VWR
+    # block-size knob (bm, bk, bn) sets it
+    M = K = N = 256
+    x = jax.random.normal(key, (M, K), jnp.float32)
+    w = jax.random.normal(key, (K, N), jnp.float32)
+    for bm, bk, bn in ((64, 64, 64), (128, 128, 128), (256, 256, 256)):
+        t_p = _time(lambda a, b: ops.vwr_matmul(a, b, bm=bm, bk=bk,
+                                                bn=bn), x, w)
+        t_r = _time(ref.matmul_ref, x, w)
+        flops = 2 * M * K * N
+        n_blocks = (M // bm) * (N // bn) * (K // bk)
+        staged = n_blocks * (bm * bk + bk * bn + bm * bn) * 4
+        rows.append((f"vwr_matmul_b{bm}", t_p, t_r, flops, staged))
+        print(f"vwr_matmul_b{bm}x{bk}x{bn},{t_p:.0f},{t_r:.0f},{flops},"
+              f"{staged},{flops/staged:.2f}")
+
+    # direct conv vs depthwise (the reuse cliff the paper targets)
+    x = jax.random.normal(key, (1, 34, 34, 64), jnp.float32)
+    wf = jax.random.normal(key, (3, 3, 64, 64), jnp.float32)
+    wd = jax.random.normal(key, (3, 3, 64), jnp.float32)
+    t_c = _time(lambda a, b: ops.vwr_conv2d(a, b, bh=8, bf=64), x, wf)
+    t_cr = _time(ref.conv2d_ref, x, wf)
+    f_c = 2 * 32 * 32 * 64 * 64 * 9
+    print(f"vwr_conv2d_3x3,{t_c:.0f},{t_cr:.0f},{f_c},"
+          f"{x.size*4 + wf.size*4},{f_c/(x.size*4+wf.size*4):.2f}")
+    t_d = _time(lambda a, b: ops.vwr_depthwise(a, b, bh=8), x, wd)
+    t_dr = _time(ref.depthwise_ref, x, wd)
+    f_d = 2 * 32 * 32 * 64 * 9
+    print(f"vwr_depthwise_3x3,{t_d:.0f},{t_dr:.0f},{f_d},"
+          f"{x.size*4 + wd.size*4},{f_d/(x.size*4+wd.size*4):.2f}")
+
+    # attention block-size sweep (KV staging width = the VWR width)
+    q = jax.random.normal(key, (4, 256, 4, 64), jnp.float32)
+    k = jax.random.normal(key, (4, 256, 4, 64), jnp.float32)
+    v = jax.random.normal(key, (4, 256, 4, 64), jnp.float32)
+    for bkv in (64, 128, 256):
+        t_a = _time(lambda a, b, c: ops.vwr_attention(
+            a, b, c, causal=True, bq=64, bkv=bkv), q, k, v)
+        f_a = 4 * 4 * 2 * 256 * 256 * 64 * 2
+        staged = (256 // bkv) * 0 + q.size * 4 + 2 * k.size * 4
+        print(f"vwr_attention_bkv{bkv},{t_a:.0f},,{f_a},{staged},"
+              f"{f_a/staged:.2f}")
+    return rows

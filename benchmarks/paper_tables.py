@@ -1,0 +1,102 @@
+"""One function per paper table/figure (§7 reproduction).
+
+Each prints a CSV block and returns the rows; ours and the paper's
+published values are side by side so deviations are visible, not
+hidden.  Absolute units differ from the paper where its units are
+unrecoverable (reads: our model counts 8-bit words; the paper's unit
+is unstated) — the comparison object is the RATIO structure.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import analysis as A
+
+
+def fig9_utilization():
+    """PE utilization per layer per architecture (Fig. 9)."""
+    suite = A.run_suite()
+    print("\n# fig9_utilization: layer," + ",".join(A.MODELS))
+    rows = []
+    for lname, res in suite.items():
+        row = [res[a].utilization for a in A.MODELS]
+        rows.append((lname, row))
+        print(f"{lname}," + ",".join(f"{u:.4f}" for u in row))
+    return rows
+
+
+def fig10_cmr():
+    """Compute-to-memory ratio per layer per architecture (Fig. 10),
+    word-normalized (macs per global-buffer word read)."""
+    suite = A.run_suite()
+    print("\n# fig10_cmr: layer," + ",".join(A.MODELS))
+    rows = []
+    for lname, res in suite.items():
+        row = [res[a].cmr for a in A.MODELS]
+        rows.append((lname, row))
+        print(f"{lname}," + ",".join(f"{c:.2f}" for c in row))
+    return rows
+
+
+def table3_improvements():
+    """Provet improvement ratios vs each baseline (Table 3), ours and
+    the paper's published numbers interleaved."""
+    imp = A.improvement_table()
+    archs = ["Eyeriss", "TPU", "ARA", "GPU"]
+    print("\n# table3: layer," + ",".join(
+        f"util_{a}_ours,util_{a}_paper,cmr_{a}_ours,cmr_{a}_paper"
+        for a in archs))
+    rows = []
+    for lname, t in imp.items():
+        pu = A.PAPER_TABLE3[lname]["utilization"]
+        pc = A.PAPER_TABLE3[lname]["cmr"]
+        vals = []
+        for a in archs:
+            vals += [t["utilization"][a], pu[a], t["cmr"][a], pc[a]]
+        rows.append((lname, vals))
+        print(f"{lname}," + ",".join(f"{v:.2f}" for v in vals))
+    return rows
+
+
+def table4_reads_latency():
+    """Global-buffer reads + latency per layer (Table 4). Ours in
+    Mwords / ms@200MHz; paper values echoed for reference."""
+    suite = A.run_suite()
+    print("\n# table4: layer,arch,reads_Mw_ours,lat_ms_ours,"
+          "reads_paper,lat_paper")
+    rows = []
+    for lname, res in suite.items():
+        paper = A.PAPER_TABLE4[lname][1]
+        for a in A.MODELS:
+            r = res[a]
+            pr, pl = paper[a.replace("GPU", "GPU")] if a in paper else \
+                paper.get(a, (float("nan"), float("nan")))
+            rows.append((lname, a, r.reads_mwords, r.latency_ms, pr, pl))
+            print(f"{lname},{a},{r.reads_mwords:.3f},{r.latency_ms:.3f},"
+                  f"{pr},{pl}")
+    return rows
+
+
+def conv_isa_demo():
+    """§6.1 mapping executed on the ISA interpreter (timing + counters
+    — the cycle-level reproduction artifact)."""
+    import numpy as np
+
+    from repro.core import ref_ops, templates
+    from repro.core.machine import PAPER_EXAMPLE
+
+    rng = np.random.default_rng(0)
+    img = rng.standard_normal((1, 16, 16)).astype(np.float32)
+    w = rng.standard_normal((1, 1, 5, 5)).astype(np.float32)
+    mp = templates.conv2d(PAPER_EXAMPLE, img, w)
+    t0 = time.perf_counter()
+    out, m = mp.run()
+    dt = (time.perf_counter() - t0) * 1e6
+    err = float(abs(out - ref_ops.conv2d_ref(img, w)).max())
+    util = m.utilization(mp.meta["total_macs"])
+    print("\n# conv_isa_demo: us_per_run,maxerr,cycles,sram_reads,"
+          "sram_writes,cmr_instr,utilization,energy_nj")
+    print(f"conv_6_1,{dt:.0f},{err:.2e},{m.c.cycles},{m.c.sram_reads},"
+          f"{m.c.sram_writes},{m.cmr():.2f},{util:.3f},"
+          f"{m.c.energy_fj/1e6:.2f}")
+    return m.c.as_dict()

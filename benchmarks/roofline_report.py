@@ -1,0 +1,71 @@
+"""Roofline table from dry-run artifacts (deliverable g).
+
+Reads artifacts/dryrun/<arch>.<shape>.single.json and prints per-cell:
+three roofline terms, dominant bottleneck, MODEL_FLOPS/HLO ratio, and
+the estimated per-chip HBM footprint (memory_analysis temp+args are
+whole-module numbers on the CPU backend: divided by device count)."""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.common.config import SHAPES, SHAPES_BY_NAME, shape_applicable
+from repro.configs import ARCHS, get_config
+from repro.launch import roofline as RL
+
+
+def load_roofline_rows(artifact_dir="artifacts/dryrun", mesh="single"):
+    rows = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok, reason = shape_applicable(cfg, shape)
+            rec = RL.load_cell(artifact_dir, arch, shape.name, mesh)
+            if not ok:
+                rows.append({"arch": arch, "shape": shape.name,
+                             "status": "skipped", "reason": reason})
+                continue
+            if rec is None or rec.get("status") != "ok":
+                rows.append({"arch": arch, "shape": shape.name,
+                             "status": "missing"})
+                continue
+            chips = rec["n_devices"]
+            # per-device HLO numbers -> global
+            flops_g = rec.get("flops_accounted_global") or \
+                rec["flops"] * chips
+            bytes_analytic = RL.analytic_traffic(cfg, shape)
+            coll_g = rec["collective_bytes"] * chips
+            r = RL.Roofline(
+                arch=arch, shape=shape.name, chips=chips,
+                flops=flops_g, bytes_hbm=bytes_analytic,
+                bytes_coll=coll_g,
+                model_flops=RL.model_flops(cfg, shape)
+                + RL.attention_flops(cfg, shape)).finalize()
+            row = r.row()
+            row["status"] = "ok"
+            row["hbm_per_chip_gb"] = (
+                rec.get("temp_size_in_bytes", 0)
+                + rec.get("argument_size_in_bytes", 0)) / chips / 2**30
+            row["flops_raw_scanned"] = rec["flops"]
+            # HLO-derived byte bounds (per-device -> global); see
+            # roofline.analytic_traffic for the bias discussion
+            row["bytes_hlo_raw"] = rec["bytes_accessed"] * chips
+            row["bytes_hlo_major"] = rec["major_bytes"] * chips
+            row["compile_s"] = rec.get("compile_s")
+            rows.append(row)
+    return rows
+
+
+def roofline_table(artifact_dir="artifacts/dryrun"):
+    rows = load_roofline_rows(artifact_dir)
+    print("\n# roofline: arch,shape,t_comp_s,t_mem_s,t_coll_s,dominant,"
+          "useful_frac,roofline_frac,hbm_per_chip_gb")
+    for r in rows:
+        if r.get("status") != "ok":
+            print(f"{r['arch']},{r['shape']},,,,{r['status']},,,")
+            continue
+        print(f"{r['arch']},{r['shape']},{r['t_comp_s']:.4e},"
+              f"{r['t_mem_s']:.4e},{r['t_coll_s']:.4e},{r['dominant']},"
+              f"{r['useful_frac']:.3f},{r['roofline_frac']:.3f},"
+              f"{r['hbm_per_chip_gb']:.2f}")
+    return rows

@@ -1,0 +1,56 @@
+"""Benchmark driver: one function per paper table/figure + kernel
+micro-benches + the roofline report (when dry-run artifacts exist).
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+from benchmarks.kernels_bench import kernel_microbench
+from benchmarks.paper_tables import (conv_isa_demo, fig9_utilization,
+                                     fig10_cmr, table3_improvements,
+                                     table4_reads_latency)
+from benchmarks.roofline_report import roofline_table
+from benchmarks.shuffler_cost import table1_shuffler_cost
+from benchmarks.sram_energy import fig2b_sram_energy
+
+
+def main() -> None:
+    benches = [
+        ("fig9_utilization", fig9_utilization),
+        ("fig10_cmr", fig10_cmr),
+        ("table3_improvements", table3_improvements),
+        ("table4_reads_latency", table4_reads_latency),
+        ("fig2b_sram_energy", fig2b_sram_energy),
+        ("table1_shuffler_cost", table1_shuffler_cost),
+        ("conv_isa_demo", conv_isa_demo),
+        ("kernel_microbench", kernel_microbench),
+        ("roofline_table_baseline", roofline_table),
+        ("roofline_table_optimized",
+         lambda: roofline_table("artifacts/dryrun_opt")
+         if os.path.isdir("artifacts/dryrun_opt") else None),
+    ]
+    failures = []
+    for name, fn in benches:
+        t0 = time.perf_counter()
+        try:
+            fn()
+            print(f"## {name}: {(time.perf_counter()-t0)*1e3:.0f} ms")
+        except Exception:                                  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print("BENCH FAILURES:", failures)
+        raise SystemExit(1)
+    print("\nall benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Table 1 reproduction: Provet shuffler vs generic crossbar cost."""
+from __future__ import annotations
+
+from repro.core.machine import (PAPER_TABLE1_ENDPOINTS, PAPER_TABLE1_REACH,
+                                crossbar_cost, shuffler_cost)
+
+PAPER = {"shuffler": {"area_mm2": 0.13, "gates": 16e3, "wire_mm": 4.3},
+         "crossbar": {"area_mm2": 0.88, "gates": 86e3, "wire_mm": 33.1}}
+
+
+def table1_shuffler_cost():
+    sh = shuffler_cost(PAPER_TABLE1_ENDPOINTS, PAPER_TABLE1_REACH)
+    xb = crossbar_cost(PAPER_TABLE1_ENDPOINTS)
+    print("\n# table1: design,gates_ours,gates_paper,area_ours,"
+          "area_paper,wire_ours,wire_paper")
+    print(f"shuffler,{sh['gates']:.0f},{PAPER['shuffler']['gates']:.0f},"
+          f"{sh['area_mm2']:.3f},{PAPER['shuffler']['area_mm2']},"
+          f"{sh['wire_mm']:.1f},{PAPER['shuffler']['wire_mm']}")
+    print(f"crossbar,{xb['gates']:.0f},{PAPER['crossbar']['gates']:.0f},"
+          f"{xb['area_mm2']:.3f},{PAPER['crossbar']['area_mm2']},"
+          f"{xb['wire_mm']:.1f},{PAPER['crossbar']['wire_mm']}")
+    print(f"ratio_gates,{xb['gates']/sh['gates']:.2f},5.38,,,,")
+    print(f"ratio_area,{xb['area_mm2']/sh['area_mm2']:.2f},6.82,,,,")
+    print(f"ratio_wire,{xb['wire_mm']/sh['wire_mm']:.2f},7.67,,,,")
+    return {"shuffler": sh, "crossbar": xb}

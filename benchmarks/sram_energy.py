@@ -1,0 +1,25 @@
+"""Fig. 2b reproduction: per-bit SRAM access energy vs aspect ratio at
+fixed capacity (eq. 1-2 + CACTI-flavoured constants)."""
+from __future__ import annotations
+
+from repro.core.machine import aspect_ratio_sweep
+
+
+def fig2b_sram_energy(capacity_kbits=(64, 256, 1024)):
+    print("\n# fig2b_sram_energy: capacity_kbit,width_bits,depth,"
+          "e_per_bit_fj,bw_bits_per_cycle")
+    rows = []
+    for cap in capacity_kbits:
+        sweep = aspect_ratio_sweep(cap * 1024)
+        for w in sorted(sweep):
+            r = sweep[w]
+            rows.append((cap, w, r["depth"], r["e_per_bit_fj"],
+                         r["bw_bits_per_cycle"]))
+            print(f"{cap},{w},{r['depth']},{r['e_per_bit_fj']:.3f},"
+                  f"{r['bw_bits_per_cycle']}")
+    # the paper's claim: monotone decrease of e/bit with width
+    for cap in capacity_kbits:
+        sweep = aspect_ratio_sweep(cap * 1024)
+        es = [sweep[w]["e_per_bit_fj"] for w in sorted(sweep)]
+        assert all(a > b for a, b in zip(es, es[1:]))
+    return rows

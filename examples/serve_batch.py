@@ -1,0 +1,14 @@
+"""Serving example (deliverable b): prefill a batch of prompts and
+decode continuations with a KV cache.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    defaults = ["--arch", "qwen1.5-0.5b", "--reduce", "smoke",
+                "--batch", "4", "--prompt-len", "32", "--gen", "16"]
+    main(defaults + args)

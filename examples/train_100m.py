@@ -1,0 +1,16 @@
+"""End-to-end driver (deliverable b): train a ~100M-param model for a
+few hundred steps on CPU with checkpointing + restart resilience.
+
+    PYTHONPATH=src python examples/train_100m.py [--steps 200]
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    defaults = ["--arch", "tinyllama-1.1b", "--reduce", "width",
+                "--steps", "200", "--batch", "8", "--seq", "256",
+                "--ckpt", "/tmp/repro_100m_ckpt", "--ckpt-every", "50"]
+    # user args win
+    main(defaults + args)

@@ -1,0 +1,8 @@
+from repro.common.config import (  # noqa: F401
+    MLAConfig,
+    Mamba2Config,
+    ModelConfig,
+    MoEConfig,
+    XLSTMConfig,
+)
+from repro.common.module import ParamDef, abstract_params, init_params, param_pspecs  # noqa: F401

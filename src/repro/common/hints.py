@@ -1,0 +1,40 @@
+"""Sharding hint helper: with_sharding_constraint iff a mesh with the
+referenced axes is active (no-op in single-device tests)."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as PS  # noqa: F401
+
+
+def shard_hint(x, spec):
+    try:
+        from jax._src import mesh as mesh_lib
+        cur = mesh_lib.thread_resources.env.physical_mesh
+        names = set(cur.axis_names) if not cur.empty else set()
+        need = {a for e in spec for a in
+                ((e,) if isinstance(e, str) else (e or ()))}
+        if need and need.issubset(names):
+            return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:                                  # noqa: BLE001
+        pass
+    return x
+
+
+def shard_batch(x, ndim=None, extra=None):
+    """Constrain dim 0 to the data axes present in the active mesh
+    (('pod','data') on the multi-pod mesh, ('data',) single-pod) and
+    leave other dims free.  No-op without a mesh."""
+    try:
+        from jax._src import mesh as mesh_lib
+        cur = mesh_lib.thread_resources.env.physical_mesh
+        if cur.empty:
+            return x
+        dp = tuple(a for a in ("pod", "data") if a in cur.axis_names)
+        if not dp or x.shape[0] % __import__("math").prod(
+                cur.shape[a] for a in dp):
+            return x
+        n = ndim or x.ndim
+        spec = PS(dp if len(dp) > 1 else dp[0], *([None] * (n - 1)))
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:                                  # noqa: BLE001
+        return x

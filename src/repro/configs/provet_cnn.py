@@ -1,0 +1,9 @@
+"""The paper's own application: CNN layers on the Provet machine.
+
+Not an LM config — this exposes the §6/§7 artifacts (ISA machine,
+templates, analysis suite) under the same registry so examples and
+benchmarks can reach them uniformly."""
+from repro.core.analysis import LAYERS, PROVET_FULL, run_suite  # noqa: F401
+from repro.core.machine import PAPER_EXAMPLE, ProvetConfig  # noqa: F401
+
+CONFIG = None  # not a ModelConfig; see module docstring

@@ -1,0 +1,1 @@
+from repro.core import analysis, isa, machine, ref_ops, templates  # noqa: F401

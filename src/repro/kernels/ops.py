@@ -1,0 +1,114 @@
+"""Public jit'd wrappers for the VWR Pallas kernels.
+
+Handles shape padding to block multiples, GQA head expansion, and
+interpret-mode selection (CPU containers validate kernels with
+``interpret=True``; on real TPU the same calls compile to Mosaic).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.vwr_attention import vwr_attention_p
+from repro.kernels.vwr_conv2d import vwr_conv2d_p
+from repro.kernels.vwr_depthwise import vwr_depthwise_p
+from repro.kernels.vwr_matmul import vwr_matmul_p
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _pad_dim(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def vwr_matmul(x, w, *, bm=256, bk=512, bn=256, interpret=None):
+    """x: (M, K) @ w: (K, N) with arbitrary shapes (padded internally)."""
+    interpret = _auto_interpret(interpret)
+    M, K = x.shape
+    N = w.shape[1]
+    bm_, bk_, bn_ = (min(bm, M) if M else bm, min(bk, K), min(bn, N))
+    xp = _pad_dim(_pad_dim(x, 0, bm_), 1, bk_)
+    wp = _pad_dim(_pad_dim(w, 0, bk_), 1, bn_)
+    out = vwr_matmul_p(xp, wp, bm=bm_, bk=bk_, bn=bn_, interpret=interpret)
+    return out[:M, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("bh", "bf", "interpret"))
+def vwr_conv2d(x, w, *, bh=8, bf=128, interpret=None):
+    """x: (N,H,W,C); w: (KH,KW,C,F); stride 1, VALID."""
+    interpret = _auto_interpret(interpret)
+    KH = w.shape[0]
+    F = w.shape[3]
+    H_out = x.shape[1] - KH + 1
+    bh_ = min(bh, H_out)
+    bf_ = min(bf, F)
+    # pad H so H_out divides bh (extra rows are discarded)
+    pad_h = (-H_out) % bh_
+    xp = _pad_dim(x, 1, 1) if pad_h == 0 else jnp.pad(
+        x, ((0, 0), (0, pad_h), (0, 0), (0, 0)))
+    wp = _pad_dim(w, 3, bf_)
+    out = vwr_conv2d_p(xp, wp, bh=bh_, bf=bf_, interpret=interpret)
+    return out[:, :H_out, :, :F]
+
+
+@functools.partial(jax.jit, static_argnames=("bh", "interpret"))
+def vwr_depthwise(x, w, *, bh=8, interpret=None):
+    """x: (N,H,W,C); w: (KH,KW,C); stride 1, VALID."""
+    interpret = _auto_interpret(interpret)
+    KH = w.shape[0]
+    H_out = x.shape[1] - KH + 1
+    bh_ = min(bh, H_out)
+    pad_h = (-H_out) % bh_
+    xp = x if pad_h == 0 else jnp.pad(
+        x, ((0, 0), (0, pad_h), (0, 0), (0, 0)))
+    out = vwr_depthwise_p(xp, w, bh=bh_, interpret=interpret)
+    return out[:, :H_out]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bkv", "interpret"))
+def vwr_attention(q, k, v, *, causal=True, bq=256, bkv=512, interpret=None):
+    """q: (B,S,H,D); k,v: (B,S,KV,D) (GQA: KV divides H). Causal masks
+    use true positions, so KV-padding to block multiples is masked out
+    by construction only for causal=True; for causal=False we pad K
+    with -inf-free zeros and rely on the softmax of -1e30... instead we
+    require S % bkv == 0 for causal=False (asserted)."""
+    interpret = _auto_interpret(interpret)
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+
+    bq_ = min(bq, S)
+    bkv_ = min(bkv, S)
+    big = max(bq_, bkv_)
+    assert big % min(bq_, bkv_) == 0, "bq and bkv must nest"
+    if not causal:
+        assert S % big == 0, "non-causal path needs S % block == 0"
+    # pad to a common block multiple; padded kv rows sit at positions
+    # beyond every real query position, so causal masking removes them
+    qf = _pad_dim(qf, 1, big)
+    kf = _pad_dim(kf, 1, big)
+    vf = _pad_dim(vf, 1, big)
+
+    out = vwr_attention_p(qf, kf, vf, causal=causal, bq=bq_, bkv=bkv_,
+                          interpret=interpret)
+    out = out[:, :S].reshape(B, H, S, D).transpose(0, 2, 1, 3)
+    return out

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)).astype(x.dtype)
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (N,H,W,C); w: (KH,KW,C,F); stride 1, VALID -> (N,H',W',F)."""
+    KH, KW = w.shape[:2]
+    H_out = x.shape[1] - KH + 1
+    W_out = x.shape[2] - KW + 1
+    acc = jnp.zeros((x.shape[0], H_out, W_out, w.shape[3]), jnp.float32)
+    for kj in range(KH):
+        for ki in range(KW):
+            patch = x[:, kj: kj + H_out, ki: ki + W_out, :]
+            acc = acc + jnp.einsum(
+                "nhwc,cf->nhwf", patch.astype(jnp.float32),
+                w[kj, ki].astype(jnp.float32))
+    return acc.astype(x.dtype)
+
+
+def depthwise_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (N,H,W,C); w: (KH,KW,C); stride 1, VALID -> (N,H',W',C)."""
+    KH, KW = w.shape[:2]
+    H_out = x.shape[1] - KH + 1
+    W_out = x.shape[2] - KW + 1
+    acc = jnp.zeros((x.shape[0], H_out, W_out, x.shape[3]), jnp.float32)
+    for kj in range(KH):
+        for ki in range(KW):
+            patch = x[:, kj: kj + H_out, ki: ki + W_out, :]
+            acc = acc + patch.astype(jnp.float32) * \
+                w[kj, ki].astype(jnp.float32)
+    return acc.astype(x.dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True) -> jax.Array:
+    """q,k,v: (BH, S, D) flat heads."""
+    S = q.shape[1]
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

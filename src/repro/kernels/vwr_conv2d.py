@@ -1,0 +1,70 @@
+"""Direct (im2col-free) conv2d kernel — the paper's §6.1 dataflow on TPU.
+
+The paper's complaint (§3.3): mapping conv onto GEMM hardware needs
+im2col, inflating a 7x7/256^2 conv by x46.  Its fix: a fine-grained
+shuffler slides the data instead.  On TPU the same idea is a Pallas
+kernel that stages one *halo'd* input row-block in VMEM (the ultra-wide
+transaction; `pl.Element` indexing gives the K-1-row halo of §6.2.1's
+duplication argument) and accumulates over kernel taps with *static
+shifted slices* of that staged block — the VREG-level analogue of the
+VFU shuffler's one-lane shifts.  Zero data inflation in HBM: each
+input element is read exactly once per row-block.
+
+x: (N, H, W, C), w: (KH, KW, C, F), stride 1, VALID.
+Grid: (batch, row-blocks, F-blocks); taps unrolled inside the kernel
+(KH*KW MXU calls per staged block — the N-reads-per-wide-transaction
+ratio of §4.3.4).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, *, KH, KW, bh, W_out):
+    x = x_ref[0]                                   # (bh+KH-1, W, C)
+    C = x.shape[-1]
+    bf = w_ref.shape[-1]
+    acc = jnp.zeros((bh * W_out, bf), jnp.float32)
+    for kj in range(KH):
+        for ki in range(KW):
+            xs = x[kj: kj + bh, ki: ki + W_out, :]          # lane shift
+            acc += jnp.dot(xs.reshape(bh * W_out, C), w_ref[kj, ki],
+                           preferred_element_type=jnp.float32)
+    o_ref[0] = acc.reshape(bh, W_out, bf).astype(o_ref.dtype)
+
+
+def vwr_conv2d_p(x: jax.Array, w: jax.Array, *, bh: int = 8,
+                 bf: int = 128, interpret: bool = False) -> jax.Array:
+    """x: (N, H, W, C) with (H-KH+1) % bh == 0; w: (KH, KW, C, F) with
+    F % bf == 0 (ops.vwr_conv2d pads). Returns (N, H', W', F)."""
+    N, H, W, C = x.shape
+    KH, KW, C2, F = w.shape
+    assert C == C2
+    H_out, W_out = H - KH + 1, W - KW + 1
+    assert H_out % bh == 0 and F % bf == 0, (H_out, bh, F, bf)
+    kernel = functools.partial(_conv_kernel, KH=KH, KW=KW, bh=bh,
+                               W_out=W_out)
+    try:
+        params = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel"))
+    except TypeError:
+        params = None
+    return pl.pallas_call(
+        kernel,
+        grid=(N, H_out // bh, F // bf),
+        in_specs=[
+            pl.BlockSpec((1, pl.Element(bh + KH - 1), W, C),
+                         lambda n, r, f: (n, r * bh, 0, 0)),
+            pl.BlockSpec((KH, KW, C, bf), lambda n, r, f: (0, 0, 0, f)),
+        ],
+        out_specs=pl.BlockSpec((1, bh, W_out, bf),
+                               lambda n, r, f: (n, r, 0, f)),
+        out_shape=jax.ShapeDtypeStruct((N, H_out, W_out, F), x.dtype),
+        compiler_params=params,
+        interpret=interpret,
+    )(x, w)

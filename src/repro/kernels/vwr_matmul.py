@@ -1,0 +1,65 @@
+"""VWR-streamed matmul kernel (Pallas TPU).
+
+The TPU realization of the paper's asymmetric-port VWR (§4.1/§4.3.4):
+one HBM->VMEM DMA stages an ultra-wide (bm x bk) LHS block and a
+(bk x bn) RHS block; the MXU then consumes that staged data in many
+128x128 substeps before the next wide transaction.  The width ratio
+N = (bm*bk + bk*bn) staged bytes per (bm*bk*bn) MACs is the tunable
+analogue of the paper's SRAM/VFU width ratio — raising the block sizes
+raises arithmetic intensity exactly the way widening the VWR raises
+the paper's access ratio.
+
+fp32 accumulation in a VMEM scratch across the K grid dimension
+(sequential innermost), bf16/fp32 inputs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def vwr_matmul_p(x: jax.Array, w: jax.Array, *, bm: int = 256,
+                 bk: int = 512, bn: int = 256,
+                 interpret: bool = False) -> jax.Array:
+    """x: (M, K), w: (K, N) — M, K, N must divide the block sizes
+    (ops.vwr_matmul pads).  Returns (M, N) in x.dtype."""
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2 and M % bm == 0 and K % bk == 0 and N % bn == 0
+    n_k = K // bk
+    kernel = functools.partial(_matmul_kernel, n_k=n_k)
+    try:
+        params = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    except TypeError:          # older signature
+        params = None
+    return pl.pallas_call(
+        kernel,
+        grid=(M // bm, N // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=params,
+        interpret=interpret,
+    )(x, w)

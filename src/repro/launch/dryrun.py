@@ -1,0 +1,204 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+# The two lines above MUST run before any other import (jax locks the
+# device count on first init).  512 host devices exist ONLY here.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=..., out_shardings=...,
+                           donate_argnums=...).lower(**input_specs(...))
+        compiled = lowered.compile()
+        print(compiled.memory_analysis())   # fits?
+        print(compiled.cost_analysis())     # flops/bytes for roofline
+plus the HLO collective-bytes parse (hlo_analysis.py).  Results land in
+artifacts/dryrun/<arch>.<shape>.<mesh>.json for EXPERIMENTS.md.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.common.config import SHAPES, SHAPES_BY_NAME, shape_applicable
+from repro.configs import ARCHS, get_config
+from repro.dist import sharding as SH
+from repro.launch import hlo_analysis, steps
+from repro.launch.mesh import make_production_mesh
+from repro.optim import adamw
+
+from jax.sharding import NamedSharding, PartitionSpec as PS
+
+
+def cell_shardings(cfg, mesh, shape):
+    """in_shardings tree matching input_specs / step signature."""
+    strategy = ("serve" if shape.kind == "decode"
+                and cfg.sharding_strategy == "fsdp_tp"
+                else cfg.sharding_strategy)
+    pspecs = {"params": SH.param_pspecs(cfg, mesh, strategy)}
+    if shape.kind == "train":
+        bs = steps.batch_specs(cfg, shape)
+        pspecs["batch"] = SH.train_batch_pspecs(cfg, mesh, bs)
+        params_abs = __import__("repro.models.lm", fromlist=["lm"]) \
+            .abstract_init(cfg)
+        opt_cfg = adamw.OptConfig()
+        pspecs["opt_state"] = adamw.opt_state_pspecs(
+            opt_cfg, pspecs["params"], params_abs, mesh)
+    elif shape.kind == "prefill":
+        bs = steps.batch_specs(cfg, shape)
+        pspecs["batch"] = SH.train_batch_pspecs(cfg, mesh, bs)
+    else:
+        pspecs["batch"] = SH.decode_batch_pspecs(cfg, mesh,
+                                                 shape.global_batch)
+    return pspecs
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             out_dir: str = "artifacts/dryrun", save_hlo: bool = False,
+             cfg=None, mesh=None, shape=None):
+    cfg = cfg if cfg is not None else get_config(arch)
+    shape = shape if shape is not None else SHAPES_BY_NAME[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape.name, "mesh": mesh_kind}
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        print(f"[dryrun] {arch} x {shape.name}: SKIP ({reason})")
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(
+                out_dir, f"{arch}.{shape.name}.{mesh_kind}.json"),
+                "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    specs = steps.input_specs(cfg, shape)
+    fn = steps.step_fn_for(cfg, shape)
+    pspecs = cell_shardings(cfg, mesh, shape)
+    shardings = SH.to_shardings(mesh, pspecs)
+
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(
+            fn,
+            in_shardings=tuple(shardings[k] for k in
+                               ("params", "opt_state", "batch")
+                               if k in shardings),
+        )
+        args = tuple(specs[k] for k in ("params", "opt_state", "batch")
+                     if k in specs)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    ana = hlo_analysis.analyze(hlo)
+
+    rec.update({
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        # per-device, while-bodies-once (raw XLA numbers)
+        "flops": cost.get("flops", 0.0),
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
+        # per-device, trip-count scaled (our HLO walk)
+        "collective_bytes": ana["collective_bytes"],
+        "collective_kinds": ana["collective_kinds"],
+        "major_bytes": ana["major_bytes"],
+        "major_kinds": ana["major_kinds"],
+        "n_devices": mesh.size,
+    })
+
+    # accounting pass: unrolled scan-free lowering (single-device,
+    # global shapes, no compile) -> exact global FLOPs with every layer
+    # and chunk counted (cost_analysis counts while bodies once)
+    try:
+        acfg = cfg.replace(scan_layers=False, accounting=True)
+        aspecs = steps.input_specs(acfg, shape)
+        afn = steps.step_fn_for(acfg, shape)
+        aargs = tuple(aspecs[k] for k in ("params", "opt_state", "batch")
+                      if k in aspecs)
+        t0 = time.time()
+        acost = jax.jit(afn).lower(*aargs).cost_analysis()
+        rec["flops_accounted_global"] = acost.get("flops", 0.0)
+        rec["transcendentals_accounted"] = acost.get("transcendentals",
+                                                     0.0)
+        rec["accounting_s"] = round(time.time() - t0, 1)
+    except Exception as e:                                 # noqa: BLE001
+        rec["accounting_error"] = f"{type(e).__name__}: {e}"[:300]
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            rec[attr] = int(v)
+    print(f"[dryrun] {arch} x {shape.name} x {mesh_kind}: "
+          f"compile {t_compile:.1f}s  flops={rec['flops']:.3e}  "
+          f"bytes={rec['bytes_accessed']:.3e}  "
+          f"coll={rec['collective_bytes']:.3e}  "
+          f"major={rec['major_bytes']:.3e}  "
+          f"acct_flops={rec.get('flops_accounted_global', -1):.3e}")
+    print("  memory_analysis:", {k: rec.get(k) for k in
+                                 ("temp_size_in_bytes",
+                                  "argument_size_in_bytes",
+                                  "output_size_in_bytes")})
+
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}.{shape.name}.{mesh_kind}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    if save_hlo:
+        with open(path.replace(".json", ".hlo"), "w") as f:
+            f.write(hlo)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = ([s.name for s in SHAPES] if (args.all or not args.shape)
+              else [args.shape])
+    meshes = (["single", "multi"] if args.mesh == "both"
+              else [args.mesh])
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                try:
+                    run_cell(arch, shape, mesh_kind, out_dir=args.out,
+                             save_hlo=args.save_hlo)
+                except Exception:
+                    failures.append((arch, shape, mesh_kind))
+                    traceback.print_exc()
+    if failures:
+        print("FAILED CELLS:", failures)
+        raise SystemExit(1)
+    print("dry-run complete: all cells compiled")
+
+
+if __name__ == "__main__":
+    main()

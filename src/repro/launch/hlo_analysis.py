@@ -1,0 +1,165 @@
+"""HLO text analysis: collective bytes + major-op bytes, trip-scaled.
+
+``compiled.cost_analysis()`` has no collective term, counts while
+bodies once, and its 'bytes accessed' on the CPU backend is inflated
+~200x by unfused elementwise chains (all measured; DESIGN.md §8).  So
+we parse the optimized HLO ourselves:
+
+  * collective bytes: operand/result bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute;
+  * major-op bytes: operand+result bytes of dot / convolution / gather /
+    scatter / dynamic(-update)-slice / sort / reduce ops and fusion
+    roots — a fusion-optimistic estimate of real HBM traffic (TPUs fuse
+    elementwise chains into these anchors);
+  * both are scaled by while-loop trip counts, recovered from the
+    `s32[] constant(N)` compare in each loop condition (our loops are
+    counted scans, so this is exact), walking the computation call
+    graph so nested scans multiply.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+    "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter",
+                "all-to-all", "collective-permute")
+_MAJOR = ("dot", "convolution", "gather", "scatter",
+          "dynamic-update-slice", "dynamic-slice", "sort", "fusion",
+          "reduce", "cholesky", "triangular-solve")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"=\s*((?:\([^)]*\)|[\w\[\],{}: ]+?))\s*"
+                    r"([a-z][a-z0-9\-]*)\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> Dict[str, str]:
+    comps: Dict[str, str] = {}
+    cur_name, cur_lines, depth = None, [], 0
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if cur_name is None:
+            if stripped.endswith("{") and "->" in stripped:
+                m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)", stripped)
+                if m:
+                    cur_name = m.group(1)
+                    cur_lines = []
+                    depth = 1
+            continue
+        depth += stripped.count("{") - stripped.count("}")
+        if depth <= 0:
+            comps[cur_name] = "\n".join(cur_lines)
+            cur_name = None
+            continue
+        cur_lines.append(line)
+    return comps
+
+
+def _trip_count(cond_body: str) -> int:
+    consts = re.findall(r"s(?:32|64)\[\]\s+constant\((\d+)\)", cond_body)
+    if consts:
+        return max(int(c) for c in consts)
+    return 1
+
+
+def analyze(hlo: str) -> Dict[str, object]:
+    """Returns {'collective_bytes', 'collective_kinds', 'major_bytes',
+    'major_kinds'} — all trip-count scaled, per-device (SPMD module)."""
+    comps = _split_computations(hlo)
+
+    calls: Dict[str, list] = defaultdict(list)
+    for name, body in comps.items():
+        for line in body.splitlines():
+            m = re.search(r"while\(.*?\)\s*,\s*condition=%?([\w\.\-]+)\s*,"
+                          r"\s*body=%?([\w\.\-]+)", line)
+            if m:
+                tc = _trip_count(comps.get(m.group(1), ""))
+                calls[name].append((m.group(2), tc))
+                calls[name].append((m.group(1), tc))
+            for cm in re.finditer(r"to_apply=%?([\w\.\-]+)", line):
+                # calls, reduces, sorts, fusions reference computations;
+                # those inner computations carry no collectives/majors
+                # we haven't already counted at the call site
+                pass
+            m2 = re.search(r"(?:call)\(.*?to_apply=%?([\w\.\-]+)", line)
+            if m2:
+                calls[name].append((m2.group(1), 1))
+            m3 = re.findall(
+                r"conditional\(.*?branch_computations=\{([^}]*)\}", line)
+            for branches in m3:
+                for b in branches.split(","):
+                    calls[name].append((b.strip().lstrip("%"), 1))
+            m4 = re.search(r"conditional\(.*?true_computation=%?([\w\.\-]+)"
+                           r".*?false_computation=%?([\w\.\-]+)", line)
+            if m4:
+                calls[name].append((m4.group(1), 1))
+                calls[name].append((m4.group(2), 1))
+
+    called = {c for lst in calls.values() for c, _ in lst}
+    roots = [n for n in comps if n not in called]
+    roots.sort(key=lambda n: ("main" not in n, -len(comps[n])))
+    root = roots[0] if roots else next(iter(comps))
+
+    coll_kinds: Dict[str, float] = defaultdict(float)
+    major_kinds: Dict[str, float] = defaultdict(float)
+
+    def scan_comp(name: str, mult: float):
+        for line in comps.get(name, "").splitlines():
+            m = _OP_RE.search(line)
+            if not m:
+                continue
+            result_shape, op = m.group(1), m.group(2)
+            base = op.replace("-start", "").replace("-done", "")
+            if op.endswith("-done"):
+                continue                      # avoid double count
+            if base in _COLLECTIVES:
+                coll_kinds[base] += _shape_bytes(result_shape) * mult
+            elif base in _MAJOR or base.startswith("all-"):
+                # result + operand bytes: operands are the shapes in
+                # the argument list of this line
+                args = line[m.end():]
+                b = _shape_bytes(result_shape) + _shape_bytes(args)
+                major_kinds[base] += b * mult
+
+    seen_stack = []
+
+    def walk(name: str, mult: float):
+        if name in seen_stack:
+            return
+        scan_comp(name, mult)
+        seen_stack.append(name)
+        for callee, tc in calls.get(name, []):
+            walk(callee, mult * tc)
+        seen_stack.pop()
+
+    walk(root, 1.0)
+    return {
+        "collective_bytes": float(sum(coll_kinds.values())),
+        "collective_kinds": dict(coll_kinds),
+        "major_bytes": float(sum(major_kinds.values())),
+        "major_kinds": dict(major_kinds),
+    }
+
+
+def collective_bytes(hlo: str) -> Tuple[float, Dict[str, float]]:
+    r = analyze(hlo)
+    return r["collective_bytes"], r["collective_kinds"]

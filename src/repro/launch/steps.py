@@ -1,0 +1,167 @@
+"""Step functions + abstract input specs for every (arch x shape) cell.
+
+``build_train_step`` returns the full production step: microbatched
+grad accumulation (scan) -> AdamW update -> metrics; ``input_specs``
+returns weak-type-correct ShapeDtypeStructs for everything the step
+takes, so the multi-pod dry-run lowers with zero allocation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig, ShapeSpec, SHAPES_BY_NAME
+from repro.models import lm
+from repro.optim import adamw
+
+
+# ======================================================================
+# train step
+# ======================================================================
+
+def build_train_step(cfg: ModelConfig, opt_cfg: adamw.OptConfig):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def loss_fn(params, batch):
+        return lm.train_loss(params, batch, cfg)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        nm = cfg.n_microbatches
+        if nm > 1:
+            # microbatch accumulation: scan over batch splits; XLA
+            # overlaps each microbatch's grad reduce with the next
+            # microbatch's compute (compute/comm overlap)
+            def split(x):
+                B = x.shape[0]
+                return x.reshape(nm, B // nm, *x.shape[1:])
+
+            mbatch = jax.tree.map(split, batch)
+
+            def mb_step(acc, mb):
+                (loss, metrics), grads = grad_fn(params, mb)
+                acc_g, acc_l = acc
+                acc_g = jax.tree.map(jnp.add, acc_g, grads)
+                return (acc_g, acc_l + loss), metrics
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), metrics = jax.lax.scan(
+                mb_step, (zero_g, jnp.zeros(())), mbatch)
+            grads = jax.tree.map(lambda g: g / nm, grads)
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+            metrics["loss"] = loss_sum / nm
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+
+        params, opt_state, om = adamw.update(opt_cfg, grads, opt_state,
+                                             params)
+        return params, opt_state, {**metrics, **om}
+
+    return train_step
+
+
+def build_prefill(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return lm.prefill(params, batch, cfg)
+    return prefill_step
+
+
+def build_decode(cfg: ModelConfig):
+    def serve_step(params, batch):
+        return lm.decode_step(params, batch, cfg)
+    return serve_step
+
+
+# ======================================================================
+# abstract input specs (dry-run)
+# ======================================================================
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Abstract batch for one cell (the modality frontend is a stub:
+    precomputed frame/patch embeddings appear directly as inputs)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32, f32 = jnp.int32, jnp.float32
+    bf = jnp.dtype(cfg.dtype)
+
+    if shape.kind in ("train",):
+        if cfg.family == "vlm":
+            S_txt = S - cfg.frontend_tokens
+            return {
+                "tokens": _sds((B, S_txt), i32),
+                "labels": _sds((B, S_txt), i32),
+                "loss_mask": _sds((B, S_txt), f32),
+                "frontend_emb": _sds((B, cfg.frontend_tokens,
+                                      cfg.frontend_dim), bf),
+            }
+        out = {
+            "tokens": _sds((B, S), i32),
+            "labels": _sds((B, S), i32),
+            "loss_mask": _sds((B, S), f32),
+        }
+        if cfg.family == "audio":
+            out["frontend_emb"] = _sds((B, S, cfg.frontend_dim), bf)
+        return out
+
+    if shape.kind == "prefill":
+        if cfg.family == "vlm":
+            S_txt = S - cfg.frontend_tokens
+            return {"tokens": _sds((B, S_txt), i32),
+                    "frontend_emb": _sds((B, cfg.frontend_tokens,
+                                          cfg.frontend_dim), bf)}
+        out = {"tokens": _sds((B, S), i32)}
+        if cfg.family == "audio":
+            out["frontend_emb"] = _sds((B, S, cfg.frontend_dim), bf)
+        return out
+
+    if shape.kind == "decode":
+        return {
+            "token": _sds((B,), i32),
+            "cur_len": _sds((), i32),
+            "cache": lm.cache_spec(cfg, B, S, enc_len=S),
+        }
+
+    raise ValueError(shape.kind)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec,
+                opt_cfg: Optional[adamw.OptConfig] = None) -> Dict[str, Any]:
+    """Everything the cell's step function takes, as abstract values."""
+    params = lm.abstract_init(cfg)
+    out: Dict[str, Any] = {"params": params,
+                           "batch": batch_specs(cfg, shape)}
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or adamw.OptConfig(
+            moment_dtype="bfloat16" if cfg.dtype == "bfloat16"
+            else "float32")
+        mdt = jnp.dtype(opt_cfg.moment_dtype)
+        needs_master = cfg.dtype != "float32"
+        out["opt_state"] = adamw.OptState(
+            step=_sds((), jnp.int32),
+            m=jax.tree.map(lambda a: _sds(a.shape, mdt), params),
+            v=jax.tree.map(lambda a: _sds(a.shape, mdt), params),
+            master=(jax.tree.map(
+                lambda a: _sds(a.shape, jnp.float32), params)
+                if needs_master else None),
+        )
+    return out
+
+
+def step_fn_for(cfg: ModelConfig, shape: ShapeSpec,
+                opt_cfg: Optional[adamw.OptConfig] = None):
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or adamw.OptConfig(
+            moment_dtype="bfloat16" if cfg.dtype == "bfloat16"
+            else "float32")
+        return build_train_step(cfg, opt_cfg)
+    if shape.kind == "prefill":
+        return build_prefill(cfg)
+    return build_decode(cfg)

@@ -1,0 +1,1 @@
+from repro.models import attention, layers, lm, mla, moe, ssm, xlstm  # noqa: F401

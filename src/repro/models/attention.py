@@ -1,0 +1,232 @@
+"""GQA attention with blockwise (flash-style) streaming + KV caches.
+
+The blockwise kernel is the pure-JAX realization of the paper's VWR
+streaming discipline applied to attention: KV is consumed in wide blocks
+(one "wide transaction"), each block feeding many MXU steps, with fp32
+running-softmax accumulators in registers (the R1..R4 analogue).  The
+Pallas TPU version lives in ``repro.kernels.vwr_attention``; this module
+is the XLA reference path the dry-run lowers.
+
+Decode attention returns *unnormalized* partial results (o_tilde, lse) so
+the distribution layer can combine sequence-sharded cache shards with a
+psum — distributed FlashDecoding (see dist/decode.py).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as PS
+
+from repro.common.hints import shard_hint
+from repro.common.module import ParamDef, zeros_init
+from repro.models.layers import apply_rope
+
+NEG_INF = -1e30
+
+
+# ---------------- projections ----------------
+
+def gqa_spec(cfg):
+    d, H, KV, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    dtype = jnp.dtype(cfg.dtype)
+    spec = {
+        "wq": ParamDef((d, H, Dh), dtype, ("embed", "heads", "head_dim")),
+        "wk": ParamDef((d, KV, Dh), dtype, ("embed", "kv", "head_dim")),
+        "wv": ParamDef((d, KV, Dh), dtype, ("embed", "kv", "head_dim")),
+        "wo": ParamDef((H, Dh, d), dtype, ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        spec["bq"] = ParamDef((H, Dh), dtype, ("heads", "head_dim"), zeros_init)
+        spec["bk"] = ParamDef((KV, Dh), dtype, ("kv", "head_dim"), zeros_init)
+        spec["bv"] = ParamDef((KV, Dh), dtype, ("kv", "head_dim"), zeros_init)
+    return spec
+
+
+def qkv_proj(p, x, positions, rope_theta):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if rope_theta:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def o_proj(p, o):
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+# ---------------- blockwise flash attention (training / prefill) ----------------
+
+def _pad_to(x, mult, axis):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+def blockwise_attn(
+    q: jax.Array,                 # (B, Sq, H, Dh)
+    k: jax.Array,                 # (B, Skv, KV, Dh)
+    v: jax.Array,                 # (B, Skv, KV, Dh)
+    *,
+    causal: bool,
+    q_positions: Optional[jax.Array] = None,    # (Sq,) global positions
+    kv_positions: Optional[jax.Array] = None,   # (Skv,)
+    kv_valid: Optional[jax.Array] = None,       # (Skv,) bool padding mask
+    block_q: int = 512,
+    block_kv: int = 1024,
+    head_axis=None,
+) -> jax.Array:
+    """Streaming softmax attention; peak memory O(block_q * block_kv).
+
+    head_axis: mesh axis carrying the kv-head dim.  GSPMD loses the
+    head sharding through the block reshapes and then ALL-REDUCES the
+    fp32 score tensor per (q,kv) block pair in the remat'd backward
+    (measured 825 GB/device/step on qwen train_4k — EXPERIMENTS.md
+    §Perf H2a); explicit hints on the blocked operands and the running
+    stats keep every block head-sharded."""
+    B, Sq, H, Dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    orig_dtype = q.dtype
+    scale = 1.0 / (Dh ** 0.5)
+
+    if q_positions is None:
+        q_positions = jnp.arange(Sq)
+    if kv_positions is None:
+        kv_positions = jnp.arange(k.shape[1])
+    if kv_valid is None:
+        kv_valid = jnp.ones((k.shape[1],), jnp.bool_)
+
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, k.shape[1])
+
+    q, _ = _pad_to(q, block_q, 1)
+    qpos, _ = _pad_to(q_positions, block_q, 0)
+    k, _ = _pad_to(k, block_kv, 1)
+    v, _ = _pad_to(v, block_kv, 1)
+    kpos, _ = _pad_to(kv_positions, block_kv, 0)
+    kval, _ = _pad_to(kv_valid, block_kv, 0)
+
+    nq = q.shape[1] // block_q
+    nk = k.shape[1] // block_kv
+
+    qb = q.reshape(B, nq, block_q, KV, G, Dh)
+    kb = k.reshape(B, nk, block_kv, KV, Dh)
+    vb = v.reshape(B, nk, block_kv, KV, Dh)
+    if head_axis is not None:
+        qb = shard_hint(qb, PS(None, None, None, head_axis, None, None))
+        kb = shard_hint(kb, PS(None, None, None, head_axis, None))
+        vb = shard_hint(vb, PS(None, None, None, head_axis, None))
+    qposb = qpos.reshape(nq, block_q)
+    kposb = kpos.reshape(nk, block_kv)
+    kvalb = kval.reshape(nk, block_kv)
+
+    def q_step(_, qi):
+        q_i, qp_i = qi                                  # (B,bq,KV,G,Dh),(bq,)
+        q_i = (q_i.astype(jnp.float32) * scale)
+
+        def kv_step(carry, ki):
+            acc, m, l = carry
+            k_j, v_j, kp_j, km_j = ki
+            s = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", q_i, k_j.astype(jnp.float32)
+            )                                            # (B,KV,G,bq,bkv)
+            if head_axis is not None:
+                s = shard_hint(s, PS(None, head_axis, None, None, None))
+            mask = km_j[None, None, None, None, :]
+            if causal:
+                mask = mask & (kp_j[None, :] <= qp_i[:, None])[None, None, None]
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))       # (B,KV,G,bq)
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, v_j.astype(jnp.float32))
+            acc = acc * corr[..., None] + pv
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((B, KV, G, block_q, Dh), jnp.float32)
+        m0 = jnp.full((B, KV, G, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, block_q), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0),
+            (kb.swapaxes(0, 1), vb.swapaxes(0, 1), kposb, kvalb),
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        out = out.transpose(0, 3, 1, 2, 4)               # (B,bq,KV,G,Dh)
+        return None, out.astype(orig_dtype)
+
+    _, ob = jax.lax.scan(q_step, None, (qb.swapaxes(0, 1), qposb))
+    out = ob.swapaxes(0, 1).reshape(B, nq * block_q, H, Dh)
+    return out[:, :Sq]
+
+
+def full_attn_ref(q, k, v, *, causal, q_positions=None, kv_positions=None,
+                  kv_valid=None):
+    """Dense oracle used by tests."""
+    B, Sq, H, Dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    if q_positions is None:
+        q_positions = jnp.arange(Sq)
+    if kv_positions is None:
+        kv_positions = jnp.arange(k.shape[1])
+    qf = q.astype(jnp.float32).reshape(B, Sq, KV, G, Dh) / (Dh ** 0.5)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32))
+    mask = jnp.ones((Sq, k.shape[1]), jnp.bool_)
+    if causal:
+        mask = kv_positions[None, :] <= q_positions[:, None]
+    if kv_valid is not None:
+        mask = mask & kv_valid[None, :]
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+# ---------------- decode (single new token against a cache) ----------------
+
+def flash_decode_partial(
+    q: jax.Array,          # (B, H, Dh) — one new token
+    cache_k: jax.Array,    # (B, T, KV, Dh) — local shard of the cache
+    cache_v: jax.Array,
+    kv_positions: jax.Array,  # (T,) global positions of the shard
+    cur_len: jax.Array,       # scalar: tokens valid so far (global)
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (o_tilde, m, l) with o_tilde = sum(exp(s - m) * v).
+
+    Combining shards i (distributed FlashDecoding, dist/decode.py):
+        m* = max_i m_i            (pmax over the cache-sharded axis)
+        o  = sum_i o_tilde_i * exp(m_i - m*) / sum_i l_i * exp(m_i - m*)
+    """
+    B, H, Dh = q.shape
+    KV = cache_k.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, KV, G, Dh) / (Dh ** 0.5)
+    s = jnp.einsum("bhgd,bthd->bhgt", qf, cache_k.astype(jnp.float32))
+    valid = kv_positions < cur_len                           # (T,)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1)                                       # (B,KV,G)
+    p = jnp.exp(s - m[..., None])
+    # rows with no valid key (m == NEG_INF) contribute l = 0
+    p = jnp.where((m > NEG_INF / 2)[..., None], p, 0.0)
+    l = p.sum(axis=-1)
+    o_t = jnp.einsum("bhgt,bthd->bhgd", p, cache_v.astype(jnp.float32))
+    return (o_t.reshape(B, H, Dh), m.reshape(B, H), l.reshape(B, H))
+
+
+def decode_attend_local(q, cache_k, cache_v, kv_positions, cur_len):
+    """Single-shard decode attention (normalized)."""
+    o_t, m, l = flash_decode_partial(q, cache_k, cache_v, kv_positions, cur_len)
+    return (o_t / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)

@@ -1,0 +1,126 @@
+"""Core layers: norms, rotary embeddings, MLPs, embeddings.
+
+Logical axis vocabulary (resolved to mesh axes by dist.sharding.rules):
+  embed    d_model dims                (replicated by default)
+  vocab    vocabulary dim              -> 'model'
+  heads    query-head dim              -> 'model' when divisible
+  kv       kv-head dim                 -> 'model' when divisible
+  ffn      feed-forward hidden dim     -> 'model'
+  experts  routed-expert dim           -> ('data','model') or 'model'
+  layers   scan-stacked layer dim      (never sharded)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.module import ParamDef, embed_init, ones_init, zeros_init
+
+
+def dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------- norms ----------------
+
+def rmsnorm_spec(d, dtype):
+    return {"scale": ParamDef((d,), dtype, ("embed",), ones_init)}
+
+
+def rmsnorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_spec(d, dtype):
+    return {
+        "scale": ParamDef((d,), dtype, ("embed",), ones_init),
+        "bias": ParamDef((d,), dtype, ("embed",), zeros_init),
+    }
+
+
+def layernorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------- rotary ----------------
+
+def rope_freqs(d_head: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    d_head = x.shape[-1]
+    freqs = rope_freqs(d_head, theta)                       # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(ang)[..., None, :]                        # (..., S, 1, Dh/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------- embedding / unembedding ----------------
+
+def embedding_spec(vocab, d, dtype):
+    return {"table": ParamDef((vocab, d), dtype, ("vocab", "embed"), embed_init)}
+
+
+def embed(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed_spec(vocab, d, dtype):
+    return {"w": ParamDef((d, vocab), dtype, ("embed", "vocab"))}
+
+
+def unembed(p, x):
+    return jnp.einsum("...d,dv->...v", x, p["w"])
+
+
+# ---------------- MLP ----------------
+
+def mlp_spec(d, d_ff, act, dtype):
+    if act == "swiglu":
+        return {
+            "wi": ParamDef((d, d_ff), dtype, ("embed", "ffn")),
+            "wg": ParamDef((d, d_ff), dtype, ("embed", "ffn")),
+            "wo": ParamDef((d_ff, d), dtype, ("ffn", "embed")),
+        }
+    return {
+        "wi": ParamDef((d, d_ff), dtype, ("embed", "ffn")),
+        "wo": ParamDef((d_ff, d), dtype, ("ffn", "embed")),
+    }
+
+
+def mlp(p, x, act: str):
+    if act == "swiglu":
+        h = jnp.einsum("...d,df->...f", x, p["wi"])
+        g = jnp.einsum("...d,df->...f", x, p["wg"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * h
+    else:
+        h = jnp.einsum("...d,df->...f", x, p["wi"])
+        fn = jax.nn.gelu if act == "gelu" else jax.nn.relu
+        h = fn(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, p["wo"])
+
+
+# ---------------- frontends (stubs per brief) ----------------
+
+def frontend_proj_spec(raw_dim, d, dtype):
+    """Projects precomputed frame/patch embeddings into d_model."""
+    return {"w": ParamDef((raw_dim, d), dtype, ("frontend_in", "embed"))}
+
+
+def frontend_proj(p, emb):
+    return jnp.einsum("...r,rd->...d", emb, p["w"])

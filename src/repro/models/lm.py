@@ -1,0 +1,842 @@
+"""Model assembly: spec + train/prefill/decode for every assigned family.
+
+Families:
+  dense   — pre-norm GQA attn + MLP                      (tinyllama, granite,
+                                                          qwen, deepseek-coder)
+  moe     — attn (GQA or MLA) + top-k MoE FFN            (olmoe, deepseek-v3)
+  hybrid  — Mamba2 stack + one *shared* attn block every
+            k layers (Zamba2)                            (zamba2)
+  ssm     — mLSTM stack with 1-in-k sLSTM layers         (xlstm)
+  vlm     — dense decoder + vision-frontend stub prefix  (internvl2)
+  audio   — encoder-decoder, audio-frontend stub         (seamless-m4t)
+
+Conventions:
+  * every block function here returns the residual *delta*; pre-norms are
+    applied by the caller (exception: sLSTM blocks norm internally and
+    return the full two-sub-block delta).
+  * layer stacks are stored stacked (L, ...) and iterated with lax.scan
+    (cfg.scan_layers=False unrolls — used by the roofline accounting pass,
+    since XLA cost_analysis counts while bodies once; DESIGN.md §8).
+  * decode caches ride through the layer scan as xs/ys so a step touches
+    each layer's cache exactly once.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import module as M
+from repro.common.hints import shard_batch
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models import xlstm as XL
+
+
+# ======================================================================
+# norms
+# ======================================================================
+
+def _norm_spec(cfg):
+    if cfg.norm == "layernorm":
+        return L.layernorm_spec(cfg.d_model, jnp.dtype(cfg.dtype))
+    return L.rmsnorm_spec(cfg.d_model, jnp.dtype(cfg.dtype))
+
+
+def _norm(cfg, p, x):
+    if cfg.norm == "layernorm":
+        return L.layernorm(p, x, cfg.norm_eps)
+    return L.rmsnorm(p, x, cfg.norm_eps)
+
+
+# ======================================================================
+# per-family layer specs
+# ======================================================================
+
+def _attn_spec(cfg):
+    return MLA.mla_spec(cfg) if cfg.mla is not None else A.gqa_spec(cfg)
+
+
+def _dense_layer_spec(cfg, d_ff=None):
+    return {
+        "attn_norm": _norm_spec(cfg),
+        "attn": _attn_spec(cfg),
+        "mlp_norm": _norm_spec(cfg),
+        "mlp": L.mlp_spec(cfg.d_model, d_ff or cfg.d_ff, cfg.act,
+                          jnp.dtype(cfg.dtype)),
+    }
+
+
+def _moe_layer_spec(cfg):
+    return {
+        "attn_norm": _norm_spec(cfg),
+        "attn": _attn_spec(cfg),
+        "mlp_norm": _norm_spec(cfg),
+        "moe": MOE.moe_spec(cfg),
+    }
+
+
+def _encoder_layer_spec(cfg):
+    return {
+        "attn_norm": _norm_spec(cfg),
+        "attn": A.gqa_spec(cfg),
+        "mlp_norm": _norm_spec(cfg),
+        "mlp": L.mlp_spec(cfg.d_model, cfg.d_ff, cfg.act, jnp.dtype(cfg.dtype)),
+    }
+
+
+def _decoder_xattn_layer_spec(cfg):
+    return {
+        "self_norm": _norm_spec(cfg),
+        "self": A.gqa_spec(cfg),
+        "cross_norm": _norm_spec(cfg),
+        "cross": A.gqa_spec(cfg),
+        "mlp_norm": _norm_spec(cfg),
+        "mlp": L.mlp_spec(cfg.d_model, cfg.d_ff, cfg.act, jnp.dtype(cfg.dtype)),
+    }
+
+
+def _shared_attn_block_spec(cfg):
+    """Zamba2 shared block: attn + MLP, one set of weights for the stack."""
+    return {
+        "attn_norm": _norm_spec(cfg),
+        "attn": A.gqa_spec(cfg),
+        "mlp_norm": _norm_spec(cfg),
+        "mlp": L.mlp_spec(cfg.d_model, cfg.d_ff, cfg.act, jnp.dtype(cfg.dtype)),
+    }
+
+
+# hybrid (zamba2) group structure: n_layers mamba blocks in groups of
+# `attn_every`, a shared-attn invocation after each group.
+def _hybrid_groups(cfg):
+    k = cfg.mamba2.attn_every
+    n_main_groups = cfg.n_layers // k
+    tail = cfg.n_layers - n_main_groups * k
+    n_invocations = n_main_groups + (1 if tail else 0)
+    return k, n_main_groups, tail, n_invocations
+
+
+# ssm (xlstm) group structure: groups of (slstm_every-1 mLSTM + 1 sLSTM)
+def _ssm_groups(cfg):
+    k = cfg.xlstm.slstm_every
+    assert cfg.n_layers % k == 0, (cfg.n_layers, k)
+    n_groups = cfg.n_layers // k
+    return k - 1, n_groups           # mlstm per group, group count
+
+
+# ======================================================================
+# model spec
+# ======================================================================
+
+def model_spec(cfg) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.dtype)
+    spec: Dict[str, Any] = {
+        "embed": L.embedding_spec(cfg.vocab_padded, cfg.d_model, dtype),
+        "final_norm": _norm_spec(cfg),
+    }
+    if not cfg.tie_embeddings:
+        spec["unembed"] = L.unembed_spec(cfg.vocab_padded, cfg.d_model,
+                                         dtype)
+
+    if cfg.frontend:
+        spec["frontend"] = L.frontend_proj_spec(cfg.frontend_dim, cfg.d_model,
+                                                dtype)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        spec["layers"] = M.stack_specs(_dense_layer_spec(cfg), cfg.n_layers)
+    elif fam == "moe":
+        m = cfg.moe
+        if m.first_k_dense:
+            spec["dense_layers"] = M.stack_specs(
+                _dense_layer_spec(cfg, d_ff=m.d_ff_dense or cfg.d_ff),
+                m.first_k_dense)
+        spec["layers"] = M.stack_specs(_moe_layer_spec(cfg),
+                                       cfg.n_layers - m.first_k_dense)
+    elif fam == "hybrid":
+        k, n_main, tail, _ = _hybrid_groups(cfg)
+        spec["mamba_main"] = M.stack_specs(
+            M.stack_specs(SSM.mamba2_spec(cfg), k), n_main)
+        spec["mamba_norms"] = M.stack_specs(
+            M.stack_specs(_norm_spec(cfg), k), n_main)
+        if tail:
+            spec["mamba_tail"] = M.stack_specs(SSM.mamba2_spec(cfg), tail)
+            spec["tail_norms"] = M.stack_specs(_norm_spec(cfg), tail)
+        spec["shared_attn"] = _shared_attn_block_spec(cfg)
+    elif fam == "ssm":
+        m_per, n_groups = _ssm_groups(cfg)
+        spec["mlstm"] = M.stack_specs(
+            M.stack_specs(XL.mlstm_spec(cfg), m_per), n_groups)
+        spec["mlstm_norms"] = M.stack_specs(
+            M.stack_specs(_norm_spec(cfg), m_per), n_groups)
+        spec["slstm"] = M.stack_specs(XL.slstm_spec(cfg), n_groups)
+    elif fam == "audio":
+        spec["enc_layers"] = M.stack_specs(_encoder_layer_spec(cfg),
+                                           cfg.enc_layers)
+        spec["enc_norm"] = _norm_spec(cfg)
+        spec["layers"] = M.stack_specs(_decoder_xattn_layer_spec(cfg),
+                                       cfg.n_layers)
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return spec
+
+
+def abstract_init(cfg):
+    return M.abstract_params(model_spec(cfg))
+
+
+def init(cfg, key):
+    return M.init_params(model_spec(cfg), key)
+
+
+# ======================================================================
+# remat / scan plumbing
+# ======================================================================
+
+def _maybe_remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _scan_stack(cfg, body, x, stacked, extra_xs=None, length=None):
+    """Run `body(x, layer_params, extra) -> (x, y)` over a stacked tree.
+
+    (H8, measured: per-layer batch pins fix the backward batch-
+    sharding loss but force 560 GB of re-gathers — refuted; the
+    single entry pin in `backbone` is the kept variant.)"""
+    body = _maybe_remat(cfg, body)
+    if cfg.scan_layers:
+        def f(c, xs):
+            lp, ex = xs
+            return body(c, lp, ex)
+        xs = (stacked, extra_xs)
+        return jax.lax.scan(f, x, xs, length=length)
+    # unrolled (accounting / debugging)
+    n = length
+    if n is None:
+        n = jax.tree.leaves(stacked)[0].shape[0]
+    ys = []
+    for i in range(n):
+        lp = jax.tree.map(lambda a: a[i], stacked)
+        ex = None if extra_xs is None else jax.tree.map(
+            lambda a: a[i], extra_xs)
+        x, y = body(x, lp, ex)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *t: jnp.stack(t), *ys)
+    else:
+        ys = None
+    return x, ys
+
+
+# ======================================================================
+# layer bodies (training / prefill)
+# ======================================================================
+
+def _attn_delta(cfg, ap, h, positions, *, causal=True):
+    """h already normed; ap = attention param subtree.
+
+    Returns (delta, (k, v)) for cache building."""
+    if cfg.mla is not None:
+        out, cache = MLA.mla_attention(ap, h, positions, cfg, causal=causal,
+                                       dense=cfg.accounting,
+                                       head_axis=_head_axis(cfg))
+        return out, cache
+    q, k, v = A.qkv_proj(ap, h, positions, cfg.rope_theta)
+    if cfg.accounting:
+        o = A.full_attn_ref(q, k, v, causal=causal, q_positions=positions,
+                            kv_positions=positions)
+    else:
+        o = A.blockwise_attn(q, k, v, causal=causal, q_positions=positions,
+                             kv_positions=positions,
+                             block_q=cfg.attn_block_q,
+                             block_kv=cfg.attn_block_kv,
+                             head_axis=_head_axis(cfg))
+    return A.o_proj(ap, o), (k, v)
+
+
+def _head_axis(cfg):
+    """Mesh axis carrying kv heads in the activation layout (None when
+    heads are replicated, e.g. the 'ddp' strategy)."""
+    if cfg.sharding_strategy == "ddp":
+        return None
+    return "model"
+
+
+def _dense_body(cfg, positions, x, lp, _ex, *, causal=True, collect=False):
+    d, kv = _attn_delta(cfg, lp["attn"], _norm(cfg, lp["attn_norm"], x),
+                        positions, causal=causal)
+    x = x + d
+    x = x + L.mlp(lp["mlp"], _norm(cfg, lp["mlp_norm"], x), cfg.act)
+    return x, (kv if collect else None)
+
+
+def _moe_body(cfg, positions, x, lp, _ex, *, collect=False):
+    d, kv = _attn_delta(cfg, lp["attn"], _norm(cfg, lp["attn_norm"], x),
+                        positions)
+    x = x + d
+    y, aux = MOE.moe_ffn(lp["moe"], _norm(cfg, lp["mlp_norm"], x), cfg)
+    return x + y, ((kv if collect else None), aux)
+
+
+def _xattn_body(cfg, positions, enc_out, enc_valid, x, lp, _ex, *,
+                collect=False):
+    """Encoder-decoder decoder layer (training/prefill)."""
+    d, kv = _attn_delta(cfg, lp["self"], _norm(cfg, lp["self_norm"], x),
+                        positions)
+    x = x + d
+    h = _norm(cfg, lp["cross_norm"], x)
+    q = jnp.einsum("bsd,dhk->bshk", h, lp["cross"]["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross"]["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross"]["wv"])
+    if cfg.accounting:
+        o = A.full_attn_ref(q, k, v, causal=False, kv_valid=enc_valid)
+    else:
+        o = A.blockwise_attn(q, k, v, causal=False, kv_valid=enc_valid,
+                             block_q=cfg.attn_block_q,
+                             block_kv=cfg.attn_block_kv)
+    x = x + A.o_proj(lp["cross"], o)
+    x = x + L.mlp(lp["mlp"], _norm(cfg, lp["mlp_norm"], x), cfg.act)
+    return x, ((kv, (k, v)) if collect else None)
+
+
+def _shared_attn_apply(cfg, sp, x, positions, *, collect=False):
+    d, kv = _attn_delta(cfg, sp["attn"], _norm(cfg, sp["attn_norm"], x),
+                        positions)
+    x = x + d
+    x = x + L.mlp(sp["mlp"], _norm(cfg, sp["mlp_norm"], x), cfg.act)
+    return x, (kv if collect else None)
+
+
+# ======================================================================
+# backbone forward (training / prefill): tokens -> final hidden states
+# ======================================================================
+
+class ForwardOut(NamedTuple):
+    h: jax.Array                      # (B, S, D) final hidden (post-norm)
+    aux: Dict[str, jax.Array]         # scalar aux metrics (moe losses, ...)
+    caches: Any                       # per-family cache material (prefill)
+
+
+def backbone(params, tokens, cfg, *, frontend_emb=None,
+             enc_tokens_valid=None, collect_cache=False) -> ForwardOut:
+    """tokens: (B, S_text) int32. frontend_emb: (B, S_f, fe_dim) or None.
+
+    For 'audio', frontend_emb is the ENCODER input sequence and tokens are
+    decoder tokens.  For 'vlm', frontend embeddings are projected and
+    prepended to the token embeddings (sequence = S_f + S_text).
+    ``collect_cache=True`` (prefill) additionally returns the per-layer
+    cache material (KV stacks / recurrent final states).
+    """
+    fam = cfg.family
+    cc = collect_cache
+    aux: Dict[str, jax.Array] = {}
+    caches: Any = None
+
+    x = L.embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    if fam == "vlm":
+        pre = L.frontend_proj(params["frontend"], frontend_emb)
+        x = jnp.concatenate([pre.astype(x.dtype), x], axis=1)
+    # NOTE: batch-pinning x here (H8b) trades -183 GB all-reduce for
+    # +495 GB all-gather on the fixed (16,16) mesh — net worse on the
+    # ICI roofline, big HBM win (bytes_accessed -73%); kept OFF, see
+    # EXPERIMENTS.md §Perf H8.
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    if fam in ("dense", "vlm"):
+        body = functools.partial(_dense_body, cfg, positions, collect=cc)
+        x, kvs = _scan_stack(cfg, body, x, params["layers"])
+        caches = kvs
+
+    elif fam == "moe":
+        m = cfg.moe
+        kv_d = None
+        if m.first_k_dense:
+            body = functools.partial(_dense_body, cfg, positions, collect=cc)
+            x, kv_d = _scan_stack(cfg, body, x, params["dense_layers"])
+        body = functools.partial(_moe_body, cfg, positions, collect=cc)
+        x, (kv_m, moe_aux) = _scan_stack(cfg, body, x, params["layers"])
+        aux["lb_loss"] = jnp.mean(moe_aux["lb_loss"])
+        aux["z_loss_router"] = jnp.mean(moe_aux["z_loss"])
+        aux["drop_frac"] = jnp.mean(moe_aux["drop_frac"])
+        caches = (kv_d, kv_m)
+
+    elif fam == "hybrid":
+        k, n_main, tail, _ = _hybrid_groups(cfg)
+        sp = params["shared_attn"]
+
+        def mamba_body(x, lp, ex):
+            d, st = SSM.mamba2_forward(lp, _norm(cfg, ex, x), cfg)
+            return x + d, (st if cc else None)
+
+        def group_body(x, gp, gn):
+            x, sts = _scan_stack(cfg, mamba_body, x, gp, extra_xs=gn)
+            x, kv = _shared_attn_apply(cfg, sp, x, positions, collect=cc)
+            return x, (sts, kv)
+
+        x, (st_main, kv_main) = _scan_stack(
+            cfg, group_body, x, params["mamba_main"],
+            extra_xs=params["mamba_norms"])
+        st_tail = kv_tail = None
+        if tail:
+            x, st_tail = _scan_stack(cfg, mamba_body, x, params["mamba_tail"],
+                                     extra_xs=params["tail_norms"])
+            x, kv_tail = _shared_attn_apply(cfg, sp, x, positions, collect=cc)
+        caches = ((st_main, kv_main), (st_tail, kv_tail))
+
+    elif fam == "ssm":
+        def ml_body(x, lp, ex):
+            d, st = XL.mlstm_forward(lp, _norm(cfg, ex, x), cfg)
+            return x + d, (st if cc else None)
+
+        def group_body(x, gp, _ex):
+            x, m_sts = _scan_stack(cfg, ml_body, x, gp["m"], extra_xs=gp["n"])
+            d, s_st = XL.slstm_forward(gp["s"], x, cfg)
+            return x + d, ((m_sts, s_st) if cc else None)
+
+        stacked = {"m": params["mlstm"], "n": params["mlstm_norms"],
+                   "s": params["slstm"]}
+        x, caches = _scan_stack(cfg, group_body, x, stacked)
+
+    elif fam == "audio":
+        enc = L.frontend_proj(params["frontend"], frontend_emb)
+        enc = enc.astype(jnp.dtype(cfg.dtype))
+        enc_pos = jnp.arange(enc.shape[1])
+        body = functools.partial(_dense_body, cfg, enc_pos, causal=False)
+        enc, _ = _scan_stack(cfg, body, enc, params["enc_layers"])
+        enc = _norm(cfg, params["enc_norm"], enc)
+
+        body = functools.partial(_xattn_body, cfg, positions, enc,
+                                 enc_tokens_valid, collect=cc)
+        x, caches = _scan_stack(cfg, body, x, params["layers"])
+
+    else:
+        raise ValueError(fam)
+
+    x = _norm(cfg, params["final_norm"], x)
+    return ForwardOut(h=x, aux=aux, caches=caches)
+
+
+# ======================================================================
+# loss
+# ======================================================================
+
+def _logits(params, h, cfg):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", h, params["embed"]["table"])
+    else:
+        logits = L.unembed(params["unembed"], h)
+    if cfg.vocab_padded != cfg.vocab:
+        pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+        logits = jnp.where(pad_mask, -1e30, logits.astype(jnp.float32)
+                           ).astype(logits.dtype)
+    return logits
+
+
+def ce_loss(params, h, labels, mask, cfg) -> Tuple[jax.Array, Dict]:
+    """Cross-entropy over (B,S,D) hiddens, optionally chunked along S.
+
+    The unembedding is vocab-sharded ('model' axis); logsumexp and the
+    label-logit gather over the sharded vocab dim lower to partial
+    reductions + a small all-reduce under GSPMD (vocab-parallel CE).
+    """
+    B, S, D = h.shape
+    C = cfg.logits_chunk or S
+    C = min(C, S)
+    pad = (-S) % C
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nchunk = h.shape[1] // C
+
+    def one_chunk(hc, lc, mc):
+        logits = _logits(params, hc, cfg).astype(jnp.float32)
+        lz = jax.nn.logsumexp(logits, axis=-1)                 # (B,C)
+        # label pick via a masked sum over the (model-sharded) vocab
+        # dim: GSPMD reduces fp32 (B,C) partials with a tiny psum.
+        # (take_along_axis over a sharded dim lowers to an all-reduce
+        # of the FULL fp32 logits — measured 8-40 GB/device/step;
+        # EXPERIMENTS.md §Perf H1.)
+        hit = jnp.arange(logits.shape[-1]) == lc[..., None]
+        ll = jnp.sum(jnp.where(hit, logits, 0.0), axis=-1)
+        loss = (lz - ll) * mc
+        zl = (lz * lz) * mc
+        return loss.sum(), zl.sum()
+
+    if nchunk == 1:
+        loss_sum, z_sum = one_chunk(h, labels, mask)
+    else:
+        hs = h.reshape(B, nchunk, C, D).swapaxes(0, 1)
+        ls = labels.reshape(B, nchunk, C).swapaxes(0, 1)
+        ms = mask.reshape(B, nchunk, C).swapaxes(0, 1)
+        if cfg.scan_layers:
+            def step(acc, xs):
+                a, b = one_chunk(*xs)
+                return (acc[0] + a, acc[1] + b), None
+            (loss_sum, z_sum), _ = jax.lax.scan(
+                step, (jnp.zeros(()), jnp.zeros(())), (hs, ls, ms))
+        else:
+            loss_sum = z_sum = jnp.zeros(())
+            for i in range(nchunk):
+                a, b = one_chunk(hs[i], ls[i], ms[i])
+                loss_sum, z_sum = loss_sum + a, z_sum + b
+
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return loss_sum / denom, {"z_loss": z_sum / denom}
+
+
+def train_loss(params, batch, cfg) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """batch: tokens (B,S), labels (B,S), loss_mask (B,S) [+ frontend_emb]."""
+    out = backbone(params, batch["tokens"], cfg,
+                   frontend_emb=batch.get("frontend_emb"))
+    labels, mask = batch["labels"], batch["loss_mask"].astype(jnp.float32)
+    if cfg.family == "vlm":
+        # hidden seq = frontend prefix + text; loss only on text part
+        nf = batch["frontend_emb"].shape[1]
+        h = out.h[:, nf:, :]
+    else:
+        h = out.h
+    loss, lmx = ce_loss(params, h, labels, mask, cfg)
+    metrics = {"ce": loss, **lmx, **out.aux}
+    total = loss + cfg.z_loss_coef * lmx["z_loss"]
+    if "lb_loss" in out.aux:
+        total = total + cfg.lb_coef * out.aux["lb_loss"] \
+            + cfg.router_z_coef * out.aux["z_loss_router"]
+    metrics["loss"] = total
+    return total, metrics
+
+
+# ======================================================================
+# prefill / decode (serving)
+# ======================================================================
+
+def _gqa_cache_shape(cfg, B, T):
+    return (B, T, cfg.n_kv_heads, cfg.d_head)
+
+
+def cache_spec(cfg, batch: int, max_len: int, enc_len: int = 0):
+    """ShapeDtypeStruct tree for the decode cache (dry-run / allocation)."""
+    fam = cfg.family
+    dt_ = jnp.dtype(cfg.dtype)
+    f32 = jnp.float32
+
+    def sds(shape, dtype=dt_):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    if fam in ("dense", "vlm"):
+        if cfg.mla is not None:
+            m = cfg.mla
+            return {"ckv": sds((cfg.n_layers, batch, max_len, m.kv_lora_rank)),
+                    "krope": sds((cfg.n_layers, batch, max_len,
+                                  m.rope_head_dim))}
+        sh = _gqa_cache_shape(cfg, batch, max_len)
+        return {"k": sds((cfg.n_layers, *sh)), "v": sds((cfg.n_layers, *sh))}
+
+    if fam == "moe":
+        m = cfg.moe
+        n_moe = cfg.n_layers - m.first_k_dense
+        if cfg.mla is not None:
+            ml = cfg.mla
+
+            def mla_c(L):
+                return {"ckv": sds((L, batch, max_len, ml.kv_lora_rank)),
+                        "krope": sds((L, batch, max_len, ml.rope_head_dim))}
+            return {"dense": mla_c(m.first_k_dense) if m.first_k_dense else None,
+                    "moe": mla_c(n_moe)}
+        sh = _gqa_cache_shape(cfg, batch, max_len)
+
+        def gqa_c(L):
+            return {"k": sds((L, *sh)), "v": sds((L, *sh))}
+        return {"dense": gqa_c(m.first_k_dense) if m.first_k_dense else None,
+                "moe": gqa_c(n_moe)}
+
+    if fam == "hybrid":
+        mc = cfg.mamba2
+        k, n_main, tail, n_inv = _hybrid_groups(cfg)
+        d_inner = mc.expand * cfg.d_model
+        H = d_inner // mc.head_dim
+        d_xbc = d_inner + 2 * mc.n_groups * mc.d_state
+        sh = _gqa_cache_shape(cfg, batch, max_len)
+
+        def mstate(*lead):
+            return SSM.Mamba2State(
+                ssm=sds((*lead, batch, H, mc.d_state, mc.head_dim), f32),
+                conv=sds((*lead, batch, mc.d_conv - 1, d_xbc)))
+        return {
+            "mamba_main": mstate(n_main, k),
+            "mamba_tail": mstate(tail) if tail else None,
+            "attn_k": sds((n_inv, *sh)), "attn_v": sds((n_inv, *sh)),
+        }
+
+    if fam == "ssm":
+        xc = cfg.xlstm
+        m_per, n_groups = _ssm_groups(cfg)
+        d_inner = int(xc.proj_factor * cfg.d_model)
+        H = cfg.n_heads
+        P = d_inner // H
+        return {
+            "mlstm": XL.MLSTMState(
+                C=sds((n_groups, m_per, batch, H, P, P), f32),
+                n=sds((n_groups, m_per, batch, H, P), f32),
+                m=sds((n_groups, m_per, batch, H), f32),
+                conv=sds((n_groups, m_per, batch, xc.conv1d_kernel - 1,
+                          d_inner))),
+            "slstm": XL.SLSTMState(
+                c=sds((n_groups, batch, cfg.d_model), f32),
+                n=sds((n_groups, batch, cfg.d_model), f32),
+                h=sds((n_groups, batch, cfg.d_model), f32),
+                m=sds((n_groups, batch, cfg.d_model), f32)),
+        }
+
+    if fam == "audio":
+        sh = _gqa_cache_shape(cfg, batch, max_len)
+        xh = _gqa_cache_shape(cfg, batch, enc_len or max_len)
+        return {"self_k": sds((cfg.n_layers, *sh)),
+                "self_v": sds((cfg.n_layers, *sh)),
+                "cross_k": sds((cfg.n_layers, *xh)),
+                "cross_v": sds((cfg.n_layers, *xh))}
+
+    raise ValueError(fam)
+
+
+def init_cache(cfg, batch: int, max_len: int, enc_len: int = 0):
+    spec = cache_spec(cfg, batch, max_len, enc_len)
+    cache = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), spec,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    # mLSTM / sLSTM stabilizers start at -inf-ish
+    if cfg.family == "ssm":
+        cache["mlstm"] = cache["mlstm"]._replace(
+            m=jnp.full_like(cache["mlstm"].m, -1e30))
+        cache["slstm"] = cache["slstm"]._replace(
+            m=jnp.full_like(cache["slstm"].m, -1e30))
+    return cache
+
+
+# ---------------- decode attention helpers ----------------
+
+def _rope1(x, pos, theta):
+    """x: (B,H,Dh) one token at scalar position pos."""
+    return L.apply_rope(x[:, None], jnp.asarray(pos)[None], theta)[:, 0]
+
+
+def _decode_gqa(cfg, lp, h, ck, cv, cur_len):
+    """h: (B,D) normed. ck/cv: (B,T,KV,Dh). Returns (delta, ck, cv)."""
+    B = h.shape[0]
+    q = jnp.einsum("bd,dhk->bhk", h, lp["wq"])
+    k = jnp.einsum("bd,dhk->bhk", h, lp["wk"])
+    v = jnp.einsum("bd,dhk->bhk", h, lp["wv"])
+    if "bq" in lp:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    q = _rope1(q, cur_len, cfg.rope_theta)
+    k = _rope1(k, cur_len, cfg.rope_theta)
+    ck = jax.lax.dynamic_update_slice(ck, k[:, None], (0, cur_len, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cv, v[:, None], (0, cur_len, 0, 0))
+    T = ck.shape[1]
+    o = A.decode_attend_local(q, ck, cv, jnp.arange(T), cur_len + 1)
+    delta = jnp.einsum("bhk,hkd->bd", o, lp["wo"])
+    return delta, ck, cv
+
+
+def _decode_mla(cfg, lp, h, cckv, ckr, cur_len):
+    """MLA absorbed decode. cckv: (B,T,r); ckr: (B,T,rope)."""
+    m = cfg.mla
+    h3 = h[:, None, :]
+    pos = jnp.asarray(cur_len)[None]
+    q_nope, q_rope = MLA.mla_queries(lp, h3, pos, cfg)
+    c_kv, k_rope = MLA.mla_latent(lp, h3, pos, cfg)
+    cckv = jax.lax.dynamic_update_slice(cckv, c_kv, (0, cur_len, 0))
+    ckr = jax.lax.dynamic_update_slice(ckr, k_rope, (0, cur_len, 0))
+    T = cckv.shape[1]
+    o_t, mx, lse = MLA.mla_decode_partial(
+        lp, q_nope[:, 0], q_rope[:, 0], cckv, ckr, jnp.arange(T),
+        cur_len + 1, cfg)
+    o = o_t / jnp.maximum(lse, 1e-30)[..., None]
+    delta = MLA.mla_decode_finish(lp, o.astype(jnp.float32), cfg)
+    return delta.astype(h.dtype), cckv, ckr
+
+
+def _decode_cross(cfg, lp, h, xk, xv):
+    """Cross-attention against the (static) encoder KV cache."""
+    q = jnp.einsum("bd,dhk->bhk", h, lp["wq"])
+    T = xk.shape[1]
+    o = A.decode_attend_local(q, xk, xv, jnp.arange(T), jnp.int32(T))
+    return jnp.einsum("bhk,hkd->bd", o, lp["wo"])
+
+
+def _dense_decode_body(cfg, cur_len, x, lp, cache_slice):
+    if cfg.mla is not None:
+        h = _norm(cfg, lp["attn_norm"], x)
+        d, cckv, ckr = _decode_mla(cfg, lp["attn"], h, cache_slice["ckv"],
+                                   cache_slice["krope"], cur_len)
+        new = {"ckv": cckv, "krope": ckr}
+    else:
+        h = _norm(cfg, lp["attn_norm"], x)
+        d, ck, cv = _decode_gqa(cfg, lp["attn"], h, cache_slice["k"],
+                                cache_slice["v"], cur_len)
+        new = {"k": ck, "v": cv}
+    x = x + d
+    x = x + L.mlp(lp["mlp"], _norm(cfg, lp["mlp_norm"], x), cfg.act)
+    return x, new
+
+
+def _moe_decode_body(cfg, cur_len, x, lp, cache_slice):
+    if cfg.mla is not None:
+        h = _norm(cfg, lp["attn_norm"], x)
+        d, cckv, ckr = _decode_mla(cfg, lp["attn"], h, cache_slice["ckv"],
+                                   cache_slice["krope"], cur_len)
+        new = {"ckv": cckv, "krope": ckr}
+    else:
+        h = _norm(cfg, lp["attn_norm"], x)
+        d, ck, cv = _decode_gqa(cfg, lp["attn"], h, cache_slice["k"],
+                                cache_slice["v"], cur_len)
+        new = {"k": ck, "v": cv}
+    x = x + d
+    # decode grouping: one group of all B tokens (see moe.py docstring)
+    y, _aux = MOE.moe_ffn(lp["moe"], _norm(cfg, lp["mlp_norm"], x)[None],
+                          cfg)
+    return x + y[0], new
+
+
+def decode_step(params, batch, cfg):
+    """One-token serve step. batch: token (B,), cur_len (), cache pytree.
+
+    Returns (logits (B, vocab) fp32, new_cache).
+    """
+    fam = cfg.family
+    tok = batch["token"]
+    cur = batch["cur_len"]
+    cache = batch["cache"]
+    x = L.embed(params["embed"], tok).astype(jnp.dtype(cfg.dtype))  # (B,D)
+
+    if fam in ("dense", "vlm"):
+        body = functools.partial(_dense_decode_body, cfg, cur)
+        x, new_cache = _scan_stack(cfg, body, x, params["layers"],
+                                   extra_xs=cache)
+
+    elif fam == "moe":
+        m = cfg.moe
+        new_cache = dict(cache)
+        if m.first_k_dense:
+            body = functools.partial(_dense_decode_body, cfg, cur)
+            x, nd = _scan_stack(cfg, body, x, params["dense_layers"],
+                                extra_xs=cache["dense"])
+            new_cache["dense"] = nd
+        body = functools.partial(_moe_decode_body, cfg, cur)
+        x, nm = _scan_stack(cfg, body, x, params["layers"],
+                            extra_xs=cache["moe"])
+        new_cache["moe"] = nm
+
+    elif fam == "hybrid":
+        k, n_main, tail, n_inv = _hybrid_groups(cfg)
+        sp = params["shared_attn"]
+
+        def mamba_dec(x, lp, ex):
+            nrm, st = ex
+            d, st1 = SSM.mamba2_step(lp, _norm(cfg, nrm, x), st, cfg)
+            return x + d, st1
+
+        def shared_dec(x, ck, cv):
+            h = _norm(cfg, sp["attn_norm"], x)
+            d, ck, cv = _decode_gqa(cfg, sp["attn"], h, ck, cv, cur)
+            x = x + d
+            x = x + L.mlp(sp["mlp"], _norm(cfg, sp["mlp_norm"], x), cfg.act)
+            return x, ck, cv
+
+        def group_dec(x, gp, ex):
+            gn, gst, ck, cv = ex
+            x, st1 = _scan_stack(cfg, mamba_dec, x, gp, extra_xs=(gn, gst))
+            x, ck, cv = shared_dec(x, ck, cv)
+            return x, (st1, ck, cv)
+
+        x, (st_main, ak, av) = _scan_stack(
+            cfg, group_dec, x, params["mamba_main"],
+            extra_xs=(params["mamba_norms"], cache["mamba_main"],
+                      cache["attn_k"][:n_main], cache["attn_v"][:n_main]))
+        new_cache = {"mamba_main": st_main, "mamba_tail": None}
+        if tail:
+            x, st_tail = _scan_stack(
+                cfg, mamba_dec, x, params["mamba_tail"],
+                extra_xs=(params["tail_norms"], cache["mamba_tail"]))
+            x, tk, tv = shared_dec(x, cache["attn_k"][n_main],
+                                   cache["attn_v"][n_main])
+            new_cache["mamba_tail"] = st_tail
+            ak = jnp.concatenate([ak, tk[None]], 0)
+            av = jnp.concatenate([av, tv[None]], 0)
+        new_cache["attn_k"], new_cache["attn_v"] = ak, av
+
+    elif fam == "ssm":
+        def ml_dec(x, lp, ex):
+            nrm, st = ex
+            d, st1 = XL.mlstm_step(lp, _norm(cfg, nrm, x), st, cfg)
+            return x + d, st1
+
+        def group_dec(x, gp, ex):
+            gst = ex
+            x, mst = _scan_stack(cfg, ml_dec, x, gp["m"],
+                                 extra_xs=(gp["n"], gst["mlstm"]))
+            d, sst = XL.slstm_step(gp["s"], x, gst["slstm"], cfg)
+            return x + d, {"mlstm": mst, "slstm": sst}
+
+        stacked = {"m": params["mlstm"], "n": params["mlstm_norms"],
+                   "s": params["slstm"]}
+        x, new_cache = _scan_stack(
+            cfg, group_dec, x, stacked,
+            extra_xs={"mlstm": cache["mlstm"], "slstm": cache["slstm"]})
+
+    elif fam == "audio":
+        def dec_body(x, lp, cs):
+            h = _norm(cfg, lp["self_norm"], x)
+            d, ck, cv = _decode_gqa(cfg, lp["self"], h, cs["self_k"],
+                                    cs["self_v"], cur)
+            x = x + d
+            h = _norm(cfg, lp["cross_norm"], x)
+            x = x + _decode_cross(cfg, lp["cross"], h, cs["cross_k"],
+                                  cs["cross_v"])
+            x = x + L.mlp(lp["mlp"], _norm(cfg, lp["mlp_norm"], x), cfg.act)
+            return x, {"self_k": ck, "self_v": cv}
+
+        xs_cache = {"self_k": cache["self_k"], "self_v": cache["self_v"],
+                    "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}
+        x, upd = _scan_stack(cfg, dec_body, x, params["layers"],
+                             extra_xs=xs_cache)
+        new_cache = dict(cache)
+        new_cache.update(upd)
+
+    else:
+        raise ValueError(fam)
+
+    h = _norm(cfg, params["final_norm"], x)
+    logits = _logits(params, h[:, None, :], cfg)[:, 0].astype(jnp.float32)
+    return logits, new_cache
+
+
+def prefill(params, batch, cfg):
+    """Full-sequence prefill: returns (last-token logits, cache material).
+
+    The cache material is the backbone's per-layer KV stacks / final
+    recurrent states at the prefill length; ``examples/serve.py`` shows
+    how to pad them into a fixed-size decode cache.
+    """
+    out = backbone(params, batch["tokens"], cfg,
+                   frontend_emb=batch.get("frontend_emb"),
+                   collect_cache=True)
+    logits = _logits(params, out.h[:, -1:, :], cfg)[:, 0]
+    return logits.astype(jnp.float32), out.caches
+
+
+# ---------------- xlstm decode uses ml/sl steps with scalar inputs -------
+
+def ssm_decode_supported(cfg) -> bool:
+    return cfg.family in ("hybrid", "ssm")

@@ -1,0 +1,141 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Cache stores the compressed latent (c_kv, kv_lora_rank) + shared rope key
+(rope_head_dim) per token — 576 values/token for V3 — the reason MLA is
+the bandwidth-friendliest full-attention cache and a natural fit for the
+paper's wide-streaming discipline.
+
+Prefill/train use the expanded (non-absorbed) form (compute-bound);
+decode uses the *absorbed* form: q_nope is folded through wk_b so scores
+and values are taken directly against the latent cache
+(O(T * kv_lora) per head instead of O(T * expand)).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as PS
+
+from repro.common.hints import shard_hint
+from repro.common.module import ParamDef
+from repro.models.attention import NEG_INF, blockwise_attn
+from repro.models.layers import apply_rope, rmsnorm, rmsnorm_spec
+
+
+def mla_spec(cfg):
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    dtype = jnp.dtype(cfg.dtype)
+    qd = m.nope_head_dim + m.rope_head_dim
+    return {
+        "wq_a": ParamDef((d, m.q_lora_rank), dtype, ("embed", "q_lora")),
+        "q_norm": rmsnorm_spec(m.q_lora_rank, dtype),
+        "wq_b": ParamDef((m.q_lora_rank, H, qd), dtype, ("q_lora", "heads", "head_dim")),
+        "wkv_a": ParamDef(
+            (d, m.kv_lora_rank + m.rope_head_dim), dtype, ("embed", "kv_lora")
+        ),
+        "kv_norm": rmsnorm_spec(m.kv_lora_rank, dtype),
+        "wk_b": ParamDef((m.kv_lora_rank, H, m.nope_head_dim), dtype,
+                         ("kv_lora", "heads", "head_dim")),
+        "wv_b": ParamDef((m.kv_lora_rank, H, m.v_head_dim), dtype,
+                         ("kv_lora", "heads", "head_dim")),
+        "wo": ParamDef((H, m.v_head_dim, d), dtype, ("heads", "head_dim", "embed")),
+    }
+
+
+def mla_latent(p, x, positions, cfg):
+    """x -> (c_kv normalized, k_rope with rope applied). Cache contents."""
+    m = cfg.mla
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c_kv = rmsnorm(p["kv_norm"], kv_a[..., : m.kv_lora_rank], cfg.norm_eps)
+    k_rope = kv_a[..., m.kv_lora_rank:][:, :, None, :]        # (B,S,1,rope)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    return c_kv, k_rope[:, :, 0, :]
+
+
+def mla_queries(p, x, positions, cfg):
+    m = cfg.mla
+    q_a = rmsnorm(p["q_norm"], jnp.einsum("bsd,dr->bsr", x, p["wq_a"]), cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", q_a, p["wq_b"])
+    q_nope = q[..., : m.nope_head_dim]
+    q_rope = apply_rope(q[..., m.nope_head_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_attention(p, x, positions, cfg, *, causal=True, dense=False,
+                  head_axis=None):
+    """Expanded-form attention for train/prefill. Returns (out, (c_kv, k_rope))."""
+    m = cfg.mla
+    H = cfg.n_heads
+    q_nope, q_rope = mla_queries(p, x, positions, cfg)
+    c_kv, k_rope = mla_latent(p, x, positions, cfg)
+
+    # H2d (latent/projection hints) was measured NEUTRAL here and is
+    # reverted — see EXPERIMENTS.md §Perf; the blockwise head hints
+    # (H2b) below carry the gain.
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["wk_b"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["wv_b"])
+    k_rope_h = jnp.broadcast_to(
+        k_rope[:, :, None, :], (*k_rope.shape[:2], H, m.rope_head_dim)
+    )
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+
+    if dense:
+        from repro.models.attention import full_attn_ref
+        o = full_attn_ref(q, k, v_pad(v, q.shape[-1]), causal=causal,
+                          q_positions=positions, kv_positions=positions)
+        o = o[..., : m.v_head_dim]
+    else:
+        o = blockwise_attn(
+            q, k, v_pad(v, q.shape[-1]), causal=causal,
+            q_positions=positions, kv_positions=positions,
+            block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv,
+            head_axis=head_axis,
+        )[..., : m.v_head_dim]
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, (c_kv, k_rope)
+
+
+def v_pad(v, d):
+    """Pad V head dim up to QK head dim so the streaming kernel is uniform."""
+    pad = d - v.shape[-1]
+    if pad == 0:
+        return v
+    return jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad)))
+
+
+# ---------------- absorbed decode ----------------
+
+def mla_decode_partial(
+    p, q_nope, q_rope, cache_ckv, cache_krope, kv_positions, cur_len, cfg
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Absorbed-form partial decode vs a (possibly sharded) latent cache.
+
+    q_nope: (B,H,nope); q_rope: (B,H,rope)
+    cache_ckv: (B,T,r); cache_krope: (B,T,rope)
+    Returns (o_tilde (B,H,r), m (B,H), l (B,H)) — combined via pmax/psum.
+    """
+    q_abs = jnp.einsum("bhk,rhk->bhr", q_nope.astype(jnp.float32),
+                       p["wk_b"].astype(jnp.float32))
+    scale = 1.0 / ((cfg.mla.nope_head_dim + cfg.mla.rope_head_dim) ** 0.5)
+    s = jnp.einsum("bhr,btr->bht", q_abs, cache_ckv.astype(jnp.float32))
+    s = s + jnp.einsum("bhk,btk->bht", q_rope.astype(jnp.float32),
+                       cache_krope.astype(jnp.float32))
+    s = s * scale
+    valid = kv_positions < cur_len
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    m = s.max(axis=-1)
+    ptab = jnp.exp(s - m[..., None])
+    ptab = jnp.where((m > NEG_INF / 2)[..., None], ptab, 0.0)
+    l = ptab.sum(axis=-1)
+    o_t = jnp.einsum("bht,btr->bhr", ptab, cache_ckv.astype(jnp.float32))
+    return o_t, m, l
+
+
+def mla_decode_finish(p, o_latent, cfg):
+    """(B,H,r) normalized latent attention output -> (B,d_model)."""
+    o = jnp.einsum("bhr,rhk->bhk", o_latent, p["wv_b"].astype(o_latent.dtype))
+    return jnp.einsum("bhk,hkd->bd", o, p["wo"].astype(o_latent.dtype))

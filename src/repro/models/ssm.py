@@ -1,0 +1,273 @@
+"""Mamba2 (SSD) block — chunked formulation, two variants.
+
+``accounting=False`` (real program): sequential ``lax.scan`` over chunks,
+peak memory O(B*H*Q^2) — what a real cluster runs.
+
+``accounting=True``: the inter-chunk recurrence is evaluated in *closed
+form* as a (n_chunks x n_chunks) decay matmul (per-head decays are
+scalars), so the whole layer is scan-free and XLA ``cost_analysis``
+FLOP/byte accounting is exact (XLA counts while-loop bodies once; see
+DESIGN.md §8).  Accounting programs are lowered, never executed, so the
+large transients are irrelevant.
+
+Both variants share the per-chunk math and agree numerically (tested).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.module import ParamDef, const_init, ones_init, zeros_init
+from repro.models.layers import rmsnorm, rmsnorm_spec
+
+
+def _a_log_init(key, shape, dtype):
+    # A in [1, 16] as in the reference implementation.
+    # shape may carry leading layer-stack dims: fill along the last axis.
+    row = jnp.log(jnp.linspace(1.0, 16.0, shape[-1]))
+    return jnp.broadcast_to(row, shape).astype(dtype)
+
+
+def mamba2_spec(cfg):
+    mc = cfg.mamba2
+    D = cfg.d_model
+    d_inner = mc.expand * D
+    H = d_inner // mc.head_dim
+    G, N, K = mc.n_groups, mc.d_state, mc.d_conv
+    d_xbc = d_inner + 2 * G * N
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "in_proj": ParamDef((D, d_inner + d_xbc + H), dtype, ("embed", "inner_all")),
+        "conv_w": ParamDef((K, d_xbc), dtype, ("conv_k", "inner")),
+        "conv_b": ParamDef((d_xbc,), dtype, ("inner",), zeros_init),
+        "dt_bias": ParamDef((H,), jnp.float32, ("heads",), const_init(0.5)),
+        "a_log": ParamDef((H,), jnp.float32, ("heads",), _a_log_init),
+        "d_skip": ParamDef((H,), jnp.float32, ("heads",), ones_init),
+        "norm": rmsnorm_spec(d_inner, dtype),
+        "out_proj": ParamDef((d_inner, D), dtype, ("inner", "embed")),
+    }
+
+
+class Mamba2State(NamedTuple):
+    ssm: jax.Array     # (B, H, N, P) fp32
+    conv: jax.Array    # (B, K-1, d_xbc)
+
+
+def init_state(cfg, batch: int) -> Mamba2State:
+    mc = cfg.mamba2
+    d_inner = mc.expand * cfg.d_model
+    H = d_inner // mc.head_dim
+    d_xbc = d_inner + 2 * mc.n_groups * mc.d_state
+    return Mamba2State(
+        ssm=jnp.zeros((batch, H, mc.d_state, mc.head_dim), jnp.float32),
+        conv=jnp.zeros((batch, mc.d_conv - 1, d_xbc), jnp.dtype(cfg.dtype)),
+    )
+
+
+def _split_proj(p, x, cfg):
+    mc = cfg.mamba2
+    d_inner = mc.expand * cfg.d_model
+    G, N = mc.n_groups, mc.d_state
+    H = d_inner // mc.head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner: d_inner * 2 + 2 * G * N]
+    dt = zxbcdt[..., -H:]
+    return z, xbc, dt
+
+
+def _causal_conv(p, xbc, cfg, left_ctx=None):
+    """Depthwise causal conv1d along seq (kernel K), then silu.
+
+    left_ctx: (B, K-1, d_xbc) carried context (decode continuation); zeros
+    at sequence start.
+    """
+    K = cfg.mamba2.d_conv
+    if left_ctx is None:
+        pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([left_ctx.astype(xbc.dtype), xbc], axis=1)
+    out = sum(
+        pad[:, i: i + xbc.shape[1], :] * p["conv_w"][i][None, None, :]
+        for i in range(K)
+    ) + p["conv_b"]
+    return jax.nn.silu(out.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _chunk_math(xq, Bq, Cq, dtq, aq, G, hpg):
+    """Per-chunk quantities shared by both variants.
+
+    xq (B,Q,H,P) fp32; Bq/Cq (B,Q,G,N) fp32; dtq/aq (B,Q,H) fp32.
+    Returns y_intra (B,Q,G,hpg,P), S_chunk (B,G,hpg,N,P),
+            cum (B,Q,H), g_tot (B,H).
+    """
+    Bsz, Q = xq.shape[:2]
+    cum = jnp.cumsum(aq, axis=1)                                  # (B,Q,H)
+    cb = jnp.einsum("blgn,bsgn->bgls", Cq, Bq)                    # (B,G,l,s)
+    # mask BEFORE exp: the upper triangle holds positive log-decays whose
+    # exp overflows; where-after-exp poisons the backward pass with NaNs.
+    diff = cum[:, :, None, :] - cum[:, None, :, :]                # (B,l,s,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.exp(jnp.where(mask[None, :, :, None], diff, -1e30))
+    xdt = xq * dtq[..., None]                                     # (B,Q,H,P)
+    dec = decay.transpose(0, 3, 1, 2).reshape(Bsz, G, hpg, Q, Q)
+    att = cb[:, :, None] * dec                                    # (B,G,hpg,l,s)
+    xdt_g = xdt.reshape(Bsz, Q, G, hpg, -1)
+    y_intra = jnp.einsum("bghls,bsghp->blghp", att, xdt_g)
+    decay_to_end = jnp.exp(cum[:, -1:, :] - cum)                  # (B,Q,H)
+    xw_g = (xdt * decay_to_end[..., None]).reshape(Bsz, Q, G, hpg, -1)
+    S_chunk = jnp.einsum("bsgn,bsghp->bghnp", Bq, xw_g)
+    return y_intra, S_chunk, cum, cum[:, -1, :]
+
+
+def mamba2_forward(
+    p, x, cfg, initial_state: Mamba2State | None = None
+) -> Tuple[jax.Array, Mamba2State]:
+    """Training/prefill forward. x: (B, S, D). Returns (y, final_state)."""
+    mc = cfg.mamba2
+    Bsz, S, D = x.shape
+    d_inner = mc.expand * D
+    P, G, N = mc.head_dim, mc.n_groups, mc.d_state
+    H = d_inner // P
+    Q = min(mc.chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    hpg = H // G
+
+    z, xbc_raw, dt = _split_proj(p, x, cfg)
+    tail = mc.d_conv - 1
+    conv_tail = (
+        xbc_raw[:, -tail:, :]
+        if S >= tail
+        else jnp.pad(xbc_raw, ((0, 0), (tail - S, 0), (0, 0)))
+    )
+    left = initial_state.conv if initial_state is not None else None
+    xbc = _causal_conv(p, xbc_raw, cfg, left_ctx=left)
+    xs = xbc[..., :d_inner].reshape(Bsz, S, H, P)
+    Bmat = xbc[..., d_inner: d_inner + G * N].reshape(Bsz, S, G, N)
+    Cmat = xbc[..., d_inner + G * N:].reshape(Bsz, S, G, N)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # (B,S,H)
+    a = -jnp.exp(p["a_log"]) * dt                                    # (B,S,H) <= 0
+
+    xf = xs.astype(jnp.float32).reshape(Bsz, nc, Q, H, P)
+    Bf = Bmat.astype(jnp.float32).reshape(Bsz, nc, Q, G, N)
+    Cf = Cmat.astype(jnp.float32).reshape(Bsz, nc, Q, G, N)
+    dtf = dt.reshape(Bsz, nc, Q, H)
+    af = a.reshape(Bsz, nc, Q, H)
+
+    S0 = (
+        initial_state.ssm
+        if initial_state is not None
+        else jnp.zeros((Bsz, H, N, P), jnp.float32)
+    ).reshape(Bsz, G, hpg, N, P)
+
+    if cfg.accounting:
+        y, S_fin = _ssd_closed(xf, Bf, Cf, dtf, af, S0, G, hpg)
+    else:
+        y, S_fin = _ssd_scan(xf, Bf, Cf, dtf, af, S0, G, hpg)
+
+    y = y.reshape(Bsz, S, H, P)
+    y = y + xs.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+
+    # gate + norm + out
+    y = y.reshape(Bsz, S, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm(p["norm"], y.astype(x.dtype), cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, Mamba2State(ssm=S_fin.reshape(Bsz, H, N, P), conv=conv_tail)
+
+
+def _apply_state(Cq, cum, S_in, G, hpg):
+    """y_inter[l] = C[l] · exp(cum[l]) · S_in."""
+    Bsz, Q = Cq.shape[:2]
+    return jnp.einsum(
+        "blgn,bghnp,blgh->blghp",
+        Cq, S_in, jnp.exp(cum).reshape(Bsz, Q, G, hpg),
+    )
+
+
+def _ssd_scan(xf, Bf, Cf, dtf, af, S0, G, hpg):
+    """Sequential chunk scan (real program): bounded memory."""
+    def body(S_prev, args):
+        xq, Bq, Cq, dtq, aq = args
+        y_intra, S_chunk, cum, g_tot = _chunk_math(xq, Bq, Cq, dtq, aq, G, hpg)
+        y = y_intra + _apply_state(Cq, cum, S_prev, G, hpg)
+        Bsz = xq.shape[0]
+        S_next = S_prev * jnp.exp(g_tot).reshape(Bsz, G, hpg)[..., None, None] \
+            + S_chunk
+        return S_next, y
+
+    xsw = [t.swapaxes(0, 1) for t in (xf, Bf, Cf, dtf, af)]
+    S_fin, ys = jax.lax.scan(body, S0, tuple(xsw))
+    return ys.swapaxes(0, 1), S_fin  # (B,nc,Q,G,hpg,P)
+
+
+def _ssd_closed(xf, Bf, Cf, dtf, af, S0, G, hpg):
+    """Closed-form inter-chunk combination (accounting program)."""
+    Bsz, nc = xf.shape[:2]
+
+    def per_chunk(xq, Bq, Cq, dtq, aq):
+        return _chunk_math(xq, Bq, Cq, dtq, aq, G, hpg)
+
+    y_intra, S_chunk, cum, g_tot = jax.vmap(
+        per_chunk, in_axes=(1, 1, 1, 1, 1), out_axes=(1, 1, 1, 1)
+    )(xf, Bf, Cf, dtf, af)
+    # g_tot: (B,nc,H); cum: (B,nc,Q,H)
+    Gcum = jnp.cumsum(g_tot, axis=1)
+    # M[c, c'] = exp(G[c-1] - G[c']) for c' < c (strictly lower triangular)
+    diff = Gcum[:, :, None, :] - g_tot[:, :, None, :] - Gcum[:, None, :, :]
+    cmask = jnp.tril(jnp.ones((nc, nc), bool), k=-1)
+    M = jnp.exp(jnp.where(cmask[None, :, :, None], diff, -1e30))  # (B,c,c',H)
+    M_g = M.reshape(Bsz, nc, nc, G, hpg)
+    S_in = jnp.einsum("bczgh,bzghnp->bcghnp", M_g, S_chunk)
+    # contribution of the initial state: decay G[c-1] from sequence start
+    init_dec = jnp.exp(Gcum - g_tot).reshape(Bsz, nc, G, hpg)     # (B,c,G,hpg)
+    S_in = S_in + S0[:, None] * init_dec[..., None, None]
+
+    y_inter = jax.vmap(
+        lambda Cq, cumq, Sq: _apply_state(Cq, cumq, Sq, G, hpg),
+        in_axes=(1, 1, 1), out_axes=1,
+    )(Cf, cum, S_in)
+
+    last_decay = jnp.exp(g_tot[:, -1, :]).reshape(Bsz, G, hpg)
+    S_fin = S_in[:, -1] * last_decay[..., None, None] + S_chunk[:, -1]
+    return y_intra + y_inter, S_fin
+
+
+def mamba2_step(p, x, state: Mamba2State, cfg) -> Tuple[jax.Array, Mamba2State]:
+    """Single-token decode. x: (B, D). O(1) in sequence length."""
+    mc = cfg.mamba2
+    Bsz, D = x.shape
+    d_inner = mc.expand * D
+    P, G, N, K = mc.head_dim, mc.n_groups, mc.d_state, mc.d_conv
+    H = d_inner // P
+
+    z, xbc, dt = _split_proj(p, x[:, None, :], cfg)
+    z, xbc, dt = z[:, 0], xbc[:, 0], dt[:, 0]
+
+    conv_in = jnp.concatenate([state.conv, xbc[:, None, :]], axis=1)  # (B,K,dxbc)
+    xbc_c = jnp.einsum("bke,ke->be", conv_in, p["conv_w"]) + p["conv_b"]
+    xbc_c = jax.nn.silu(xbc_c.astype(jnp.float32)).astype(x.dtype)
+    new_conv = conv_in[:, 1:, :]
+
+    xs = xbc_c[..., :d_inner].reshape(Bsz, H, P).astype(jnp.float32)
+    Bv = xbc_c[..., d_inner: d_inner + G * N].reshape(Bsz, G, N).astype(jnp.float32)
+    Cv = xbc_c[..., d_inner + G * N:].reshape(Bsz, G, N).astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])       # (B,H)
+    decay = jnp.exp(-jnp.exp(p["a_log"]) * dt)                        # (B,H)
+
+    Bh = jnp.repeat(Bv, H // G, axis=1)                               # (B,H,N)
+    Ch = jnp.repeat(Cv, H // G, axis=1)
+    h = state.ssm * decay[..., None, None] + jnp.einsum(
+        "bhn,bhp->bhnp", Bh * dt[..., None], xs
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, h) + xs * p["d_skip"][None, :, None]
+
+    y = y.reshape(Bsz, d_inner) * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm(p["norm"], y.astype(x.dtype), cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"])
+    return out, Mamba2State(ssm=h, conv=new_conv)

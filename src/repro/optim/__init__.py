@@ -1,0 +1,1 @@
+from repro.optim.adamw import OptConfig, OptState, init, update, schedule, opt_state_pspecs, global_norm  # noqa: F401

@@ -1,0 +1,1 @@
+from repro.runtime.resilience import StragglerMonitor, Heartbeat, RestartPolicy, run_with_restarts  # noqa: F401

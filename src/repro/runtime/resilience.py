@@ -1,0 +1,101 @@
+"""Fault-tolerance runtime: straggler monitor, heartbeat, restart loop.
+
+On a 1000+-node cluster the failure modes this layer covers:
+  * slow host / degraded chip  -> StragglerMonitor flags steps beyond
+    k x trailing-median; the launcher's policy decides (log, exclude
+    host on next restart, or checkpoint-now),
+  * hang                       -> Heartbeat file ages out; the external
+    supervisor (launch/run_elastic.sh) kills and restarts the job,
+  * crash                      -> run_with_restarts resumes from the
+    latest complete checkpoint (data pipeline is stateless-resumable,
+    see data/pipeline.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Deque, List, Optional
+
+
+class StragglerMonitor:
+    def __init__(self, window: int = 50, threshold: float = 2.0,
+                 warmup: int = 5):
+        self.window: Deque[float] = deque(maxlen=window)
+        self.threshold = threshold
+        self.warmup = warmup
+        self.flagged: List[dict] = []
+        self._t0: Optional[float] = None
+        self._step = 0
+
+    def start_step(self):
+        self._t0 = time.monotonic()
+
+    def end_step(self) -> Optional[dict]:
+        assert self._t0 is not None
+        dt = time.monotonic() - self._t0
+        self._step += 1
+        flag = None
+        if len(self.window) >= self.warmup:
+            med = sorted(self.window)[len(self.window) // 2]
+            if dt > self.threshold * med:
+                flag = {"step": self._step, "dt": dt, "median": med}
+                self.flagged.append(flag)
+        self.window.append(dt)
+        return flag
+
+    @property
+    def median(self) -> float:
+        if not self.window:
+            return 0.0
+        return sorted(self.window)[len(self.window) // 2]
+
+
+class Heartbeat:
+    """Touches a file each step; an external supervisor treats a stale
+    heartbeat as a hang and restarts the worker."""
+
+    def __init__(self, path: str, interval_s: float = 15.0):
+        self.path = path
+        self.interval = interval_s
+        self._last = 0.0
+
+    def beat(self, step: int, extra: Optional[dict] = None):
+        now = time.time()
+        if now - self._last < self.interval:
+            return
+        self._last = now
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"step": step, "time": now, **(extra or {})}, f)
+        os.replace(tmp, self.path)
+
+
+@dataclass
+class RestartPolicy:
+    max_restarts: int = 10
+    backoff_s: float = 1.0
+
+
+def run_with_restarts(make_state: Callable[[Optional[int]], object],
+                      run: Callable[[object], None],
+                      store,
+                      policy: RestartPolicy = RestartPolicy()):
+    """make_state(resume_step|None) -> state;  run(state) raises on
+    failure.  Resumes from store.latest_step() after each failure."""
+    attempts = 0
+    while True:
+        resume = store.latest_step()
+        state = make_state(resume)
+        try:
+            run(state)
+            return
+        except KeyboardInterrupt:
+            raise
+        except Exception as e:                      # noqa: BLE001
+            attempts += 1
+            if attempts > policy.max_restarts:
+                raise
+            time.sleep(policy.backoff_s * attempts)

@@ -1,0 +1,9 @@
+"""Shared test config. NOTE: no XLA_FLAGS here — smoke tests must see
+1 device; multi-device tests spawn subprocesses with their own flags."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

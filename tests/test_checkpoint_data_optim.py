@@ -1,0 +1,181 @@
+"""Checkpoint store, data pipeline, optimizer, runtime resilience."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointStore
+from repro.data import (DataConfig, MemmapTokens, Prefetcher, SyntheticLM,
+                        pack_documents)
+from repro.optim import OptConfig, adamw
+from repro.runtime import (Heartbeat, RestartPolicy, StragglerMonitor,
+                           run_with_restarts)
+
+
+# ---------------------------------------------------------------- ckpt
+
+def test_checkpoint_roundtrip(tmp_path):
+    store = CheckpointStore(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.int32)}}
+    store.save(1, tree)
+    spec = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                        tree)
+    out = store.restore(1, spec)
+    np.testing.assert_array_equal(np.asarray(out["a"]),
+                                  np.asarray(tree["a"]))
+    np.testing.assert_array_equal(np.asarray(out["b"]["c"]),
+                                  np.asarray(tree["b"]["c"]))
+
+
+def test_checkpoint_keep_k_and_latest(tmp_path):
+    store = CheckpointStore(str(tmp_path), keep=2)
+    tree = {"x": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4):
+        store.save(s, tree)
+    assert store.steps() == [3, 4]
+    assert store.latest_step() == 4
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """Incomplete directories (no _COMPLETE) are invisible."""
+    store = CheckpointStore(str(tmp_path))
+    tree = {"x": jnp.ones((2,))}
+    store.save(5, tree)
+    os.makedirs(tmp_path / "step_9")          # crashed write, no marker
+    assert store.latest_step() == 5
+
+
+def test_checkpoint_async(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    tree = {"x": jnp.full((128, 128), 3.0)}
+    store.save(1, tree, async_=True)
+    store.wait()
+    out = store.restore(1, jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree))
+    assert float(out["x"][0, 0]) == 3.0
+
+
+# ---------------------------------------------------------------- data
+
+def test_synthetic_determinism():
+    cfg = DataConfig(vocab=1000, seq_len=64, global_batch=8, n_shards=2)
+    d = SyntheticLM(cfg)
+    b1 = d.batch(7, shard=1)
+    b2 = d.batch(7, shard=1)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = d.batch(8, shard=1)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    # labels shifted by one
+    full = SyntheticLM(DataConfig(vocab=1000, seq_len=64, global_batch=8))
+    b = full.batch(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_pack_and_memmap(tmp_path):
+    docs = [[5, 6, 7], [9] * 10, [3, 4]]
+    rows = pack_documents(docs, seq_len=8, eos_id=1)
+    assert rows.shape[1] == 8
+    flat = np.concatenate([rows.reshape(-1), np.zeros(1, np.int32)])
+    path = str(tmp_path / "toks.bin")
+    flat.astype(np.int32).tofile(path)
+    mm = MemmapTokens(path, DataConfig(vocab=16, seq_len=4,
+                                       global_batch=2))
+    b = mm.batch(0)
+    assert b["tokens"].shape == (2, 4)
+    # EOS boundary masks the cross-document label
+    assert (b["loss_mask"][b["tokens"] == 1] == 0).all()
+
+
+def test_prefetcher():
+    it = iter([{"x": i} for i in range(5)])
+    pf = Prefetcher(it, depth=2)
+    got = [b["x"] for b in pf]
+    assert got == list(range(5))
+
+
+# ---------------------------------------------------------------- optim
+
+def test_adamw_converges_quadratic():
+    cfg = OptConfig(lr=0.1, warmup_steps=0, total_steps=200,
+                    weight_decay=0.0, grad_clip=1e9)
+    params = {"w": jnp.array([3.0, -2.0])}
+    st = adamw.init(cfg, params)
+    for _ in range(150):
+        g = {"w": 2 * params["w"]}
+        params, st, _ = adamw.update(cfg, g, st, params)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_adamw_bf16_moments_master():
+    cfg = OptConfig(lr=0.01, warmup_steps=0, total_steps=10,
+                    moment_dtype="bfloat16")
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    st = adamw.init(cfg, params)
+    assert st.m["w"].dtype == jnp.bfloat16
+    assert st.master["w"].dtype == jnp.float32
+    g = {"w": jnp.full((4,), 0.5, jnp.bfloat16)}
+    params, st, m = adamw.update(cfg, g, st, params)
+    assert params["w"].dtype == jnp.bfloat16
+    assert np.isfinite(float(m["grad_norm"]))
+
+
+def test_grad_clip():
+    cfg = OptConfig(lr=0.0, warmup_steps=0, total_steps=10,
+                    grad_clip=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros((3,))}
+    st = adamw.init(cfg, params)
+    g = {"w": jnp.full((3,), 100.0)}
+    _, _, m = adamw.update(cfg, g, st, params)
+    assert float(m["grad_norm"]) > 100
+
+
+def test_schedule_shape():
+    cfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                    min_lr_frac=0.1)
+    s0 = float(adamw.schedule(cfg, jnp.int32(0)))
+    s10 = float(adamw.schedule(cfg, jnp.int32(10)))
+    s100 = float(adamw.schedule(cfg, jnp.int32(100)))
+    assert s0 < 0.2 and abs(s10 - 1.0) < 0.01 and abs(s100 - 0.1) < 0.01
+
+
+# ---------------------------------------------------------------- runtime
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(window=20, threshold=2.0, warmup=3)
+    for _ in range(5):
+        mon.start_step()
+        time.sleep(0.01)
+        assert mon.end_step() is None
+    mon.start_step()
+    time.sleep(0.08)
+    flag = mon.end_step()
+    assert flag is not None and flag["dt"] > 2 * flag["median"]
+
+
+def test_heartbeat(tmp_path):
+    hb = Heartbeat(str(tmp_path / "hb.json"), interval_s=0.0)
+    hb.beat(3)
+    assert os.path.exists(tmp_path / "hb.json")
+
+
+def test_run_with_restarts(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    calls = []
+
+    def make_state(resume):
+        calls.append(resume)
+        return {"resume": resume}
+
+    def run(state):
+        if state["resume"] is None:
+            store.save(10, {"x": jnp.ones(2)})
+            raise RuntimeError("simulated node failure")
+        assert state["resume"] == 10
+
+    run_with_restarts(make_state, run, store,
+                      RestartPolicy(max_restarts=3, backoff_s=0.0))
+    assert calls == [None, 10]

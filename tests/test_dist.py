@@ -1,0 +1,210 @@
+"""Multi-device distribution tests.  Each test body runs in a
+subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8 so
+the rest of the suite keeps seeing one device."""
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+
+def _run(body: str):
+    code = ("import os\n"
+            "os.environ['XLA_FLAGS']="
+            "'--xla_force_host_platform_device_count=8'\n"
+            + textwrap.dedent(body))
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=600,
+                       env={**__import__('os').environ,
+                            "PYTHONPATH": "src"})
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def test_distributed_flash_decode_matches_local():
+    _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.dist.decode import sharded_flash_decode
+    from repro.models.attention import decode_attend_local
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    key = jax.random.PRNGKey(0)
+    B, T, KV, Dh, H = 2, 64, 2, 16, 4
+    q = jax.random.normal(key, (B, H, Dh))
+    ck = jax.random.normal(key, (B, T, KV, Dh))
+    cv = jax.random.normal(key, (B, T, KV, Dh))
+    # flatten kv heads into q-heads for the shard_map path (MHA view)
+    qm = q
+    want = decode_attend_local(q, ck, cv, jnp.arange(T), jnp.int32(50))
+    got = sharded_flash_decode(mesh, q, ck, cv, jnp.int32(50))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    print("ok")
+    """)
+
+
+def test_pipeline_matches_sequential():
+    _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.dist.pipeline import pipeline_apply
+
+    mesh = jax.make_mesh((4,), ("pipe",))
+    S, n_micro, mb, D = 4, 8, 4, 16
+    key = jax.random.PRNGKey(1)
+    stage_w = jax.random.normal(key, (S, D, D)) / (D ** 0.5)
+    x = jax.random.normal(key, (n_micro * mb, D))
+
+    def stage_fn(w, xb):
+        return jnp.tanh(xb @ w)
+
+    got = pipeline_apply(mesh, stage_fn, stage_w, x, n_micro=n_micro)
+    want = x
+    for s in range(S):
+        want = stage_fn(stage_w[s], want)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    print("ok")
+    """)
+
+
+def test_compressed_psum_close_and_error_feedback():
+    _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as PS
+    from repro.dist.compression import compressed_psum
+
+    mesh = jax.make_mesh((8,), ("data",))
+    g = jax.random.normal(jax.random.PRNGKey(0), (8, 256))
+    err0 = jnp.zeros((8, 256))
+
+    def local(g, e):
+        out, e2 = compressed_psum(g, e, "data", 8)
+        return out, e2
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(PS("data"), PS("data")),
+                   out_specs=(PS("data"), PS("data")))
+    got, err = fn(g, err0)
+    want = jnp.mean(g, axis=0, keepdims=True)      # psum/8 per shard
+    # int8 quantization: close but not exact; error feedback captures
+    # the residual
+    assert float(jnp.abs(np.asarray(got) - want).max()) < 0.05
+    assert float(jnp.abs(err).max()) > 0            # nonzero residual
+    # two-step: applying feedback shrinks accumulated bias
+    got2, _ = fn(g, err)
+    two_step = (np.asarray(got) + np.asarray(got2)) / 2
+    assert float(abs(two_step - np.asarray(want)).max()) <= \
+        float(abs(np.asarray(got) - np.asarray(want)).max()) + 1e-6
+    print("ok")
+    """)
+
+
+def test_sharded_train_step_runs_and_matches_single():
+    """A reduced arch trains one step on a (2,4) mesh; loss equals the
+    single-device loss (GSPMD semantics preserved)."""
+    _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config, reduced
+    from repro.dist import sharding as SH
+    from repro.launch.steps import build_train_step
+    from repro.models import lm
+    from repro.optim import adamw
+
+    cfg = reduced(get_config("olmoe-1b-7b"))
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    key = jax.random.PRNGKey(0)
+    B, S = 4, 32
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens,
+             "loss_mask": jnp.ones((B, S), jnp.float32)}
+
+    params = lm.init(cfg, key)
+    loss_single, _ = lm.train_loss(params, batch, cfg)
+
+    opt_cfg = adamw.OptConfig()
+    step = build_train_step(cfg, opt_cfg)
+    shardings = SH.to_shardings(mesh, SH.param_pspecs(cfg, mesh))
+    with mesh:
+        p_sh = jax.device_put(params, shardings)
+        opt = adamw.init(opt_cfg, p_sh)
+        p2, opt2, metrics = jax.jit(step)(p_sh, opt, batch)
+    np.testing.assert_allclose(float(metrics["loss"]),
+                               float(loss_single), rtol=1e-4)
+    print("ok", float(metrics["loss"]))
+    """)
+
+
+def test_zero1_pspecs_shard_replicated_dims():
+    _run("""
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as PS
+    from repro.optim import adamw
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    pspecs = {"w": PS(None, "model"), "b": PS(None)}
+    avals = {"w": jax.ShapeDtypeStruct((64, 32), jnp.float32),
+             "b": jax.ShapeDtypeStruct((64,), jnp.float32)}
+    z = adamw.zero1_pspecs(pspecs, avals, mesh)
+    assert z["w"] == PS("data", "model"), z["w"]
+    assert z["b"] == PS("data"), z["b"]
+    print("ok")
+    """)
+
+
+def test_elastic_restore_across_mesh_shapes(tmp_path):
+    """Save on a (2,4) mesh, restore onto (8,1) and 1-device — the
+    elastic re-shard path."""
+    _run(f"""
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as PS
+    from repro.checkpoint import CheckpointStore
+
+    store = CheckpointStore({str(tmp_path)!r})
+    mesh1 = jax.make_mesh((2, 4), ("data", "model"))
+    x = jnp.arange(64.0 * 32).reshape(64, 32)
+    xs = jax.device_put(x, NamedSharding(mesh1, PS("data", "model")))
+    store.save(1, {{"x": xs}})
+
+    mesh2 = jax.make_mesh((8, 1), ("data", "model"))
+    tgt = {{"x": jax.ShapeDtypeStruct((64, 32), jnp.float32)}}
+    sh2 = {{"x": NamedSharding(mesh2, PS("model", "data"))}}
+    out = store.restore(1, tgt, sh2)
+    np.testing.assert_array_equal(np.asarray(out["x"]), np.asarray(x))
+    out1 = store.restore(1, tgt)
+    np.testing.assert_array_equal(np.asarray(out1["x"]), np.asarray(x))
+    print("ok")
+    """)
+
+
+def test_hlo_collective_parser_counts_scan_trips():
+    """all-gather inside a scan body is multiplied by the trip count."""
+    _run("""
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as PS
+    from repro.launch import hlo_analysis
+
+    mesh = jax.make_mesh((8,), ("model",))
+    W = jax.ShapeDtypeStruct((10, 64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((4, 64), jnp.float32)
+
+    def f(x, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, x, ws)
+        return out
+
+    with mesh:
+        comp = jax.jit(
+            f, in_shardings=(NamedSharding(mesh, PS()),
+                             NamedSharding(mesh, PS(None, None, "model")))
+        ).lower(x, W).compile()
+    total, kinds = hlo_analysis.collective_bytes(comp.as_text())
+    # GSPMD chooses to all-gather the small (4,64) carry activation
+    # inside the loop body (cheaper than gathering weights): the parser
+    # must multiply it by the 10 while trips
+    per_trip = 4 * 64 * 4
+    assert total >= 10 * per_trip, (total, kinds)
+    assert total < 10 * per_trip * 4, (total, kinds)
+    print("ok", total, kinds)
+    """)

@@ -1,0 +1,130 @@
+"""Machine/energy model tests (eq. 1-2, Fig. 2b, Table 1) + ISA
+invariants (hypothesis)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import isa, machine
+from repro.core.machine import (PAPER_EXAMPLE, ProvetConfig,
+                                aspect_ratio_sweep, crossbar_cost,
+                                shuffler_cost, sram_bit_energy_fj,
+                                sram_word_energy_fj)
+
+
+def test_eq2_per_bit_energy_drops_with_width():
+    """Fig. 2b: at fixed capacity, wider+shallower => cheaper per bit."""
+    cap = 64 * 1024 * 8
+    sweep = aspect_ratio_sweep(cap)
+    widths = sorted(sweep)
+    es = [sweep[w]["e_per_bit_fj"] for w in widths]
+    assert all(a > b for a, b in zip(es, es[1:]))
+    bws = [sweep[w]["bw_bits_per_cycle"] for w in widths]
+    assert all(a < b for a, b in zip(bws, bws[1:]))
+
+
+def test_eq1_eq2_consistency():
+    for w in (128, 1024, 4096):
+        for d in (1, 8, 32):
+            assert abs(sram_word_energy_fj(w, d) / w
+                       - sram_bit_energy_fj(w, d)) < 1e-9
+
+
+def test_table1_shuffler_vs_crossbar():
+    """Table 1: gates 16k vs 86k (x5.38), area 0.13 vs 0.88 mm^2
+    (x6.82), wire 4.3 vs 33.1 mm (x7.67) at the inferred config."""
+    n = machine.PAPER_TABLE1_ENDPOINTS
+    r = machine.PAPER_TABLE1_REACH
+    sh = shuffler_cost(n, r)
+    xb = crossbar_cost(n)
+    assert abs(sh["gates"] - 16e3) / 16e3 < 0.1
+    assert abs(xb["gates"] - 86e3) / 86e3 < 0.1
+    assert abs(sh["wire_mm"] - 4.3) / 4.3 < 0.15
+    assert abs(xb["wire_mm"] - 33.1) / 33.1 < 0.15
+    assert 4.5 < xb["gates"] / sh["gates"] < 7.0
+    assert 5.0 < xb["area_mm2"] / sh["area_mm2"] < 8.0
+    assert 6.0 < xb["wire_mm"] / sh["wire_mm"] < 9.0
+
+
+def test_width_ratio_semantics():
+    cfg = ProvetConfig(sram_width=512, vfu_width=64, n_vfus=1)
+    assert cfg.width_ratio == 8
+    cfg = ProvetConfig(sram_width=512, vfu_width=64, n_vfus=4)
+    assert cfg.width_ratio == 2
+
+
+@settings(max_examples=20, deadline=None)
+@given(shift=st.integers(-8, 8), seed=st.integers(0, 100))
+def test_perm_shift_invertible(shift, seed):
+    cfg = ProvetConfig(vfu_shuffle_range=8)
+    m = isa.ProvetMachine(cfg)
+    rng = np.random.default_rng(seed)
+    vals = rng.standard_normal((1, cfg.vfu_width)).astype(np.float32)
+    m.regs["R1"] = vals.copy()
+    m.step(isa.PERM(src="R1", dst="R2", shift=shift))
+    m.step(isa.PERM(src="R2", dst="R3", shift=-shift))
+    k = abs(shift)
+    if shift >= 0:
+        np.testing.assert_array_equal(m.regs["R3"][0, : cfg.vfu_width - k],
+                                      vals[0, : cfg.vfu_width - k])
+    else:
+        np.testing.assert_array_equal(m.regs["R3"][0, k:], vals[0, k:])
+
+
+@settings(max_examples=20, deadline=None)
+@given(row=st.integers(0, 31), seed=st.integers(0, 100))
+def test_rlb_wlb_roundtrip(row, seed):
+    cfg = ProvetConfig()
+    m = isa.ProvetMachine(cfg)
+    rng = np.random.default_rng(seed)
+    data = rng.standard_normal(cfg.sram_width).astype(np.float32)
+    m.sram[row] = data
+    m.step(isa.RLB(vwr=0, row=row))
+    m.step(isa.WLB(vwr=0, row=(row + 1) % cfg.sram_depth))
+    np.testing.assert_array_equal(m.sram[(row + 1) % cfg.sram_depth],
+                                  data)
+    assert m.c.sram_reads == 1 and m.c.sram_writes == 1
+    assert m.c.cycles == 2
+    assert m.c.energy_fj > 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(shift=st.integers(-8, 8), seed=st.integers(0, 50))
+def test_glmv_roll(shift, seed):
+    cfg = ProvetConfig(tile_shuffle_range=8)
+    m = isa.ProvetMachine(cfg)
+    rng = np.random.default_rng(seed)
+    data = rng.standard_normal(cfg.sram_width).astype(np.float32)
+    m.vwr[0] = data
+    m.step(isa.GLMV(vwr=0, block_shift=shift))
+    np.testing.assert_array_equal(
+        m.vwr[0], np.roll(data, shift * cfg.vfu_width))
+
+
+def test_vfux_modes():
+    cfg = ProvetConfig()
+    m = isa.ProvetMachine(cfg)
+    a = np.linspace(-2, 2, cfg.vfu_width, dtype=np.float32)[None]
+    b = np.full((1, cfg.vfu_width), 0.5, np.float32)
+    m.regs["R1"], m.regs["R4"] = a.copy(), b.copy()
+    m.step(isa.VFUX(mode="mult", in1="R1", in2="R4", out="R2"))
+    np.testing.assert_allclose(m.regs["R2"], a * b)
+    m.step(isa.VFUX(mode="relu", in1="R1", out="R2"))
+    np.testing.assert_allclose(m.regs["R2"], np.maximum(a, 0))
+    m.step(isa.VFUX(mode="mac", in1="R1", in2="R4", out="R3", acc="R3"))
+    np.testing.assert_allclose(m.regs["R3"], a * b, rtol=1e-6)
+    m.step(isa.VFUX(mode="sigmoid", in1="R1", out="R2"))
+    np.testing.assert_allclose(m.regs["R2"], 1 / (1 + np.exp(-a)),
+                               rtol=1e-5)
+    assert m.c.compute_instrs == 4
+
+
+def test_energy_accounting_monotone():
+    """Wide SRAM accesses dominate VWR accesses in the energy ledger —
+    the hierarchy-cost ordering the paper's design relies on."""
+    cfg = PAPER_EXAMPLE
+    m = isa.ProvetMachine(cfg)
+    m.step(isa.RLB(vwr=0, row=0))
+    e_sram = m.c.energy_fj
+    m2 = isa.ProvetMachine(cfg)
+    m2.step(isa.VMV(vwr=0, slice_idx=0, dst="R1"))
+    e_vwr = m2.c.energy_fj
+    assert e_sram > 5 * e_vwr
