@@ -31,7 +31,10 @@ def main() -> None:
         ("fig2b_sram_energy", fig2b_sram_energy),
         ("table1_shuffler_cost", table1_shuffler_cost),
         ("conv_isa_demo", conv_isa_demo),
-        ("kernel_microbench", kernel_microbench),
+        # perf trajectory across PRs: op, shape, us, staged bytes,
+        # arithmetic intensity per kernel variant
+        ("kernel_microbench",
+         lambda: kernel_microbench(json_path="BENCH_kernels.json")),
         ("roofline_table_baseline", roofline_table),
         ("roofline_table_optimized",
          lambda: roofline_table("artifacts/dryrun_opt")

@@ -31,7 +31,9 @@ import numpy as np
 
 
 def _leaf_paths(tree) -> Dict[str, Any]:
-    flat = jax.tree.flatten_with_path(tree)[0]
+    # jax.tree.flatten_with_path only exists on newer jax; the
+    # tree_util spelling works on every version we support.
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     out = {}
     for path, leaf in flat:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))

@@ -105,6 +105,14 @@ class ModelConfig:
     # 'ddp'     = both mesh axes are data; params ZeRO-sharded over all
     #             (right choice for sub-1B archs on a 256-chip mesh)
     sharding_strategy: str = "fsdp_tp"
+    # 'xla'    = einsum/blockwise reference formulations (default; the
+    #            path GSPMD shards and the dry-run lowers)
+    # 'pallas' = VWR Pallas kernels with fused epilogues + zero-copy
+    #            GQA + autotuned block sizes (single-device / Mosaic;
+    #            see repro.kernels.ops).  FORWARD-ONLY: the kernels
+    #            define no VJP yet, so this path serves prefill /
+    #            decode / eval; lm.train_loss rejects it.
+    kernel_impl: str = "xla"
     dtype: str = "bfloat16"
     remat: str = "full"            # full | dots | none
     scan_layers: bool = True

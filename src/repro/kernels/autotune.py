@@ -1,0 +1,279 @@
+"""Block-size autotuner for the VWR Pallas kernels.
+
+The paper's knob is the access-width ratio N: one ultra-wide SRAM/VWR
+fill feeding N narrow VFU reads (§4.1).  Our kernels expose the same
+knob as static block sizes — (bm, bk, bn) for the matmul, (bq, bkv)
+for attention — and the right setting depends on the shape: small
+problems want small blocks (padding waste), large problems want the
+widest blocks VMEM can hold (arithmetic intensity).
+
+This module picks the blocks per call shape:
+
+  1. *prior*: every legal candidate is scored with the paper's
+     width-ratio/arithmetic-intensity cost model — a roofline time
+     estimate t = max(flops / PEAK_FLOPS, staged_bytes / HBM_BW)
+     (constants from ``launch.roofline``) with the per-bit staging
+     energy of ``core.machine.sram_bit_energy_fj`` as the tie-breaker
+     (wider transactions are cheaper per bit, eq. 2 / Fig. 2b);
+  2. *measure*: the top prior candidates are timed with the real
+     kernel (interpret mode on CPU, Mosaic on TPU);
+  3. *persist*: the winner lands in a JSON cache keyed by
+     (op, shape, dtype, backend) that ``ops`` consults on every call —
+     a process restart re-reads the file instead of re-measuring.
+
+Environment knobs:
+  REPRO_AUTOTUNE=0        disable: cost-model prior only, no cache I/O
+  REPRO_AUTOTUNE_CACHE    cache file (default ~/.cache/repro/autotune.json)
+  REPRO_AUTOTUNE_TOPK     candidates measured per miss (default 3)
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import tempfile
+import time
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+from repro.core.machine import sram_bit_energy_fj
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+
+DEFAULT_BLOCKS = {
+    "matmul": (256, 512, 256),
+    "attention": (256, 512),
+}
+
+# VMEM working-set budget per grid step (bytes).  Real v5e VMEM is
+# 128 MiB/core but blocks also need double-buffering headroom.
+VMEM_BUDGET = 12 * 1024 * 1024
+
+# in-memory mirror of the JSON file: {path: {key: entry}}
+_MEM: Dict[str, Dict[str, dict]] = {}
+
+stats = {"hits": 0, "misses": 0, "measured": 0}
+
+
+def enabled() -> bool:
+    return os.environ.get("REPRO_AUTOTUNE", "1") != "0"
+
+
+def cache_path() -> str:
+    return os.environ.get(
+        "REPRO_AUTOTUNE_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                     "autotune.json"))
+
+
+def cache_key(op: str, shape: Sequence[int], dtype: str,
+              backend: str) -> str:
+    return f"{op}|{'x'.join(str(int(s)) for s in shape)}|{dtype}|{backend}"
+
+
+def reset() -> None:
+    """Drop the in-memory cache mirror and zero the stats (tests)."""
+    _MEM.clear()
+    for k in stats:
+        stats[k] = 0
+
+
+def _load(path: str) -> Dict[str, dict]:
+    if path not in _MEM:
+        try:
+            with open(path) as f:
+                _MEM[path] = json.load(f)
+        except (OSError, ValueError):
+            _MEM[path] = {}
+    return _MEM[path]
+
+
+def _persist(path: str, table: Dict[str, dict]) -> None:
+    _MEM[path] = table
+    try:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        # merge-with-disk then atomic replace: concurrent processes
+        # tuning different shapes don't clobber each other's wins
+        on_disk: Dict[str, dict] = {}
+        try:
+            with open(path) as f:
+                on_disk = json.load(f)
+        except (OSError, ValueError):
+            pass
+        on_disk.update(table)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                                   suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump(on_disk, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+        _MEM[path] = on_disk
+    except OSError:
+        pass                     # read-only FS: in-memory cache still works
+
+
+# ======================================================================
+# candidate generation + width-ratio cost prior
+# ======================================================================
+
+def _pow2s(lo: int, hi: int, cap: int) -> Tuple[int, ...]:
+    """Powers of two in [lo, min(hi, cap)] — pure powers of two so any
+    two candidates nest (bq/bkv constraint) and blocks stay aligned to
+    Mosaic's tiling on real TPUs.  A shape smaller than ``lo`` still
+    yields (lo,): ops pads inputs up to block multiples, so oversized
+    blocks cost padding, not correctness."""
+    out = []
+    b = lo
+    while b <= min(hi, cap):
+        out.append(b)
+        b *= 2
+    return tuple(out) if out else (lo,)
+
+
+def _dtype_bytes(dtype: str) -> int:
+    return 2 if "16" in dtype else 4
+
+
+# fixed staging-buffer capacity for the energy tie-break: widening the
+# transaction at fixed capacity makes it shallower, and eq. (2)'s
+# per-bit energy D*BL + WL falls with depth D — the Fig. 2b monotone.
+_STAGE_CAP_BITS = 1 << 20
+
+
+def _stage_energy_fj_per_bit(width_bits: int) -> float:
+    w = max(128, min(width_bits, 8192))
+    return sram_bit_energy_fj(w, max(1, _STAGE_CAP_BITS // w))
+
+
+def matmul_candidates(M: int, K: int, N: int, dtype: str
+                      ) -> Tuple[Tuple[int, int, int], ...]:
+    dt = _dtype_bytes(dtype)
+    cands = []
+    for bm in _pow2s(32, 256, max(32, M)):
+        for bk in _pow2s(64, 512, max(64, K)):
+            for bn in _pow2s(32, 256, max(32, N)):
+                # staged LHS/RHS + dtype output block + fp32 accumulator
+                vmem = (bm * bk + bk * bn + bm * bn) * dt + bm * bn * 4
+                if vmem <= VMEM_BUDGET:
+                    cands.append((bm, bk, bn))
+    return tuple(cands)
+
+
+def matmul_prior(M: int, K: int, N: int, dtype: str,
+                 cand: Tuple[int, int, int]) -> Tuple[float, float]:
+    """(roofline time estimate, per-bit staging energy) — sorted
+    lexicographically, so energy breaks compute-bound ties in favour
+    of the wider transaction (the paper's eq. 2 monotonicity)."""
+    bm, bk, bn = cand
+    dt = _dtype_bytes(dtype)
+    nm, nn, nk = (math.ceil(M / bm), math.ceil(N / bn), math.ceil(K / bk))
+    # padded-problem flops: padding waste is what penalizes oversized
+    # blocks on small shapes
+    flops = 2.0 * (nm * bm) * (nk * bk) * (nn * bn)
+    staged = nm * nn * nk * (bm * bk + bk * bn) * dt + nm * nn * bm * bn * dt
+    t = max(flops / PEAK_FLOPS, staged / HBM_BW)
+    # wide-transaction width = one staged LHS row (bk operands)
+    e_bit = _stage_energy_fj_per_bit(bk * dt * 8)
+    return (t, e_bit)
+
+
+def attention_candidates(S: int, D: int, dtype: str, causal: bool = True
+                         ) -> Tuple[Tuple[int, int], ...]:
+    dt = _dtype_bytes(dtype)
+    cands = []
+    for bq in _pow2s(64, 512, max(64, S)):
+        for bkv in _pow2s(64, 1024, max(64, S)):
+            big, small = max(bq, bkv), min(bq, bkv)
+            if big % small:                 # bq/bkv must nest (ops pads
+                continue                    # to the larger of the two)
+            if not causal and S % big:      # non-causal can't mask away
+                continue                    # kv padding
+            # q block + k/v blocks + fp32 acc/p scratch
+            vmem = (bq * D + 2 * bkv * D) * dt \
+                + (bq * D + bq * bkv + 2 * bq) * 4
+            if vmem <= VMEM_BUDGET:
+                cands.append((bq, bkv))
+    if not causal and not cands:
+        # ragged S with no divisible power-of-two: the clamped (S, S)
+        # single-block pair is the one shape-agnostic legal config
+        # (the pre-autotuner default behavior of min(block, S)) — but
+        # only while it still fits the VMEM budget; past that there is
+        # genuinely no legal block and the caller gets the loud
+        # "no legal block candidates" error
+        vmem = 3 * S * D * dt + (S * D + S * S + 2 * S) * 4
+        if vmem <= VMEM_BUDGET:
+            cands.append((S, S))
+    return tuple(cands)
+
+
+def attention_prior(B: int, S: int, H: int, KV: int, D: int, dtype: str,
+                    cand: Tuple[int, int]) -> Tuple[float, float]:
+    bq, bkv = cand
+    dt = _dtype_bytes(dtype)
+    nq, nk = math.ceil(S / bq), math.ceil(S / bkv)
+    Sp = max(nq * bq, nk * bkv)
+    nq, nk = Sp // bq, Sp // bkv
+    BH = B * H
+    flops = BH * nq * nk * (2.0 * bq * bkv * D * 2)       # qk + pv
+    # q staged once per q block + output store; K/V blocks are
+    # re-fetched for every (head, q-block, kv-block) grid step — the
+    # zero-copy GQA layout shrinks the HBM *footprint* by G, not the
+    # per-grid-step DMA count, so no G division here
+    staged = BH * nq * bq * D * dt \
+        + BH * nq * nk * 2 * bkv * D * dt \
+        + BH * nq * bq * D * dt
+    t = max(flops / PEAK_FLOPS, staged / HBM_BW)
+    e_bit = _stage_energy_fj_per_bit(bkv * dt * 8)
+    return (t, e_bit)
+
+
+# ======================================================================
+# tune-or-lookup driver
+# ======================================================================
+
+def _measure(run: Callable[[], None], reps: int = 3) -> float:
+    run()                                        # warmup: compile/trace
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        run()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def get_blocks(op: str, shape: Sequence[int], dtype: str, backend: str,
+               candidates: Sequence[Tuple[int, ...]],
+               prior: Callable[[Tuple[int, ...]], Tuple[float, float]],
+               runner: Optional[Callable[[Tuple[int, ...]], Callable]],
+               ) -> Tuple[int, ...]:
+    """Cache lookup -> (on miss) prior-ranked measurement -> persist.
+
+    ``runner(cand)`` returns a zero-arg callable executing the kernel
+    at that candidate (or None to skip measurement and trust the
+    prior — used when REPRO_AUTOTUNE=0)."""
+    if not candidates:
+        raise ValueError(f"no legal block candidates for {op} {shape}")
+    if not enabled() or runner is None:
+        return min(candidates, key=prior)
+
+    path = cache_path()
+    table = _load(path)
+    key = cache_key(op, shape, dtype, backend)
+    hit = table.get(key)
+    if hit is not None:
+        stats["hits"] += 1
+        return tuple(hit["blocks"])
+
+    stats["misses"] += 1
+    ranked = sorted(candidates, key=prior)
+    topk = int(os.environ.get("REPRO_AUTOTUNE_TOPK", "3"))
+    best, best_us, n_measured = None, float("inf"), 0
+    for cand in ranked[:max(1, topk)]:
+        us = _measure(runner(cand))
+        stats["measured"] += 1
+        n_measured += 1
+        if us < best_us:
+            best, best_us = cand, us
+    t_prior, e_bit = prior(best)
+    table[key] = {
+        "blocks": list(best), "us": best_us,
+        "prior_t_s": t_prior, "prior_e_fj_per_bit": e_bit,
+        "measured": n_measured,
+    }
+    _persist(path, table)
+    return best

@@ -1,8 +1,16 @@
-"""Public jit'd wrappers for the VWR Pallas kernels.
+"""Public wrappers for the VWR Pallas kernels.
 
-Handles shape padding to block multiples, GQA head expansion, and
-interpret-mode selection (CPU containers validate kernels with
-``interpret=True``; on real TPU the same calls compile to Mosaic).
+Handles shape padding to block multiples, zero-copy GQA head routing,
+fused epilogues (bias / activation / residual inside the matmul's
+final-K store), block-size autotuning (``repro.kernels.autotune``, a
+JSON cache keyed by op/shape/dtype/backend consulted on every call
+when block sizes are not pinned), and interpret-mode selection (CPU
+containers validate kernels with ``interpret=True``; on real TPU the
+same calls compile to Mosaic).
+
+Each public op is a thin Python wrapper (block-size resolution happens
+at trace time) around a jitted implementation, so calls from inside
+jitted model code inline cleanly.
 """
 from __future__ import annotations
 
@@ -11,6 +19,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune
 from repro.kernels.vwr_attention import vwr_attention_p
 from repro.kernels.vwr_conv2d import vwr_conv2d_p
 from repro.kernels.vwr_depthwise import vwr_depthwise_p
@@ -23,6 +32,16 @@ def _auto_interpret(interpret):
     return interpret
 
 
+def _backend_tag(interpret: bool) -> str:
+    """Cache key component: measured winners are per-hardware, so the
+    tag carries the device kind (v5e vs v6e tune differently), not
+    just the platform name."""
+    if interpret:
+        return "interp"
+    kind = jax.devices()[0].device_kind.replace(" ", "_")
+    return f"{jax.default_backend()}:{kind}"
+
+
 def _pad_dim(x, axis, mult):
     pad = (-x.shape[axis]) % mult
     if pad == 0:
@@ -32,18 +51,78 @@ def _pad_dim(x, axis, mult):
     return jnp.pad(x, widths)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
-def vwr_matmul(x, w, *, bm=256, bk=512, bn=256, interpret=None):
-    """x: (M, K) @ w: (K, N) with arbitrary shapes (padded internally)."""
-    interpret = _auto_interpret(interpret)
+# ======================================================================
+# matmul (+ fused epilogue)
+# ======================================================================
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn",
+                                             "activation", "interpret"))
+def _vwr_matmul_jit(x, w, bias, residual, *, bm, bk, bn, activation,
+                    interpret):
     M, K = x.shape
     N = w.shape[1]
     bm_, bk_, bn_ = (min(bm, M) if M else bm, min(bk, K), min(bn, N))
     xp = _pad_dim(_pad_dim(x, 0, bm_), 1, bk_)
     wp = _pad_dim(_pad_dim(w, 0, bk_), 1, bn_)
-    out = vwr_matmul_p(xp, wp, bm=bm_, bk=bk_, bn=bn_, interpret=interpret)
+    bp = None if bias is None else _pad_dim(bias.reshape(1, N), 1, bn_)
+    rp = None if residual is None else _pad_dim(
+        _pad_dim(residual, 0, bm_), 1, bn_)
+    out = vwr_matmul_p(xp, wp, bp, rp, bm=bm_, bk=bk_, bn=bn_,
+                       activation=activation, interpret=interpret)
     return out[:M, :N]
 
+
+def vwr_matmul(x, w, bias=None, residual=None, *, activation=None,
+               bm=None, bk=None, bn=None, interpret=None):
+    """``act(x @ w + bias) + residual`` in one kernel pass.
+
+    x: (M, K) @ w: (K, N), arbitrary shapes (padded internally).
+    bias: (N,) or (1, N); residual: (M, N); activation in
+    {None, 'relu', 'gelu', 'silu'} — all applied to the fp32
+    accumulator inside the final-K store (no extra HBM round-trip).
+    With all of bm/bk/bn unspecified the autotuner resolves them
+    (cost-model prior + measured winners cached in a JSON file);
+    pinning any subset keeps the pins and fills the rest from the
+    static defaults (a pinned knob is a deliberate experiment — the
+    tuner must not override it)."""
+    interpret = _auto_interpret(interpret)
+    M, K = x.shape
+    N = w.shape[1]
+    if bm is None and bk is None and bn is None:
+        bm, bk, bn = _matmul_blocks(M, K, N, str(x.dtype), interpret)
+    else:
+        d_bm, d_bk, d_bn = autotune.DEFAULT_BLOCKS["matmul"]
+        bm = d_bm if bm is None else bm
+        bk = d_bk if bk is None else bk
+        bn = d_bn if bn is None else bn
+    return _vwr_matmul_jit(x, w, bias, residual, bm=bm, bk=bk, bn=bn,
+                           activation=activation, interpret=interpret)
+
+
+def _matmul_blocks(M, K, N, dtype, interpret):
+    backend = _backend_tag(interpret)
+
+    def runner(cand):
+        bm, bk, bn = cand
+        xz = jnp.ones((M, K), jnp.dtype(dtype))
+        wz = jnp.ones((K, N), jnp.dtype(dtype))
+
+        def run():
+            jax.block_until_ready(_vwr_matmul_jit(
+                xz, wz, None, None, bm=bm, bk=bk, bn=bn,
+                activation=None, interpret=interpret))
+        return run
+
+    return autotune.get_blocks(
+        "matmul", (M, K, N), dtype, backend,
+        candidates=autotune.matmul_candidates(M, K, N, dtype),
+        prior=lambda c: autotune.matmul_prior(M, K, N, dtype, c),
+        runner=runner if autotune.enabled() else None)
+
+
+# ======================================================================
+# conv
+# ======================================================================
 
 @functools.partial(jax.jit, static_argnames=("bh", "bf", "interpret"))
 def vwr_conv2d(x, w, *, bh=8, bf=128, interpret=None):
@@ -77,24 +156,23 @@ def vwr_depthwise(x, w, *, bh=8, interpret=None):
     return out[:, :H_out]
 
 
+# ======================================================================
+# attention (zero-copy GQA)
+# ======================================================================
+
 @functools.partial(jax.jit,
                    static_argnames=("causal", "bq", "bkv", "interpret"))
-def vwr_attention(q, k, v, *, causal=True, bq=256, bkv=512, interpret=None):
-    """q: (B,S,H,D); k,v: (B,S,KV,D) (GQA: KV divides H). Causal masks
-    use true positions, so KV-padding to block multiples is masked out
-    by construction only for causal=True; for causal=False we pad K
-    with -inf-free zeros and rely on the softmax of -1e30... instead we
-    require S % bkv == 0 for causal=False (asserted)."""
-    interpret = _auto_interpret(interpret)
+def _vwr_attention_jit(q, k, v, *, causal, bq, bkv, interpret):
     B, S, H, D = q.shape
     KV = k.shape[2]
     G = H // KV
-    if G > 1:
-        k = jnp.repeat(k, G, axis=2)
-        v = jnp.repeat(v, G, axis=2)
+    # zero-copy GQA: K/V keep their native KV-head count; the kernel's
+    # BlockSpec index map (b // G) routes each query head to its
+    # group's shared KV head — no jnp.repeat materialization, so the
+    # staged / resident K/V bytes are 1/G of the head-expanded layout
     qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
-    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, D)
-    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, S, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, S, D)
 
     bq_ = min(bq, S)
     bkv_ = min(bkv, S)
@@ -109,6 +187,51 @@ def vwr_attention(q, k, v, *, causal=True, bq=256, bkv=512, interpret=None):
     vf = _pad_dim(vf, 1, big)
 
     out = vwr_attention_p(qf, kf, vf, causal=causal, bq=bq_, bkv=bkv_,
-                          interpret=interpret)
+                          g=G, interpret=interpret)
     out = out[:, :S].reshape(B, H, S, D).transpose(0, 2, 1, 3)
     return out
+
+
+def vwr_attention(q, k, v, *, causal=True, bq=None, bkv=None,
+                  interpret=None):
+    """q: (B,S,H,D); k,v: (B,S,KV,D) (GQA: KV divides H, served
+    zero-copy).  Causal masks use true positions, so KV-padding to
+    block multiples is masked out by construction for causal=True; for
+    causal=False we require S % block == 0 (asserted).  With both
+    bq/bkv unspecified the autotuner resolves them; pinning one keeps
+    the pin and mirrors it onto the other (equal blocks always satisfy
+    the nesting constraint, whatever S clamps them to)."""
+    interpret = _auto_interpret(interpret)
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    if bq is None and bkv is None:
+        bq, bkv = _attention_blocks(B, S, H, KV, D, str(q.dtype), causal,
+                                    interpret)
+    elif bq is None:
+        bq = bkv          # mirror the pin: equal blocks always nest,
+    elif bkv is None:     # whatever S clamps them to
+        bkv = bq
+    return _vwr_attention_jit(q, k, v, causal=causal, bq=bq, bkv=bkv,
+                              interpret=interpret)
+
+
+def _attention_blocks(B, S, H, KV, D, dtype, causal, interpret):
+    backend = _backend_tag(interpret)
+    op = "attention_causal" if causal else "attention_full"
+
+    def runner(cand):
+        bq, bkv = cand
+        qz = jnp.ones((B, S, H, D), jnp.dtype(dtype))
+        kz = jnp.ones((B, S, KV, D), jnp.dtype(dtype))
+
+        def run():
+            jax.block_until_ready(_vwr_attention_jit(
+                qz, kz, kz, causal=causal, bq=bq, bkv=bkv,
+                interpret=interpret))
+        return run
+
+    return autotune.get_blocks(
+        op, (B, S, H, KV, D), dtype, backend,
+        candidates=autotune.attention_candidates(S, D, dtype, causal),
+        prior=lambda c: autotune.attention_prior(B, S, H, KV, D, dtype, c),
+        runner=runner if autotune.enabled() else None)

@@ -1,0 +1,42 @@
+"""Version compatibility shims for the Pallas TPU API.
+
+The TPU compiler-params dataclass was renamed across jax releases
+(``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams``) and its
+constructor signature has drifted; kernels only use it for
+``dimension_semantics``, so a best-effort builder keeps every kernel
+importable on any supported jax.
+"""
+from __future__ import annotations
+
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def tpu_compiler_params(*dimension_semantics: str):
+    """Returns a compiler-params object carrying ``dimension_semantics``,
+    or None when no compatible constructor exists (interpret mode and
+    older Mosaic lowerings accept None)."""
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams", None)
+    if cls is None:
+        return None
+    try:
+        return cls(dimension_semantics=tuple(dimension_semantics))
+    except TypeError:
+        return None
+
+
+def halo_block_spec(block_shape, index_map, halo_dim: int):
+    """BlockSpec for overlapping (halo'd) input windows, where
+    ``index_map`` returns ELEMENT offsets along ``halo_dim`` and the
+    remaining dims are either size-1 or full-extent (so block index ==
+    element offset for them).  Newer jax spells this ``pl.Element`` on
+    the halo dim; older jax uses whole-spec unblocked indexing — the
+    same index map is valid under both conventions."""
+    elem = getattr(pl, "Element", None)
+    if elem is not None:
+        shape = list(block_shape)
+        shape[halo_dim] = elem(block_shape[halo_dim])
+        return pl.BlockSpec(tuple(shape), index_map)
+    return pl.BlockSpec(block_shape, index_map,
+                        indexing_mode=pl.unblocked)

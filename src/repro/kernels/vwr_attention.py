@@ -1,4 +1,4 @@
-"""Flash-attention kernel with VWR-style wide KV staging.
+"""Flash-attention kernel with VWR-style wide KV staging + zero-copy GQA.
 
 Attention at long context is the LM-era version of the paper's
 streaming workload: the KV cache is read once per query block with
@@ -8,8 +8,16 @@ ultra-wide transaction), against which the resident query block runs
 two MXU matmuls and a running-softmax update whose fp32 accumulators
 (acc, m, l) live in VMEM scratch — the R1-R4 local registers of §4.3.5.
 
-q, k, v: (BH, S, D) flattened heads; causal optional.
-Grid: (BH, q-blocks, kv-blocks), kv innermost (sequential).
+GQA is zero-copy: K/V stay at their native (B*KV, S, D) shape in HBM
+and the K/V BlockSpec index map routes each of the G query heads in a
+group to the one shared KV head (block index ``b // g``).  No
+``jnp.repeat`` materialization — the HBM footprint and the staged
+bytes per distinct KV element drop by the group factor G, which is
+exactly the paper's access-ratio argument: one wide KV line serves G
+narrow consumers.
+
+q: (B*H, S, D); k, v: (B*KV, S, D) flattened heads; causal optional.
+Grid: (B*H, q-blocks, kv-blocks), kv innermost (sequential).
 """
 from __future__ import annotations
 
@@ -19,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pallas_compat import tpu_compiler_params
 
 NEG_INF = -1e30
 
@@ -70,26 +80,28 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
 def vwr_attention_p(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, bq: int = 256, bkv: int = 512,
-                    interpret: bool = False) -> jax.Array:
-    """q, k, v: (BH, S, D); S % bq == 0 and S % bkv == 0 (ops pads)."""
+                    g: int = 1, interpret: bool = False) -> jax.Array:
+    """q: (BH, S, D); k, v: (BH // g, S, D) — g query heads share each
+    KV head (zero-copy GQA; g=1 is plain MHA).  S % bq == 0 and
+    S % bkv == 0 (ops pads)."""
     BH, S, D = q.shape
+    BKV = k.shape[0]
+    assert BH == BKV * g and v.shape == k.shape
     assert S % bq == 0 and S % bkv == 0
     n_kv = S // bkv
     scale = 1.0 / (D ** 0.5)
     kernel = functools.partial(_attn_kernel, scale=scale, causal=causal,
                                bq=bq, bkv=bkv, n_kv=n_kv)
-    try:
-        params = pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"))
-    except TypeError:
-        params = None
     return pl.pallas_call(
         kernel,
         grid=(BH, S // bq, n_kv),
         in_specs=[
             pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, bkv, D), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, bkv, D), lambda b, i, j: (b, j, 0)),
+            # b // g: query head b reads its group's shared KV head —
+            # since g divides the per-batch head count, the flattened
+            # (batch*H + h) // g == batch*KV + h // g identity holds.
+            pl.BlockSpec((1, bkv, D), lambda b, i, j: (b // g, j, 0)),
+            pl.BlockSpec((1, bkv, D), lambda b, i, j: (b // g, j, 0)),
         ],
         out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
@@ -98,6 +110,7 @@ def vwr_attention_p(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, 1), jnp.float32),
         ],
-        compiler_params=params,
+        compiler_params=tpu_compiler_params(
+            "parallel", "parallel", "arbitrary"),
         interpret=interpret,
     )(q, k, v)

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import halo_block_spec, tpu_compiler_params
+
 
 def _conv_kernel(x_ref, w_ref, o_ref, *, KH, KW, bh, W_out):
     x = x_ref[0]                                   # (bh+KH-1, W, C)
@@ -49,17 +51,14 @@ def vwr_conv2d_p(x: jax.Array, w: jax.Array, *, bh: int = 8,
     assert H_out % bh == 0 and F % bf == 0, (H_out, bh, F, bf)
     kernel = functools.partial(_conv_kernel, KH=KH, KW=KW, bh=bh,
                                W_out=W_out)
-    try:
-        params = pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "parallel"))
-    except TypeError:
-        params = None
+    params = tpu_compiler_params("parallel", "parallel", "parallel")
     return pl.pallas_call(
         kernel,
         grid=(N, H_out // bh, F // bf),
         in_specs=[
-            pl.BlockSpec((1, pl.Element(bh + KH - 1), W, C),
-                         lambda n, r, f: (n, r * bh, 0, 0)),
+            halo_block_spec((1, bh + KH - 1, W, C),
+                            lambda n, r, f: (n, r * bh, 0, 0),
+                            halo_dim=1),
             pl.BlockSpec((KH, KW, C, bf), lambda n, r, f: (0, 0, 0, f)),
         ],
         out_specs=pl.BlockSpec((1, bh, W_out, bf),

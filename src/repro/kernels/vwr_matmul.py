@@ -1,4 +1,4 @@
-"""VWR-streamed matmul kernel (Pallas TPU).
+"""VWR-streamed matmul kernel (Pallas TPU) with fused epilogues.
 
 The TPU realization of the paper's asymmetric-port VWR (§4.1/§4.3.4):
 one HBM->VMEM DMA stages an ultra-wide (bm x bk) LHS block and a
@@ -11,6 +11,13 @@ the paper's access ratio.
 
 fp32 accumulation in a VMEM scratch across the K grid dimension
 (sequential innermost), bf16/fp32 inputs.
+
+Fused epilogue: ``bias`` add, ``activation`` (relu/gelu/silu), and a
+``residual`` add are applied to the fp32 accumulator inside the
+final-K store, so ``act(x @ w + bias) + residual`` costs exactly one
+HBM round-trip for the output — the won access-ratio is not thrown
+away on a second elementwise pass (the paper's §4.1 argument applied
+to the epilogue instead of the GEMM body).
 """
 from __future__ import annotations
 
@@ -21,8 +28,21 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import tpu_compiler_params
 
-def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+ACTIVATIONS = {
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+}
+
+
+def _matmul_kernel(x_ref, w_ref, *rest, n_k: int, has_bias: bool,
+                   has_res: bool, activation):
+    o_ref, acc_ref = rest[-2], rest[-1]
+    b_ref = rest[0] if has_bias else None
+    r_ref = rest[1 if has_bias else 0] if has_res else None
+
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -32,34 +52,53 @@ def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
 
     @pl.when(pl.program_id(2) == n_k - 1)
     def _store():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        out = acc_ref[...]
+        if has_bias:
+            out = out + b_ref[...].astype(jnp.float32)       # (1,bn) bcast
+        if activation is not None:
+            out = ACTIVATIONS[activation](out)
+        if has_res:
+            out = out + r_ref[...].astype(jnp.float32)
+        o_ref[...] = out.astype(o_ref.dtype)
 
 
-def vwr_matmul_p(x: jax.Array, w: jax.Array, *, bm: int = 256,
-                 bk: int = 512, bn: int = 256,
+def vwr_matmul_p(x: jax.Array, w: jax.Array, bias=None, residual=None, *,
+                 bm: int = 256, bk: int = 512, bn: int = 256,
+                 activation: str = None,
                  interpret: bool = False) -> jax.Array:
     """x: (M, K), w: (K, N) — M, K, N must divide the block sizes
-    (ops.vwr_matmul pads).  Returns (M, N) in x.dtype."""
+    (ops.vwr_matmul pads).  Optional fused epilogue on the final-K
+    store: bias (1, N), activation name, residual (M, N).  Returns
+    ``act(x @ w + bias) + residual`` as (M, N) in x.dtype."""
     M, K = x.shape
     K2, N = w.shape
     assert K == K2 and M % bm == 0 and K % bk == 0 and N % bn == 0
+    assert activation is None or activation in ACTIVATIONS, activation
     n_k = K // bk
-    kernel = functools.partial(_matmul_kernel, n_k=n_k)
-    try:
-        params = pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"))
-    except TypeError:          # older signature
-        params = None
+    kernel = functools.partial(
+        _matmul_kernel, n_k=n_k, has_bias=bias is not None,
+        has_res=residual is not None, activation=activation)
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+    ]
+    operands = [x, w]
+    if bias is not None:
+        assert bias.shape == (1, N), bias.shape
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, k: (0, j)))
+        operands.append(bias)
+    if residual is not None:
+        assert residual.shape == (M, N), residual.shape
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)))
+        operands.append(residual)
     return pl.pallas_call(
         kernel,
         grid=(M // bm, N // bn, n_k),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=params,
+        compiler_params=tpu_compiler_params(
+            "parallel", "parallel", "arbitrary"),
         interpret=interpret,
-    )(x, w)
+    )(*operands)

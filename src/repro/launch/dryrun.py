@@ -127,7 +127,11 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     # global shapes, no compile) -> exact global FLOPs with every layer
     # and chunk counted (cost_analysis counts while bodies once)
     try:
-        acfg = cfg.replace(scan_layers=False, accounting=True)
+        # kernel_impl is forced back to the dense XLA formulation: the
+        # accounting premise is exact cost_analysis FLOP/byte counts,
+        # which interpret-mode pallas_call loop machinery would skew
+        acfg = cfg.replace(scan_layers=False, accounting=True,
+                           kernel_impl="xla")
         aspecs = steps.input_specs(acfg, shape)
         afn = steps.step_fn_for(acfg, shape)
         aargs = tuple(aspecs[k] for k in ("params", "opt_state", "batch")

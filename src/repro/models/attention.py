@@ -44,22 +44,48 @@ def gqa_spec(cfg):
     return spec
 
 
-def qkv_proj(p, x, positions, rope_theta):
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
-    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
-    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
-    if "bq" in p:
-        q = q + p["bq"]
-        k = k + p["bk"]
-        v = v + p["bv"]
+def qkv_proj(p, x, positions, rope_theta, kernel_impl: str = "xla"):
+    if kernel_impl == "pallas":
+        from repro.kernels import ops
+        B, S, d = x.shape
+        x2 = x.reshape(B * S, d)
+
+        def proj(w, b):
+            nh, dh = w.shape[1], w.shape[2]
+            bias = None if b is None else b.reshape(1, nh * dh)
+            out = ops.vwr_matmul(x2, w.reshape(d, nh * dh), bias)
+            return out.reshape(B, S, nh, dh)
+
+        q = proj(p["wq"], p.get("bq"))     # qkv bias fused in-kernel
+        k = proj(p["wk"], p.get("bk"))
+        v = proj(p["wv"], p.get("bv"))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+        if "bq" in p:
+            q = q + p["bq"]
+            k = k + p["bk"]
+            v = v + p["bv"]
     if rope_theta:
         q = apply_rope(q, positions, rope_theta)
         k = apply_rope(k, positions, rope_theta)
     return q, k, v
 
 
-def o_proj(p, o):
-    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+def o_proj(p, o, kernel_impl: str = "xla", residual=None):
+    """Output projection; with ``residual`` returns residual + o@wo —
+    fused into the matmul's final-K store on the pallas path."""
+    if kernel_impl == "pallas":
+        from repro.kernels import ops
+        B, S, H, Dh = o.shape
+        d = p["wo"].shape[-1]
+        r2 = None if residual is None else residual.reshape(B * S, d)
+        out = ops.vwr_matmul(o.reshape(B * S, H * Dh),
+                             p["wo"].reshape(H * Dh, d), residual=r2)
+        return out.reshape(B, S, d)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out if residual is None else residual + out
 
 
 # ---------------- blockwise flash attention (training / prefill) ----------------

@@ -103,7 +103,25 @@ def mlp_spec(d, d_ff, act, dtype):
     }
 
 
-def mlp(p, x, act: str):
+def mlp(p, x, act: str, *, kernel_impl: str = "xla", residual=None):
+    """FFN block.  With ``residual`` the residual add is part of the
+    block (``residual + mlp(x)``); on the pallas path it is fused into
+    the down-projection's final-K store (one HBM round-trip), and the
+    activation is fused into the up-projection the same way."""
+    if kernel_impl == "pallas":
+        from repro.kernels import ops
+        lead, d = x.shape[:-1], x.shape[-1]
+        x2 = x.reshape(-1, d)
+        r2 = None if residual is None else residual.reshape(
+            -1, residual.shape[-1])
+        if act == "swiglu":
+            g = ops.vwr_matmul(x2, p["wg"], activation="silu")
+            h = (g * ops.vwr_matmul(x2, p["wi"])).astype(x.dtype)
+        else:
+            h = ops.vwr_matmul(x2, p["wi"],
+                               activation="gelu" if act == "gelu" else "relu")
+        out = ops.vwr_matmul(h, p["wo"], residual=r2)
+        return out.reshape(*lead, out.shape[-1])
     if act == "swiglu":
         h = jnp.einsum("...d,df->...f", x, p["wi"])
         g = jnp.einsum("...d,df->...f", x, p["wg"])
@@ -112,7 +130,8 @@ def mlp(p, x, act: str):
         h = jnp.einsum("...d,df->...f", x, p["wi"])
         fn = jax.nn.gelu if act == "gelu" else jax.nn.relu
         h = fn(h.astype(jnp.float32)).astype(x.dtype)
-    return jnp.einsum("...f,fd->...d", h, p["wo"])
+    out = jnp.einsum("...f,fd->...d", h, p["wo"])
+    return out if residual is None else residual + out
 
 
 # ---------------- frontends (stubs per brief) ----------------

@@ -11,9 +11,11 @@ Families:
   audio   — encoder-decoder, audio-frontend stub         (seamless-m4t)
 
 Conventions:
-  * every block function here returns the residual *delta*; pre-norms are
-    applied by the caller (exception: sLSTM blocks norm internally and
-    return the full two-sub-block delta).
+  * attn/mlp sub-blocks take the residual stream as ``residual=`` and
+    return the updated stream (the add is fused into the Pallas
+    epilogue when cfg.kernel_impl == 'pallas'); SSM/MoE sub-blocks
+    still return the residual *delta*.  Pre-norms are applied by the
+    caller (exception: sLSTM blocks norm internally).
   * layer stacks are stored stacked (L, ...) and iterated with lax.scan
     (cfg.scan_layers=False unrolls — used by the roofline accounting pass,
     since XLA cost_analysis counts while bodies once; DESIGN.md §8).
@@ -242,26 +244,36 @@ def _scan_stack(cfg, body, x, stacked, extra_xs=None, length=None):
 # layer bodies (training / prefill)
 # ======================================================================
 
-def _attn_delta(cfg, ap, h, positions, *, causal=True):
+def _attn_delta(cfg, ap, h, positions, *, causal=True, residual=None):
     """h already normed; ap = attention param subtree.
 
-    Returns (delta, (k, v)) for cache building."""
+    Returns (residual + attn(h) if residual is given else attn(h),
+    (k, v)) for cache building.  The residual add is fused into the
+    output projection's final-K store on the pallas kernel path."""
     if cfg.mla is not None:
         out, cache = MLA.mla_attention(ap, h, positions, cfg, causal=causal,
                                        dense=cfg.accounting,
                                        head_axis=_head_axis(cfg))
-        return out, cache
-    q, k, v = A.qkv_proj(ap, h, positions, cfg.rope_theta)
+        return (out if residual is None else residual + out), cache
+    q, k, v = A.qkv_proj(ap, h, positions, cfg.rope_theta,
+                         kernel_impl=cfg.kernel_impl)
     if cfg.accounting:
         o = A.full_attn_ref(q, k, v, causal=causal, q_positions=positions,
                             kv_positions=positions)
+    elif cfg.kernel_impl == "pallas" and causal:
+        # zero-copy GQA flash kernel, block sizes autotuned; the
+        # non-causal (encoder) path keeps the blockwise formulation,
+        # whose kv-padding masks don't require S % block == 0
+        from repro.kernels import ops
+        o = ops.vwr_attention(q, k, v, causal=True)
     else:
         o = A.blockwise_attn(q, k, v, causal=causal, q_positions=positions,
                              kv_positions=positions,
                              block_q=cfg.attn_block_q,
                              block_kv=cfg.attn_block_kv,
                              head_axis=_head_axis(cfg))
-    return A.o_proj(ap, o), (k, v)
+    return A.o_proj(ap, o, kernel_impl=cfg.kernel_impl,
+                    residual=residual), (k, v)
 
 
 def _head_axis(cfg):
@@ -273,17 +285,16 @@ def _head_axis(cfg):
 
 
 def _dense_body(cfg, positions, x, lp, _ex, *, causal=True, collect=False):
-    d, kv = _attn_delta(cfg, lp["attn"], _norm(cfg, lp["attn_norm"], x),
-                        positions, causal=causal)
-    x = x + d
-    x = x + L.mlp(lp["mlp"], _norm(cfg, lp["mlp_norm"], x), cfg.act)
+    x, kv = _attn_delta(cfg, lp["attn"], _norm(cfg, lp["attn_norm"], x),
+                        positions, causal=causal, residual=x)
+    x = L.mlp(lp["mlp"], _norm(cfg, lp["mlp_norm"], x), cfg.act,
+              kernel_impl=cfg.kernel_impl, residual=x)
     return x, (kv if collect else None)
 
 
 def _moe_body(cfg, positions, x, lp, _ex, *, collect=False):
-    d, kv = _attn_delta(cfg, lp["attn"], _norm(cfg, lp["attn_norm"], x),
-                        positions)
-    x = x + d
+    x, kv = _attn_delta(cfg, lp["attn"], _norm(cfg, lp["attn_norm"], x),
+                        positions, residual=x)
     y, aux = MOE.moe_ffn(lp["moe"], _norm(cfg, lp["mlp_norm"], x), cfg)
     return x + y, ((kv if collect else None), aux)
 
@@ -291,9 +302,8 @@ def _moe_body(cfg, positions, x, lp, _ex, *, collect=False):
 def _xattn_body(cfg, positions, enc_out, enc_valid, x, lp, _ex, *,
                 collect=False):
     """Encoder-decoder decoder layer (training/prefill)."""
-    d, kv = _attn_delta(cfg, lp["self"], _norm(cfg, lp["self_norm"], x),
-                        positions)
-    x = x + d
+    x, kv = _attn_delta(cfg, lp["self"], _norm(cfg, lp["self_norm"], x),
+                        positions, residual=x)
     h = _norm(cfg, lp["cross_norm"], x)
     q = jnp.einsum("bsd,dhk->bshk", h, lp["cross"]["wq"])
     k = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross"]["wk"])
@@ -304,16 +314,17 @@ def _xattn_body(cfg, positions, enc_out, enc_valid, x, lp, _ex, *,
         o = A.blockwise_attn(q, k, v, causal=False, kv_valid=enc_valid,
                              block_q=cfg.attn_block_q,
                              block_kv=cfg.attn_block_kv)
-    x = x + A.o_proj(lp["cross"], o)
-    x = x + L.mlp(lp["mlp"], _norm(cfg, lp["mlp_norm"], x), cfg.act)
+    x = A.o_proj(lp["cross"], o, kernel_impl=cfg.kernel_impl, residual=x)
+    x = L.mlp(lp["mlp"], _norm(cfg, lp["mlp_norm"], x), cfg.act,
+              kernel_impl=cfg.kernel_impl, residual=x)
     return x, ((kv, (k, v)) if collect else None)
 
 
 def _shared_attn_apply(cfg, sp, x, positions, *, collect=False):
-    d, kv = _attn_delta(cfg, sp["attn"], _norm(cfg, sp["attn_norm"], x),
-                        positions)
-    x = x + d
-    x = x + L.mlp(sp["mlp"], _norm(cfg, sp["mlp_norm"], x), cfg.act)
+    x, kv = _attn_delta(cfg, sp["attn"], _norm(cfg, sp["attn_norm"], x),
+                        positions, residual=x)
+    x = L.mlp(sp["mlp"], _norm(cfg, sp["mlp_norm"], x), cfg.act,
+              kernel_impl=cfg.kernel_impl, residual=x)
     return x, (kv if collect else None)
 
 
@@ -498,6 +509,12 @@ def ce_loss(params, h, labels, mask, cfg) -> Tuple[jax.Array, Dict]:
 
 def train_loss(params, batch, cfg) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """batch: tokens (B,S), labels (B,S), loss_mask (B,S) [+ frontend_emb]."""
+    if cfg.kernel_impl == "pallas":
+        raise ValueError(
+            "kernel_impl='pallas' is forward-only (prefill/decode/eval): "
+            "the VWR Pallas kernels define no VJP yet, and jax.grad "
+            "through them dies with an opaque assertion.  Train with "
+            "kernel_impl='xla' (see ROADMAP open items).")
     out = backbone(params, batch["tokens"], cfg,
                    frontend_emb=batch.get("frontend_emb"))
     labels, mask = batch["labels"], batch["loss_mask"].astype(jnp.float32)

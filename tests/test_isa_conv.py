@@ -2,7 +2,9 @@
 oracles, and the closed-form cost model matches the interpreter."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import analysis as A
 from repro.core import ref_ops as R

@@ -71,11 +71,42 @@ def test_vwr_depthwise(dtype, n, h, w, c, k, bh):
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,n,act,bias,res", [
+    (64, 64, 64, "relu", True, False),
+    (100, 130, 50, "gelu", True, True),      # ragged + full epilogue
+    (128, 64, 96, "silu", False, True),
+    (64, 128, 64, None, True, True),         # bias+residual only
+])
+def test_vwr_matmul_fused_epilogue(dtype, m, k, n, act, bias, res):
+    """Fused bias/activation/residual == the unfused two-pass
+    composition (the final-K store applies the epilogue in fp32)."""
+    k1, k2, k3, k4 = jax.random.split(KEY, 4)
+    x = _rand(k1, (m, k), dtype)
+    w = _rand(k2, (k, n), dtype)
+    b = _rand(k3, (n,), dtype) if bias else None
+    r = _rand(k4, (m, n), dtype) if res else None
+    out = ops.vwr_matmul(x, w, b, r, activation=act, bm=32, bk=64, bn=32)
+    want = ref.matmul_ref(x, w).astype(jnp.float32)
+    if b is not None:
+        want = want + b.astype(jnp.float32)
+    if act is not None:
+        fn = {"relu": jax.nn.relu, "gelu": jax.nn.gelu,
+              "silu": jax.nn.silu}[act]
+        want = fn(want)
+    if r is not None:
+        want = want + r.astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want.astype(dtype), np.float32),
+                               **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("b,s,h,kv,d,bq,bkv,causal", [
     (2, 64, 4, 4, 16, 32, 32, True),
     (2, 100, 8, 2, 16, 32, 64, True),    # GQA + ragged seq
     (1, 128, 4, 4, 32, 64, 64, False),
     (1, 96, 4, 1, 32, 32, 32, True),     # MQA
+    (2, 64, 12, 4, 16, 32, 32, True),    # GQA with non-pow2 group G=3
 ])
 def test_vwr_attention(dtype, b, s, h, kv, d, bq, bkv, causal):
     k1, k2, k3 = jax.random.split(KEY, 3)
@@ -92,6 +123,28 @@ def test_vwr_attention(dtype, b, s, h, kv, d, bq, bkv, causal):
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(want, np.float32),
                                **_tol(dtype))
+
+
+def test_vwr_attention_gqa_zero_copy_vs_oracle():
+    """H=8 query heads over KV=2 heads: the zero-copy BlockSpec
+    routing (kv block = b // G) must match the dense GQA oracle that
+    logically broadcasts each KV head over its group."""
+    from repro.models.attention import full_attn_ref
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = _rand(k1, (2, 96, 8, 32), jnp.float32)
+    k = _rand(k2, (2, 96, 2, 32), jnp.float32)
+    v = _rand(k3, (2, 96, 2, 32), jnp.float32)
+    out = ops.vwr_attention(q, k, v, causal=True, bq=32, bkv=32)
+    want = full_attn_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    # and it must equal the old head-expanded (materialized) layout
+    g = 4
+    expanded = ops.vwr_attention(q, jnp.repeat(k, g, 2),
+                                 jnp.repeat(v, g, 2),
+                                 causal=True, bq=32, bkv=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expanded),
+                               rtol=1e-6, atol=1e-6)
 
 
 def test_attention_matches_model_blockwise():

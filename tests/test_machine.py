@@ -1,7 +1,10 @@
 """Machine/energy model tests (eq. 1-2, Fig. 2b, Table 1) + ISA
 invariants (hypothesis)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import isa, machine
 from repro.core.machine import (PAPER_EXAMPLE, ProvetConfig,
