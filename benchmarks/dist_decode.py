@@ -1,0 +1,125 @@
+"""Distributed-decode benchmark: sharded vs local decode attention.
+
+Runs in a subprocess with --xla_force_host_platform_device_count=8 (the
+parent process has already locked jax to the visible device count), and
+merges its rows into ``BENCH_kernels.json`` next to the kernel
+micro-bench rows.
+
+Per (B, T) cell:
+  * local decode latency (``decode_attend_local`` on the full cache),
+  * sharded decode latency (``dist.decode.sharded_flash_decode`` on a
+    (1, 8) mesh — sequence-sharded cache, psum combine),
+  * modeled per-token collective bytes from the compiled HLO
+    (``hlo_analysis.collective_bytes``) — the headline number: the
+    combine moves O(B*H*(Dh+2)) stat bytes instead of the O(B*T*KV*Dh)
+    cache, independent of context length.
+
+On a host-device CPU mesh the sharded latency is pure overhead
+(interpret-mode kernels, emulated collectives); the latency columns
+track the *trajectory*, the collective-bytes column is the modeled
+production quantity.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.decode import sharded_flash_decode
+from repro.launch import hlo_analysis
+from repro.models.attention import decode_attend_local
+
+
+def timed(fn, *args, reps=5):
+    jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+rows = []
+mesh = jax.make_mesh((1, 8), ("data", "model"))
+key = jax.random.PRNGKey(0)
+H, KV, Dh = 8, 2, 64
+for B, T in ((4, 2048), (4, 8192)):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, Dh))
+    ck = jax.random.normal(ks[1], (B, T, KV, Dh))
+    cv = jax.random.normal(ks[2], (B, T, KV, Dh))
+    cur = jnp.int32(T)
+
+    local = jax.jit(lambda q, k, v, c: decode_attend_local(
+        q, k, v, jnp.arange(T), c))
+    shard = jax.jit(lambda q, k, v, c: sharded_flash_decode(
+        mesh, q, k, v, c))
+    t_local = timed(local, q, ck, cv, cur)
+    t_shard = timed(shard, q, ck, cv, cur)
+    coll, kinds = hlo_analysis.collective_bytes(
+        shard.lower(q, ck, cv, cur).compile().as_text())
+    cache_bytes = 2 * B * T * KV * Dh * 4
+    rows.append({
+        "op": "dist_decode", "shape": f"{B}x{T}x{H}x{KV}x{Dh}",
+        "us": round(t_shard, 1), "us_ref": round(t_local, 1),
+        "flops": B * H * 2 * T * Dh * 2, "staged_bytes": cache_bytes,
+        "arith_intensity": None,
+        "note": (f"mesh (1,8) seq-sharded; collective {coll:.0f} B/token"
+                 f" vs cache {cache_bytes} B ({kinds})"),
+        "collective_bytes": coll,
+    })
+print("JSON:" + json.dumps(rows))
+"""
+
+
+def dist_decode_bench(json_path="BENCH_kernels.json"):
+    """Appends dist_decode rows to the kernel-bench JSON artifact."""
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    pp = os.environ.get("PYTHONPATH")
+    env = {**os.environ,
+           "PYTHONPATH": src + (os.pathsep + pp if pp else "")}
+    r = subprocess.run([sys.executable, "-c", _CHILD],
+                       capture_output=True, text=True, timeout=900,
+                       env=env)
+    if r.returncode != 0:
+        raise RuntimeError(f"dist_decode child failed:\n{r.stderr[-2000:]}")
+    payload = [ln for ln in r.stdout.splitlines()
+               if ln.startswith("JSON:")][-1]
+    rows = json.loads(payload[len("JSON:"):])
+    print("\n# dist_decode: op,shape,us_sharded,us_local,"
+          "collective_bytes_per_token")
+    for row in rows:
+        print(f"{row['op']},{row['shape']},{row['us']},{row['us_ref']},"
+              f"{row['collective_bytes']:.0f}")
+    if json_path:
+        existing = []
+        if os.path.exists(json_path):
+            try:
+                with open(json_path) as f:
+                    existing = json.load(f)
+            except ValueError:
+                existing = []
+        existing = [r for r in existing if r.get("op") != "dist_decode"]
+        existing.extend(rows)
+        with open(json_path, "w") as f:
+            json.dump(existing, f, indent=1)
+        print(f"# merged {len(rows)} dist_decode rows -> {json_path}")
+    return rows
+
+
+if __name__ == "__main__":
+    dist_decode_bench()

@@ -131,6 +131,28 @@ def kernel_microbench(json_path="BENCH_kernels.json"):
     _row(rows, "vwr_depthwise_3x3", x4.shape, t_d, us_ref=t_dr, flops=f_d,
          staged=x4.size * 4 + wd.size * 4)
 
+    # ---- conv fused bias+relu epilogue vs the two-pass composition
+    # (the elementwise HBM round-trip the ProVet CNN demo used to pay)
+    bias_c = jax.random.normal(key, (64,), jnp.float32)
+    conv_epi = jax.jit(lambda out, c: jax.nn.relu(out + c))
+
+    def conv_unfused(a, b, c):
+        return conv_epi(ops.vwr_conv2d(a, b, bh=8, bf=64), c)
+
+    def conv_fused(a, b, c):
+        return ops.vwr_conv2d(a, b, c, activation="relu", bh=8, bf=64)
+
+    t_cu, t_cf = _time_paired(conv_unfused, conv_fused, x4, wf, bias_c,
+                              reps=30)
+    out_elems = 32 * 32 * 64
+    staged_cu = x4.size * 4 + wf.size * 4 + 3 * out_elems * 4
+    staged_cf = x4.size * 4 + wf.size * 4 + out_elems * 4
+    _row(rows, "conv_bias_relu_unfused", x4.shape, t_cu, flops=f_c,
+         staged=staged_cu, note="two-pass")
+    _row(rows, "conv_bias_relu_fused", x4.shape, t_cf, flops=f_c,
+         staged=staged_cf,
+         note=f"fused epilogue, {t_cu / t_cf:.2f}x vs unfused")
+
     # ---- attention block-size sweep (KV staging width = the VWR width)
     B, S, H, D = 4, 256, 4, 64
     q = jax.random.normal(key, (B, S, H, D), jnp.float32)

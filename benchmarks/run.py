@@ -13,6 +13,7 @@ import traceback
 sys.path.insert(0, os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))))
 
+from benchmarks.dist_decode import dist_decode_bench
 from benchmarks.kernels_bench import kernel_microbench
 from benchmarks.paper_tables import (conv_isa_demo, fig9_utilization,
                                      fig10_cmr, table3_improvements,
@@ -35,6 +36,10 @@ def main() -> None:
         # arithmetic intensity per kernel variant
         ("kernel_microbench",
          lambda: kernel_microbench(json_path="BENCH_kernels.json")),
+        # sharded vs local decode latency + modeled collective bytes
+        # (subprocess: needs its own 8-device host platform)
+        ("dist_decode",
+         lambda: dist_decode_bench(json_path="BENCH_kernels.json")),
         ("roofline_table_baseline", roofline_table),
         ("roofline_table_optimized",
          lambda: roofline_table("artifacts/dryrun_opt")

@@ -113,6 +113,13 @@ class ModelConfig:
     #            define no VJP yet, so this path serves prefill /
     #            decode / eval; lm.train_loss rejects it.
     kernel_impl: str = "xla"
+    # decode attention distribution:
+    # 'none' = the cache is shard-local (GSPMD may still head-shard it)
+    # 'seq'  = cache sequence-sharded over 'model'; decode attention
+    #          runs distributed FlashDecoding (dist.decode) — per-shard
+    #          online-softmax partials, a (B, H)-sized psum combine.
+    #          Falls back to 'none' without an ambient mesh.
+    decode_shard: str = "none"
     dtype: str = "bfloat16"
     remat: str = "full"            # full | dots | none
     scan_layers: bool = True

@@ -1,16 +1,32 @@
-"""Sharding hint helper: with_sharding_constraint iff a mesh with the
-referenced axes is active (no-op in single-device tests)."""
+"""Sharding hint helpers: ambient-mesh lookup plus
+with_sharding_constraint wrappers that no-op when no mesh with the
+referenced axes is active (single-device tests)."""
 from __future__ import annotations
+
+import math
 
 import jax
 from jax.sharding import PartitionSpec as PS  # noqa: F401
 
 
-def shard_hint(x, spec):
+def ambient_mesh():
+    """The physical mesh of the enclosing ``with mesh:`` context, or
+    None outside one.  The single place that touches the private
+    jax._src thread-resources API."""
     try:
         from jax._src import mesh as mesh_lib
         cur = mesh_lib.thread_resources.env.physical_mesh
-        names = set(cur.axis_names) if not cur.empty else set()
+        return None if cur.empty else cur
+    except Exception:                                  # noqa: BLE001
+        return None
+
+
+def shard_hint(x, spec):
+    """with_sharding_constraint iff the active mesh has every axis the
+    spec references."""
+    try:
+        cur = ambient_mesh()
+        names = set(cur.axis_names) if cur is not None else set()
         need = {a for e in spec for a in
                 ((e,) if isinstance(e, str) else (e or ()))}
         if need and need.issubset(names):
@@ -25,13 +41,11 @@ def shard_batch(x, ndim=None, extra=None):
     (('pod','data') on the multi-pod mesh, ('data',) single-pod) and
     leave other dims free.  No-op without a mesh."""
     try:
-        from jax._src import mesh as mesh_lib
-        cur = mesh_lib.thread_resources.env.physical_mesh
-        if cur.empty:
+        cur = ambient_mesh()
+        if cur is None:
             return x
         dp = tuple(a for a in ("pod", "data") if a in cur.axis_names)
-        if not dp or x.shape[0] % __import__("math").prod(
-                cur.shape[a] for a in dp):
+        if not dp or x.shape[0] % math.prod(cur.shape[a] for a in dp):
             return x
         n = ndim or x.ndim
         spec = PS(dp if len(dp) > 1 else dp[0], *([None] * (n - 1)))

@@ -1,0 +1,23 @@
+"""Multi-device distribution layer.
+
+The paper's hierarchy — local VWR / intermediate SRAM / global memory —
+maps onto the multi-device stack as shard-local VMEM / per-device HBM /
+the interconnect, and the same discipline applies: keep traffic in the
+near tier, and when it must cross the far tier, cross it in the widest,
+fewest transactions possible.  Each module here is one primitive of
+that discipline:
+
+  sharding     one vocabulary (logical axes -> mesh PartitionSpecs) for
+               params, train batches, and decode caches, per model
+               family and strategy ('fsdp_tp' | 'ddp' | 'serve')
+  decode       distributed FlashDecoding: sequence-sharded KV cache,
+               per-shard unnormalized softmax partials, one small
+               (B, H)-sized combine over the interconnect instead of
+               moving the cache
+  pipeline     GPipe-style microbatch schedule over a 'pipe' axis with
+               ppermute stage handoff (activations move, weights don't)
+  compression  int8-quantized all-reduce with error feedback: 4x fewer
+               wire bytes per gradient sync, bias carried to the next
+               step instead of lost
+"""
+from repro.dist import compression, decode, pipeline, sharding  # noqa: F401

@@ -1,0 +1,53 @@
+"""Compressed collectives: int8 all-reduce with error feedback.
+
+Gradient sync is the collective that keeps the interconnect saturated
+during data-parallel training — the 'global memory' tier of the
+multi-device hierarchy.  Quantizing the payload to int8 cuts the wire
+bytes 4x (fp32) at the cost of a per-step rounding bias; carrying that
+bias forward as *error feedback* (residual added to the next step's
+input before quantization) makes the long-run average unbiased —
+the two-step mean is strictly closer to the true mean than either
+single step (the contract ``tests/test_dist.py`` pins).
+
+Wire format is honest about the compression: the int8 payload and the
+per-shard fp32 scale are all-gathered (bytes = n * (size + 4) instead
+of the fp32 ring all-reduce's ~2 * 4 * size), and the dequantized sum
+is taken locally.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8: returns (q int8, scale fp32)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compressed_psum(x: jax.Array, err: jax.Array, axis_name: str,
+                    n_devices: int) -> Tuple[jax.Array, jax.Array]:
+    """Mean-reduce ``x`` over ``axis_name`` with int8 payloads.
+
+    Must run inside shard_map/pmap over ``axis_name``.  ``err`` is this
+    shard's error-feedback residual from the previous call (zeros on
+    the first step).  Returns (mean estimate, new residual); the
+    estimate equals ``psum(x)/n`` up to int8 rounding, and feeding the
+    residual back shrinks the accumulated bias step over step.
+    """
+    corrected = x.astype(jnp.float32) + err.astype(jnp.float32)
+    q, scale = quantize_int8(corrected)
+    deq = q.astype(jnp.float32) * scale
+    new_err = corrected - deq
+    # int8 + per-shard scale on the wire; dequantize-and-sum locally
+    qs = jax.lax.all_gather(q, axis_name)             # (n, *shape) int8
+    ss = jax.lax.all_gather(scale, axis_name)         # (n,)
+    ss = ss.reshape((n_devices,) + (1,) * x.ndim)
+    out = jnp.sum(qs.astype(jnp.float32) * ss, axis=0) / n_devices
+    return out.astype(x.dtype), new_err.astype(err.dtype)

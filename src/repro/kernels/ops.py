@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from repro.kernels import autotune
 from repro.kernels.vwr_attention import vwr_attention_p
 from repro.kernels.vwr_conv2d import vwr_conv2d_p
+from repro.kernels.vwr_decode import vwr_flash_decode_p
 from repro.kernels.vwr_depthwise import vwr_depthwise_p
 from repro.kernels.vwr_matmul import vwr_matmul_p
 
@@ -124,10 +125,9 @@ def _matmul_blocks(M, K, N, dtype, interpret):
 # conv
 # ======================================================================
 
-@functools.partial(jax.jit, static_argnames=("bh", "bf", "interpret"))
-def vwr_conv2d(x, w, *, bh=8, bf=128, interpret=None):
-    """x: (N,H,W,C); w: (KH,KW,C,F); stride 1, VALID."""
-    interpret = _auto_interpret(interpret)
+@functools.partial(jax.jit, static_argnames=("bh", "bf", "activation",
+                                             "interpret"))
+def _vwr_conv2d_jit(x, w, bias, *, bh, bf, activation, interpret):
     KH = w.shape[0]
     F = w.shape[3]
     H_out = x.shape[1] - KH + 1
@@ -138,8 +138,56 @@ def vwr_conv2d(x, w, *, bh=8, bf=128, interpret=None):
     xp = _pad_dim(x, 1, 1) if pad_h == 0 else jnp.pad(
         x, ((0, 0), (0, pad_h), (0, 0), (0, 0)))
     wp = _pad_dim(w, 3, bf_)
-    out = vwr_conv2d_p(xp, wp, bh=bh_, bf=bf_, interpret=interpret)
+    bp = None if bias is None else _pad_dim(bias.reshape(1, F), 1, bf_)
+    out = vwr_conv2d_p(xp, wp, bp, bh=bh_, bf=bf_, activation=activation,
+                       interpret=interpret)
     return out[:, :H_out, :, :F]
+
+
+def vwr_conv2d(x, w, bias=None, *, activation=None, bh=None, bf=None,
+               interpret=None):
+    """``act(conv2d(x, w) + bias)`` in one kernel pass.
+
+    x: (N,H,W,C); w: (KH,KW,C,F); stride 1, VALID.  bias: (F,) and
+    activation in {None,'relu','gelu','silu'} are fused into the fp32
+    accumulator before the single output store (no extra elementwise
+    HBM pass).  With both bh/bf unspecified the autotuner resolves them
+    via the shared staging-energy prior; pinning any subset keeps the
+    pins and fills the rest from the static defaults."""
+    interpret = _auto_interpret(interpret)
+    if bh is None and bf is None:
+        bh, bf = _conv_blocks(x.shape, w.shape, str(x.dtype), interpret)
+    else:
+        d_bh, d_bf = autotune.DEFAULT_BLOCKS["conv"]
+        bh = d_bh if bh is None else bh
+        bf = d_bf if bf is None else bf
+    return _vwr_conv2d_jit(x, w, bias, bh=bh, bf=bf,
+                           activation=activation, interpret=interpret)
+
+
+def _conv_blocks(xshape, wshape, dtype, interpret):
+    N, H, W, C = xshape
+    KH, KW, _, F = wshape
+    backend = _backend_tag(interpret)
+
+    def runner(cand):
+        bh, bf = cand
+        xz = jnp.ones(xshape, jnp.dtype(dtype))
+        wz = jnp.ones(wshape, jnp.dtype(dtype))
+
+        def run():
+            jax.block_until_ready(_vwr_conv2d_jit(
+                xz, wz, None, bh=bh, bf=bf, activation=None,
+                interpret=interpret))
+        return run
+
+    return autotune.get_blocks(
+        "conv", (N, H, W, C, KH, KW, F), dtype, backend,
+        candidates=autotune.conv_candidates(N, H, W, C, KH, KW, F,
+                                            dtype),
+        prior=lambda c: autotune.conv_prior(N, H, W, C, KH, KW, F,
+                                            dtype, c),
+        runner=runner if autotune.enabled() else None)
 
 
 @functools.partial(jax.jit, static_argnames=("bh", "interpret"))
@@ -213,6 +261,74 @@ def vwr_attention(q, k, v, *, causal=True, bq=None, bkv=None,
         bkv = bq
     return _vwr_attention_jit(q, k, v, causal=causal, bq=bq, bkv=bkv,
                               interpret=interpret)
+
+
+# ======================================================================
+# flash decode (one token vs a cache shard; unnormalized partials)
+# ======================================================================
+
+@functools.partial(jax.jit, static_argnames=("bkv", "interpret"))
+def _vwr_flash_decode_jit(q, k, v, lens, *, bkv, interpret):
+    B, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    # zero-copy GQA: the q "block" is the whole group sharing one KV
+    # head (heads are kv-major: h = kv * G + g, matching
+    # models.attention.flash_decode_partial)
+    qf = q.reshape(B * KV, G, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, T, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, T, D)
+    bkv_ = min(bkv, T)
+    kf = _pad_dim(kf, 1, bkv_)
+    vf = _pad_dim(vf, 1, bkv_)
+    o_t, m, l = vwr_flash_decode_p(qf, kf, vf, lens, bkv=bkv_,
+                                   t_valid=T, interpret=interpret)
+    return (o_t.reshape(B, H, D), m.reshape(B, H), l.reshape(B, H))
+
+
+def vwr_flash_decode(q, k, v, cur_len, pos0=0, *, bkv=None,
+                     interpret=None):
+    """Unnormalized flash-decode partials for one new token.
+
+    q: (B, H, Dh); k, v: (B, T, KV, Dh) — a KV-cache (shard) whose
+    first position has *global* index ``pos0``; ``cur_len`` counts the
+    globally valid positions (both may be traced scalars: decode runs
+    inside a jitted generation loop).  Returns fp32
+    (o_tilde (B,H,Dh), m (B,H), l (B,H)) — the distributed-
+    FlashDecoding combine contract (``dist.decode``); single-shard
+    callers normalize with ``o_tilde / max(l, eps)``.  ``bkv``
+    unspecified resolves via the autotuner."""
+    interpret = _auto_interpret(interpret)
+    B, T = q.shape[0], k.shape[1]
+    H, KV, D = q.shape[1], k.shape[2], q.shape[2]
+    if bkv is None:
+        bkv = _decode_blocks(B, T, H, KV, D, str(q.dtype), interpret)[0]
+    lens = jnp.stack([jnp.asarray(cur_len, jnp.int32).reshape(()),
+                      jnp.asarray(pos0, jnp.int32).reshape(())]
+                     ).reshape(1, 2)
+    return _vwr_flash_decode_jit(q, k, v, lens, bkv=bkv,
+                                 interpret=interpret)
+
+
+def _decode_blocks(B, T, H, KV, D, dtype, interpret):
+    backend = _backend_tag(interpret)
+
+    def runner(cand):
+        bkv, = cand
+        qz = jnp.ones((B, H, D), jnp.dtype(dtype))
+        kz = jnp.ones((B, T, KV, D), jnp.dtype(dtype))
+        lens = jnp.asarray([[T, 0]], jnp.int32)
+
+        def run():
+            jax.block_until_ready(_vwr_flash_decode_jit(
+                qz, kz, kz, lens, bkv=bkv, interpret=interpret))
+        return run
+
+    return autotune.get_blocks(
+        "decode", (B, T, H, KV, D), dtype, backend,
+        candidates=autotune.decode_candidates(T, D, dtype),
+        prior=lambda c: autotune.decode_prior(B, T, H, KV, D, dtype, c),
+        runner=runner if autotune.enabled() else None)
 
 
 def _attention_blocks(B, S, H, KV, D, dtype, causal, interpret):

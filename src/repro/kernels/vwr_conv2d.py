@@ -10,6 +10,12 @@ shifted slices* of that staged block — the VREG-level analogue of the
 VFU shuffler's one-lane shifts.  Zero data inflation in HBM: each
 input element is read exactly once per row-block.
 
+Fused epilogue: ``bias`` add and ``activation`` (relu/gelu/silu) are
+applied to the fp32 accumulator before the single store — a CNN's
+conv -> bias -> relu chain costs exactly one HBM round-trip for the
+output instead of write + re-read + re-write (the extra elementwise
+pass the ProVet CNN demo used to pay).
+
 x: (N, H, W, C), w: (KH, KW, C, F), stride 1, VALID.
 Grid: (batch, row-blocks, F-blocks); taps unrolled inside the kernel
 (KH*KW MXU calls per staged block — the N-reads-per-wide-transaction
@@ -25,9 +31,13 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.pallas_compat import halo_block_spec, tpu_compiler_params
+from repro.kernels.vwr_matmul import ACTIVATIONS
 
 
-def _conv_kernel(x_ref, w_ref, o_ref, *, KH, KW, bh, W_out):
+def _conv_kernel(x_ref, w_ref, *rest, KH, KW, bh, W_out, has_bias,
+                 activation):
+    o_ref = rest[-1]
+    b_ref = rest[0] if has_bias else None
     x = x_ref[0]                                   # (bh+KH-1, W, C)
     C = x.shape[-1]
     bf = w_ref.shape[-1]
@@ -37,33 +47,48 @@ def _conv_kernel(x_ref, w_ref, o_ref, *, KH, KW, bh, W_out):
             xs = x[kj: kj + bh, ki: ki + W_out, :]          # lane shift
             acc += jnp.dot(xs.reshape(bh * W_out, C), w_ref[kj, ki],
                            preferred_element_type=jnp.float32)
+    if has_bias:
+        acc = acc + b_ref[...].astype(jnp.float32)          # (1,bf) bcast
+    if activation is not None:
+        acc = ACTIVATIONS[activation](acc)
     o_ref[0] = acc.reshape(bh, W_out, bf).astype(o_ref.dtype)
 
 
-def vwr_conv2d_p(x: jax.Array, w: jax.Array, *, bh: int = 8,
-                 bf: int = 128, interpret: bool = False) -> jax.Array:
+def vwr_conv2d_p(x: jax.Array, w: jax.Array, bias=None, *, bh: int = 8,
+                 bf: int = 128, activation: str = None,
+                 interpret: bool = False) -> jax.Array:
     """x: (N, H, W, C) with (H-KH+1) % bh == 0; w: (KH, KW, C, F) with
-    F % bf == 0 (ops.vwr_conv2d pads). Returns (N, H', W', F)."""
+    F % bf == 0 (ops.vwr_conv2d pads).  Optional fused epilogue: bias
+    (1, F) and activation name applied on the fp32 accumulator before
+    the store.  Returns (N, H', W', F)."""
     N, H, W, C = x.shape
     KH, KW, C2, F = w.shape
     assert C == C2
     H_out, W_out = H - KH + 1, W - KW + 1
     assert H_out % bh == 0 and F % bf == 0, (H_out, bh, F, bf)
+    assert activation is None or activation in ACTIVATIONS, activation
     kernel = functools.partial(_conv_kernel, KH=KH, KW=KW, bh=bh,
-                               W_out=W_out)
+                               W_out=W_out, has_bias=bias is not None,
+                               activation=activation)
+    in_specs = [
+        halo_block_spec((1, bh + KH - 1, W, C),
+                        lambda n, r, f: (n, r * bh, 0, 0),
+                        halo_dim=1),
+        pl.BlockSpec((KH, KW, C, bf), lambda n, r, f: (0, 0, 0, f)),
+    ]
+    operands = [x, w]
+    if bias is not None:
+        assert bias.shape == (1, F), bias.shape
+        in_specs.append(pl.BlockSpec((1, bf), lambda n, r, f: (0, f)))
+        operands.append(bias)
     params = tpu_compiler_params("parallel", "parallel", "parallel")
     return pl.pallas_call(
         kernel,
         grid=(N, H_out // bh, F // bf),
-        in_specs=[
-            halo_block_spec((1, bh + KH - 1, W, C),
-                            lambda n, r, f: (n, r * bh, 0, 0),
-                            halo_dim=1),
-            pl.BlockSpec((KH, KW, C, bf), lambda n, r, f: (0, 0, 0, f)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, bh, W_out, bf),
                                lambda n, r, f: (n, r, 0, f)),
         out_shape=jax.ShapeDtypeStruct((N, H_out, W_out, F), x.dtype),
         compiler_params=params,
         interpret=interpret,
-    )(x, w)
+    )(*operands)

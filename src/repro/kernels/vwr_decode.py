@@ -1,0 +1,120 @@
+"""Flash-decode kernel: one query token vs a (possibly sharded) cache.
+
+Decode is the zero-reuse end of the paper's streaming spectrum — every
+cached (T, Dh) K/V element is read exactly once per generated token, so
+the only lever is transaction width: each grid step stages one wide
+(bkv x Dh) cache block in VMEM (the ultra-wide transaction) and the
+whole head group consumes it before the next fetch.  GQA is zero-copy
+as in ``vwr_attention``: the q block is the *group* (G query heads that
+share one KV head), so the staged cache bytes per group are 1/G of the
+head-expanded layout.
+
+Unlike the prefill kernel this one returns the **unnormalized** online-
+softmax partials (o_tilde, m, l) rather than the normalized context:
+that is the combine contract of distributed FlashDecoding
+(``dist.decode``), where each model shard holds a slab of the cache
+starting at global position ``pos0`` and only the (B, H) statistics
+cross the interconnect.  Single-device callers normalize with
+``o_tilde / max(l, eps)``.
+
+q: (B*KV, G, Dh); k, v: (B*KV, Tp, Dh) flattened kv heads, Tp padded
+to a bkv multiple; lens: (1, 2) int32 [cur_len, pos0] (dynamic —
+decode runs inside a jitted generation loop).  Grid: (B*KV, kv-blocks),
+kv innermost (sequential).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pallas_compat import tpu_compiler_params
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, lens_ref, ot_ref, m_ref, l_ref,
+                   acc_ref, ms_ref, ls_ref, *, scale, bkv, t_valid,
+                   n_kv):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        ms_ref[...] = jnp.full_like(ms_ref, NEG_INF)
+        ls_ref[...] = jnp.zeros_like(ls_ref)
+
+    cur = lens_ref[0, 0]
+    pos0 = lens_ref[0, 1]
+    q = q_ref[0].astype(jnp.float32) * scale            # (G, Dh)
+    k = k_ref[0].astype(jnp.float32)                    # (bkv, Dh)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    idx = j * bkv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    # idx < t_valid masks the block-multiple padding; pos0 + idx < cur
+    # masks positions not yet written (and, sharded, positions owned by
+    # other shards' slabs never appear here at all)
+    valid = (idx < t_valid) & (pos0 + idx < cur)
+    s = jnp.where(valid, s, NEG_INF)
+    m_prev = ms_ref[:, 0]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))         # (G,)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where((m_new > NEG_INF / 2)[:, None], p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    ls_ref[:, 0] = ls_ref[:, 0] * corr + p.sum(axis=-1)
+    pv = jnp.dot(p, v_ref[0].astype(jnp.float32),
+                 preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+    ms_ref[:, 0] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _store():
+        ot_ref[0] = acc_ref[...]
+        m_ref[0] = ms_ref[:, 0]
+        l_ref[0] = ls_ref[:, 0]
+
+
+def vwr_flash_decode_p(q: jax.Array, k: jax.Array, v: jax.Array,
+                       lens: jax.Array, *, bkv: int, t_valid: int,
+                       interpret: bool = False):
+    """Returns (o_tilde (BKV, G, Dh) f32, m (BKV, G) f32,
+    l (BKV, G) f32)."""
+    BKV, G, D = q.shape
+    Tp = k.shape[1]
+    assert k.shape == (BKV, Tp, D) and v.shape == k.shape
+    assert Tp % bkv == 0, (Tp, bkv)
+    n_kv = Tp // bkv
+    scale = 1.0 / (D ** 0.5)
+    kernel = functools.partial(_decode_kernel, scale=scale, bkv=bkv,
+                               t_valid=t_valid, n_kv=n_kv)
+    f32 = jnp.float32
+    return pl.pallas_call(
+        kernel,
+        grid=(BKV, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, G, D), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, bkv, D), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, D), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, 2), lambda b, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, G, D), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, G), lambda b, j: (b, 0)),
+            pl.BlockSpec((1, G), lambda b, j: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BKV, G, D), f32),
+            jax.ShapeDtypeStruct((BKV, G), f32),
+            jax.ShapeDtypeStruct((BKV, G), f32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((G, D), f32),
+            pltpu.VMEM((G, 1), f32),
+            pltpu.VMEM((G, 1), f32),
+        ],
+        compiler_params=tpu_compiler_params("parallel", "arbitrary"),
+        interpret=interpret,
+    )(q, k, v, lens)

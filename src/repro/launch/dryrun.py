@@ -105,6 +105,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):       # older jax: [dict]
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     ana = hlo_analysis.analyze(hlo)
 

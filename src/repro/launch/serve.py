@@ -3,6 +3,15 @@
 CPU example (small model, batched requests):
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
         --reduce width --batch 4 --prompt-len 64 --gen 32
+
+Sharded serving: ``--data-model D M`` lays the mesh out explicitly and
+routes everything through the ``repro.dist`` sharding vocabulary —
+params TP-sharded with the 'serve' strategy, the decode cache batch-
+sharded over 'data', and (with ``--shard seq``) sequence-sharded over
+'model' so decode attention runs distributed FlashDecoding
+(``dist.decode``: per-shard online-softmax partials, one (B, H)-sized
+combine on the wire per token).  ``--kernel-impl pallas`` additionally
+stages each shard's cache slab through the VWR flash-decode kernel.
 """
 from __future__ import annotations
 
@@ -14,6 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced
+from repro.dist import sharding as SH
+from repro.launch import steps
 from repro.launch.mesh import make_local_mesh
 from repro.launch.train import width_reduce
 from repro.models import lm
@@ -39,11 +50,19 @@ def pad_cache_from_prefill(cfg, caches, batch, max_len, prefill_len,
             cache = {"k": put(cache["k"], k), "v": put(cache["v"], v)}
     elif fam == "moe":
         kv_d, kv_m = caches
-        if cfg.moe.first_k_dense and kv_d is not None:
-            cache["dense"] = {"k": put(cache["dense"]["k"], kv_d[0]),
-                              "v": put(cache["dense"]["v"], kv_d[1])}
-        cache["moe"] = {"k": put(cache["moe"]["k"], kv_m[0][0]),
-                        "v": put(cache["moe"]["v"], kv_m[0][1])}
+        if cfg.mla is not None:
+            if cfg.moe.first_k_dense and kv_d is not None:
+                cache["dense"] = {
+                    "ckv": put(cache["dense"]["ckv"], kv_d[0]),
+                    "krope": put(cache["dense"]["krope"], kv_d[1])}
+            cache["moe"] = {"ckv": put(cache["moe"]["ckv"], kv_m[0]),
+                            "krope": put(cache["moe"]["krope"], kv_m[1])}
+        else:
+            if cfg.moe.first_k_dense and kv_d is not None:
+                cache["dense"] = {"k": put(cache["dense"]["k"], kv_d[0]),
+                                  "v": put(cache["dense"]["v"], kv_d[1])}
+            cache["moe"] = {"k": put(cache["moe"]["k"], kv_m[0]),
+                            "v": put(cache["moe"]["v"], kv_m[1])}
     elif fam == "hybrid":
         (st_main, kv_main), (st_tail, kv_tail) = caches
         cache["mamba_main"] = st_main
@@ -75,19 +94,37 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--data-model", type=int, nargs=2, default=None,
+                    help="mesh shape (data, model)")
+    ap.add_argument("--shard", choices=["none", "seq"], default="none",
+                    help="'seq' = sequence-shard the KV cache over "
+                         "'model' (distributed FlashDecoding)")
+    ap.add_argument("--kernel-impl", choices=["xla", "pallas"],
+                    default="xla")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     cfg = reduced(cfg) if args.reduce == "smoke" else width_reduce(cfg)
+    cfg = cfg.replace(kernel_impl=args.kernel_impl,
+                      decode_shard=args.shard)
     if cfg.mamba2 is not None or cfg.xlstm is not None:
         chunk = (cfg.mamba2 or cfg.xlstm).chunk
         assert args.prompt_len % chunk == 0
 
-    mesh = make_local_mesh(jax.device_count(), 1)
+    dm = args.data_model or (jax.device_count(), 1)
+    mesh = make_local_mesh(*dm)
     B, P, G = args.batch, args.prompt_len, args.gen
     max_len = P + G
+    if args.shard == "seq":
+        msize = mesh.shape.get("model", 1)
+        assert max_len % msize == 0, (
+            f"--shard seq needs (prompt+gen)={max_len} divisible by the "
+            f"model axis ({msize})")
 
     params = lm.init(cfg, jax.random.PRNGKey(0))
+    params = jax.device_put(
+        params, SH.to_shardings(mesh, SH.param_pspecs(cfg, mesh,
+                                                      "serve")))
     rng = np.random.default_rng(0)
     tokens = jnp.asarray(rng.integers(2, cfg.vocab, (B, P)), jnp.int32)
     batch = {"tokens": tokens}
@@ -100,8 +137,8 @@ def main(argv=None):
 
     with mesh:
         t0 = time.time()
-        logits, caches = jax.jit(
-            lambda p, b: lm.prefill(p, b, cfg))(params, batch)
+        logits, caches = jax.jit(steps.build_prefill(cfg))(
+            params, batch)
         logits.block_until_ready()
         t_prefill = time.time() - t0
 
@@ -109,7 +146,10 @@ def main(argv=None):
                               if cfg.family == "vlm" else 0)
         cache = pad_cache_from_prefill(cfg, caches, B, max_len, P,
                                        enc_len=P)
-        decode = jax.jit(lambda p, b: lm.decode_step(p, b, cfg))
+        cache = jax.device_put(cache, SH.to_shardings(
+            mesh, SH.cache_pspecs(cfg, mesh, B,
+                                  seq_shard=(args.shard == "seq"))))
+        decode = jax.jit(steps.build_decode(cfg, mesh))
 
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
         out_tokens = [tok]

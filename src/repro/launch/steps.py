@@ -71,10 +71,30 @@ def build_prefill(cfg: ModelConfig):
     return prefill_step
 
 
-def build_decode(cfg: ModelConfig):
-    def serve_step(params, batch):
-        return lm.decode_step(params, batch, cfg)
-    return serve_step
+def build_decode(cfg: ModelConfig, mesh=None):
+    """One-token serve step.  With a mesh, the step pins the returned
+    logits/cache to the decode sharding vocabulary (dist.sharding), so
+    chained decode calls under jit never drift layouts — the sharded
+    serve path in ``launch.serve`` runs this end to end (sequence-
+    sharded caches when cfg.decode_shard == 'seq')."""
+    if mesh is None:
+        def serve_step(params, batch):
+            return lm.decode_step(params, batch, cfg)
+        return serve_step
+
+    from repro.dist import sharding as SH
+
+    def sharded_serve_step(params, batch):
+        logits, cache = lm.decode_step(params, batch, cfg)
+        B = logits.shape[0]
+        pspecs = SH.decode_batch_pspecs(
+            cfg, mesh, B, seq_shard=(cfg.decode_shard == "seq"))
+        shardings = SH.to_shardings(mesh, pspecs["cache"])
+        cache = jax.tree.map(jax.lax.with_sharding_constraint,
+                             cache, shardings)
+        return logits, cache
+
+    return sharded_serve_step
 
 
 # ======================================================================

@@ -648,6 +648,23 @@ def _rope1(x, pos, theta):
     return L.apply_rope(x[:, None], jnp.asarray(pos)[None], theta)[:, 0]
 
 
+def _decode_attend(cfg, q, ck, cv, n_valid):
+    """Decode attention dispatch: distributed FlashDecoding when the
+    cache is sequence-sharded (cfg.decode_shard == 'seq' under an
+    ambient mesh), the VWR flash-decode kernel when
+    cfg.kernel_impl == 'pallas', the XLA reference otherwise."""
+    if cfg.decode_shard == "seq":
+        from repro.dist import decode as DD
+        return DD.decode_attend(q, ck, cv, n_valid,
+                                kernel_impl=cfg.kernel_impl)
+    if cfg.kernel_impl == "pallas":
+        from repro.kernels import ops
+        o_t, _, l = ops.vwr_flash_decode(q, ck, cv, n_valid)
+        return (o_t / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    T = ck.shape[1]
+    return A.decode_attend_local(q, ck, cv, jnp.arange(T), n_valid)
+
+
 def _decode_gqa(cfg, lp, h, ck, cv, cur_len):
     """h: (B,D) normed. ck/cv: (B,T,KV,Dh). Returns (delta, ck, cv)."""
     B = h.shape[0]
@@ -660,8 +677,7 @@ def _decode_gqa(cfg, lp, h, ck, cv, cur_len):
     k = _rope1(k, cur_len, cfg.rope_theta)
     ck = jax.lax.dynamic_update_slice(ck, k[:, None], (0, cur_len, 0, 0))
     cv = jax.lax.dynamic_update_slice(cv, v[:, None], (0, cur_len, 0, 0))
-    T = ck.shape[1]
-    o = A.decode_attend_local(q, ck, cv, jnp.arange(T), cur_len + 1)
+    o = _decode_attend(cfg, q, ck, cv, cur_len + 1)
     delta = jnp.einsum("bhk,hkd->bd", o, lp["wo"])
     return delta, ck, cv
 
@@ -688,7 +704,7 @@ def _decode_cross(cfg, lp, h, xk, xv):
     """Cross-attention against the (static) encoder KV cache."""
     q = jnp.einsum("bd,dhk->bhk", h, lp["wq"])
     T = xk.shape[1]
-    o = A.decode_attend_local(q, xk, xv, jnp.arange(T), jnp.int32(T))
+    o = _decode_attend(cfg, q, xk, xv, jnp.int32(T))
     return jnp.einsum("bhk,hkd->bd", o, lp["wo"])
 
 

@@ -34,20 +34,7 @@ from repro.common.module import ParamDef, zeros_init
 from repro.models.layers import mlp, mlp_spec
 
 
-def _ep_constraint(x, spec):
-    """with_sharding_constraint iff a mesh with the named axes is
-    active (no-op in single-device tests)."""
-    try:
-        from jax._src import mesh as mesh_lib
-        cur = mesh_lib.thread_resources.env.physical_mesh
-        names = set(cur.axis_names) if not cur.empty else set()
-        need = {a for e in spec for a in
-                ((e,) if isinstance(e, str) else (e or ()))}
-        if need and need.issubset(names):
-            return jax.lax.with_sharding_constraint(x, spec)
-    except Exception:                                  # noqa: BLE001
-        pass
-    return x
+from repro.common.hints import shard_hint as _ep_constraint
 
 
 def moe_spec(cfg):

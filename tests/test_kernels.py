@@ -159,3 +159,106 @@ def test_attention_matches_model_blockwise():
     b = blockwise_attn(q, k, v, causal=True, block_q=32, block_kv=32)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4,
                                atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,h,w,c,f,kh,act,bias", [
+    (1, 9, 9, 8, 8, 3, "relu", True),
+    (2, 13, 11, 7, 5, 3, "gelu", True),     # ragged + padding path
+    (1, 8, 8, 4, 16, 1, None, True),        # bias only
+    (2, 12, 10, 3, 9, 5, "relu", False),    # activation only
+])
+def test_vwr_conv2d_fused_epilogue(dtype, n, h, w, c, f, kh, act, bias):
+    """Fused bias+activation == the unfused two-pass composition (the
+    single store applies the epilogue on the fp32 accumulator)."""
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    x = _rand(k1, (n, h, w, c), dtype)
+    wts = _rand(k2, (kh, kh, c, f), dtype)
+    b = _rand(k3, (f,), dtype) if bias else None
+    out = ops.vwr_conv2d(x, wts, b, activation=act, bh=4, bf=4)
+    want = ref.conv2d_ref(x, wts).astype(jnp.float32)
+    if b is not None:
+        want = want + b.astype(jnp.float32)
+    if act is not None:
+        want = {"relu": jax.nn.relu, "gelu": jax.nn.gelu}[act](want)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want.astype(dtype), np.float32),
+                               **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,t,h,kv,d,bkv,cur", [
+    (2, 64, 4, 4, 16, 32, 50),
+    (2, 100, 8, 2, 16, 32, 100),     # GQA + ragged cache -> padding
+    (1, 96, 4, 1, 32, 64, 1),        # MQA, single valid position
+])
+def test_vwr_flash_decode_partials(dtype, b, t, h, kv, d, bkv, cur):
+    """Normalized kernel partials == decode_attend_local; the (m, l)
+    stats obey the distributed-FlashDecoding combine contract."""
+    from repro.models.attention import decode_attend_local, \
+        flash_decode_partial
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = _rand(k1, (b, h, d), dtype)
+    ck = _rand(k2, (b, t, kv, d), dtype)
+    cv = _rand(k3, (b, t, kv, d), dtype)
+    o_t, m, l = ops.vwr_flash_decode(q, ck, cv, jnp.int32(cur), bkv=bkv)
+    got = (o_t / jnp.maximum(l, 1e-30)[..., None]).astype(dtype)
+    want = decode_attend_local(q, ck, cv, jnp.arange(t), jnp.int32(cur))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+    # stats match the XLA partial formulation (same combine contract)
+    o_ref, m_ref, l_ref = flash_decode_partial(q, ck, cv, jnp.arange(t),
+                                               jnp.int32(cur))
+    tol = _tol(dtype)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(m_ref), **tol)
+    np.testing.assert_allclose(np.asarray(l), np.asarray(l_ref),
+                               rtol=5 * tol["rtol"], atol=5 * tol["atol"])
+
+
+def test_vwr_flash_decode_sharded_offset():
+    """pos0 slab offsets partition the softmax: combining two half-
+    cache partials reproduces the full-cache result."""
+    from repro.models.attention import decode_attend_local
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    B, T, KV, D, H = 2, 64, 2, 16, 4
+    q = _rand(k1, (B, H, D), jnp.float32)
+    ck = _rand(k2, (B, T, KV, D), jnp.float32)
+    cv = _rand(k3, (B, T, KV, D), jnp.float32)
+    cur = jnp.int32(50)
+    halves = [ops.vwr_flash_decode(q, ck[:, s], cv[:, s], cur,
+                                   pos0=s.start)
+              for s in (slice(0, 32), slice(32, 64))]
+    m_star = jnp.maximum(halves[0][1], halves[1][1])
+    o = sum(o_t * jnp.exp(m - m_star)[..., None] for o_t, m, _ in halves)
+    l = sum(l * jnp.exp(m - m_star) for _, m, l in halves)
+    got = o / jnp.maximum(l, 1e-30)[..., None]
+    want = decode_attend_local(q, ck, cv, jnp.arange(T), cur)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_decode_step_pallas_matches_xla():
+    """cfg.kernel_impl='pallas' decode (the VWR flash-decode kernel
+    inside lm._decode_gqa) is semantics-preserving vs the einsum/XLA
+    decode path, across several steps of cache growth."""
+    from repro.common.config import ModelConfig
+    from repro.models import lm
+
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_head=16, d_ff=128,
+                      vocab=256, dtype="float32", remat="none",
+                      qkv_bias=True)
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    B, T = 2, 16
+    cache_x = lm.init_cache(cfg, B, T)
+    cache_p = lm.init_cache(cfg, B, T)
+    tok = jax.random.randint(jax.random.PRNGKey(1), (B,), 0, 256)
+    pcfg = cfg.replace(kernel_impl="pallas")
+    for step in range(3):
+        bx = {"token": tok, "cur_len": jnp.int32(step), "cache": cache_x}
+        bp = {"token": tok, "cur_len": jnp.int32(step), "cache": cache_p}
+        want, cache_x = lm.decode_step(params, bx, cfg)
+        got, cache_p = lm.decode_step(params, bp, pcfg)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+        tok = jnp.argmax(want, -1).astype(jnp.int32)
