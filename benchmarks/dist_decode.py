@@ -14,6 +14,11 @@ Per (B, T) cell:
     combine moves O(B*H*(Dh+2)) stat bytes instead of the O(B*T*KV*Dh)
     cache, independent of context length.
 
+Plus one ``engine_decode`` row: a full one-token ``DecodeEngine`` step
+(reduced arch, (1, 8) mesh, sequence-sharded cache, explicit mesh —
+the production serve path) with its per-token collective bytes from
+the engine's compiled decode step.
+
 On a host-device CPU mesh the sharded latency is pure overhead
 (interpret-mode kernels, emulated collectives); the latency columns
 track the *trajectory*, the collective-bytes column is the modeled
@@ -81,6 +86,31 @@ for B, T in ((4, 2048), (4, 8192)):
                  f" vs cache {cache_bytes} B ({kinds})"),
         "collective_bytes": coll,
     })
+
+# ---- full engine step: the production serve path ---------------------
+from repro.configs import get_config, reduced
+from repro.engine import DecodeEngine, EngineConfig
+
+B, P, G = 2, 32, 32
+cfg = reduced(get_config("qwen1.5-0.5b"))
+eng = DecodeEngine(cfg, EngineConfig(batch=B, max_len=P + G,
+                                     mesh_shape=(1, 8),
+                                     decode_shard="seq"))
+toks = jax.random.randint(key, (B, P), 2, cfg.vocab)
+logits, cache = eng.prefill({"tokens": toks})
+tok = jnp.argmax(logits, -1).astype(jnp.int32)
+dbatch = {"token": tok, "cur_len": jnp.int32(P), "cache": cache}
+t_eng = timed(eng.decode_fn, eng.params, dbatch)
+coll, kinds = hlo_analysis.collective_bytes(
+    eng.decode_fn.lower(eng.params, dbatch).compile().as_text())
+rows.append({
+    "op": "engine_decode", "shape": f"{cfg.name}:{B}x{P + G}",
+    "us": round(t_eng, 1), "us_ref": None, "flops": None,
+    "staged_bytes": None, "arith_intensity": None,
+    "note": (f"DecodeEngine one-token step, mesh (1,8) seq-sharded, "
+             f"explicit mesh; collective {coll:.0f} B/token ({kinds})"),
+    "collective_bytes": coll,
+})
 print("JSON:" + json.dumps(rows))
 """
 
@@ -113,7 +143,8 @@ def dist_decode_bench(json_path="BENCH_kernels.json"):
                     existing = json.load(f)
             except ValueError:
                 existing = []
-        existing = [r for r in existing if r.get("op") != "dist_decode"]
+        existing = [r for r in existing
+                    if r.get("op") not in ("dist_decode", "engine_decode")]
         existing.extend(rows)
         with open(json_path, "w") as f:
             json.dump(existing, f, indent=1)

@@ -116,6 +116,29 @@ def kernel_microbench(json_path="BENCH_kernels.json"):
          flops=flops, staged=staged_fu,
          note=f"fused epilogue bf16, {t_un / t_fu:.2f}x vs unfused")
 
+    # ---- dual-matmul fused swiglu vs the three-pass composition (two
+    # separate matmuls staging x twice + the g*h elementwise HBM pass)
+    wg = jax.random.normal(key, (K, N), jnp.float32).astype(jnp.bfloat16)
+
+    def swiglu_unfused(a, g_w, i_w):
+        g = ops.vwr_matmul(a, g_w, activation="silu",
+                           bm=bm, bk=bk, bn=bn)
+        return g * ops.vwr_matmul(a, i_w, bm=bm, bk=bk, bn=bn)
+
+    def swiglu_fused(a, g_w, i_w):
+        return ops.vwr_swiglu(a, g_w, i_w, bm=bm, bk=bk, bn=bn)
+
+    t_su, t_sf = _time_paired(swiglu_unfused, swiglu_fused, xb, wg, wb,
+                              reps=30)
+    f_s = 2 * 2 * M * K * N
+    staged_su = 2 * (bm * bk + bk * bn) * 2 + 4 * M * N * 2
+    staged_sf = (bm * bk + 2 * bk * bn) * 2 + M * N * 2
+    _row(rows, "swiglu_unfused", (M, K, N), t_su, flops=f_s,
+         staged=staged_su, note="two matmuls + g*h pass, bf16")
+    _row(rows, "swiglu_dual_fused", (M, K, N), t_sf, flops=f_s,
+         staged=staged_sf,
+         note=f"shared-LHS dual matmul bf16, {t_su / t_sf:.2f}x")
+
     # ---- direct conv vs depthwise (the reuse cliff the paper targets)
     x4 = jax.random.normal(key, (1, 34, 34, 64), jnp.float32)
     wf = jax.random.normal(key, (3, 3, 64, 64), jnp.float32)

@@ -1,14 +1,42 @@
-"""Serving example (deliverable b): prefill a batch of prompts and
-decode continuations with a KV cache.
+"""Serving example: batch decode through the DecodeEngine.
+
+The engine owns the mesh (explicit — no ``with mesh:`` context), the
+sharded params, the decode-cache layouts, and the jitted
+prefill/decode steps; generation is three calls.
 
     PYTHONPATH=src python examples/serve_batch.py
 """
-import sys
+import jax
+import jax.numpy as jnp
+import numpy as np
 
-from repro.launch.serve import main
+from repro.configs import get_config, reduced
+from repro.engine import DecodeEngine, EngineConfig
 
-if __name__ == "__main__":
-    args = sys.argv[1:]
-    defaults = ["--arch", "qwen1.5-0.5b", "--reduce", "smoke",
-                "--batch", "4", "--prompt-len", "32", "--gen", "16"]
-    main(defaults + args)
+B, P, G = 4, 32, 16
+
+cfg = reduced(get_config("qwen1.5-0.5b"))
+engine = DecodeEngine(cfg, EngineConfig(
+    batch=B, max_len=P + G,
+    mesh_shape=(jax.device_count(), 1),   # (data, model)
+    kernel_impl="xla",                    # or 'pallas' / 'auto'
+))
+
+rng = np.random.default_rng(0)
+prompts = jnp.asarray(rng.integers(2, cfg.vocab, (B, P)), jnp.int32)
+tokens, stats = engine.generate({"tokens": prompts}, gen=G)
+
+print(f"[engine] {engine.cfg.name}: mesh {dict(engine.mesh.shape)}; "
+      f"prefill {stats['prefill_tok_s']:.0f} tok/s, "
+      f"decode {stats['decode_tok_s']:.0f} tok/s")
+for b in range(2):
+    print("   gen:", np.asarray(tokens[b]))
+assert tokens.shape == (B, G)
+
+# the same engine also exposes the raw step API (continuous batching &
+# speculative decoding build on these):
+logits, cache = engine.prefill({"tokens": prompts})
+tok = jnp.argmax(logits, -1).astype(jnp.int32)
+logits2, cache = engine.decode_step(tok, P, cache)
+assert logits2.shape[0] == B
+print("engine example OK")

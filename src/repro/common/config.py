@@ -105,6 +105,7 @@ class ModelConfig:
     # 'ddp'     = both mesh axes are data; params ZeRO-sharded over all
     #             (right choice for sub-1B archs on a 256-chip mesh)
     sharding_strategy: str = "fsdp_tp"
+    # kernel-dispatch backend (repro.kernels.dispatch registry):
     # 'xla'    = einsum/blockwise reference formulations (default; the
     #            path GSPMD shards and the dry-run lowers)
     # 'pallas' = VWR Pallas kernels with fused epilogues + zero-copy
@@ -112,13 +113,19 @@ class ModelConfig:
     #            see repro.kernels.ops).  FORWARD-ONLY: the kernels
     #            define no VJP yet, so this path serves prefill /
     #            decode / eval; lm.train_loss rejects it.
+    # 'auto'   = per-op, per-shape measured choice through the
+    #            autotuner cache (dispatch registry 'dispatch:<op>'
+    #            entries); lm.train_loss pins it back to 'xla'.
     kernel_impl: str = "xla"
     # decode attention distribution:
     # 'none' = the cache is shard-local (GSPMD may still head-shard it)
     # 'seq'  = cache sequence-sharded over 'model'; decode attention
     #          runs distributed FlashDecoding (dist.decode) — per-shard
     #          online-softmax partials, a (B, H)-sized psum combine.
-    #          Falls back to 'none' without an ambient mesh.
+    #          Needs the mesh passed explicitly through
+    #          lm.decode_step/steps.build_decode (engine.DecodeEngine
+    #          does); the ambient-mesh fallback is deprecated.  Falls
+    #          back to 'none' without a mesh.
     decode_shard: str = "none"
     dtype: str = "bfloat16"
     remat: str = "full"            # full | dots | none

@@ -16,59 +16,75 @@ cross the wire:
 from the single-shard side.)  Collective bytes per token are
 O(B * H * (Dh + 2)) — independent of context length.
 
-Per shard the partial is computed either by the XLA reference
-(`flash_decode_partial`) or, when ``kernel_impl == 'pallas'``, by the
-VWR flash-decode kernel (`repro.kernels.ops.vwr_flash_decode`), which
-stages the local cache slab in wide (bkv x Dh) VMEM blocks.
+Per shard the partial comes from the ``decode_partial`` op of the
+kernel-dispatch registry (``repro.kernels.dispatch``): backend 'xla'
+is the einsum reference, 'pallas' the VWR flash-decode kernel staging
+the local slab in wide (bkv x Dh) VMEM blocks, 'auto' the measured
+winner.  GQA, absorbed MLA (via ``mla.mla_absorbed_mqa``'s KV=1 view)
+and encoder cross-attention all decode through this one surface.
+
+The mesh is an **explicit argument** everywhere here; ``decode_attend``
+falls back to the ambient ``with mesh:`` context only through the
+deprecated ``hints.resolve_mesh`` shim.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as PS
 
-from repro.common.hints import ambient_mesh
-from repro.models.attention import decode_attend_local, flash_decode_partial
+from repro.common.hints import resolve_mesh
+from repro.kernels import dispatch as D
+from repro.models.attention import decode_attend_local  # noqa: F401  (re-export)
 
 
-def _local_partial(q, k, v, cur_len, pos0, n_local, kernel_impl):
-    """(o_tilde, m, l) for one contiguous cache slab starting at global
-    position ``pos0``."""
-    if kernel_impl == "pallas":
-        from repro.kernels import autotune, ops
-        # block size from the cost-model prior only: the measuring
-        # tuner must not fire inside shard_map tracing
-        cands = autotune.decode_candidates(n_local, q.shape[-1],
-                                           str(q.dtype))
-        bkv = min(cands, key=lambda c: autotune.decode_prior(
-            q.shape[0], n_local, q.shape[1], k.shape[2], q.shape[-1],
-            str(q.dtype), c))[0]
-        return ops.vwr_flash_decode(q, k, v, cur_len, pos0=pos0,
-                                    bkv=bkv)
-    kv_positions = pos0 + jnp.arange(n_local)
-    return flash_decode_partial(q, k, v, kv_positions, cur_len)
+def _normalize(o_t, l, dtype):
+    return (o_t / jnp.maximum(l, 1e-30)[..., None]).astype(dtype)
+
+
+def local_decode_attend(q, cache_k, cache_v, cur_len, *,
+                        backend="xla") -> jax.Array:
+    """Single-shard decode attention (normalized) through the dispatch
+    registry."""
+    o_t, m, l = D.dispatch("decode_partial", backend, q, cache_k,
+                           cache_v, cur_len)
+    return _normalize(o_t, l, q.dtype)
 
 
 def sharded_flash_decode(mesh, q, cache_k, cache_v, cur_len, *,
-                         kernel_impl: str = "xla",
+                         backend: str = "xla",
                          data_axis: str = "data",
-                         model_axis: str = "model"):
+                         model_axis: str = "model",
+                         kernel_impl: Optional[str] = None):
     """Decode attention with the cache sequence-sharded over
     ``model_axis`` and the batch over ``data_axis``.
 
     q: (B, H, Dh) one new token; cache_k/v: (B, T, KV, Dh);
     cur_len: scalar count of valid positions (global).  Returns the
     normalized (B, H, Dh) context, bitwise-equivalent (up to fp
-    reassociation) to ``decode_attend_local`` on the unsharded cache.
+    reassociation) to the single-shard path on the unsharded cache.
+    ``kernel_impl`` is a deprecated alias for ``backend``.
     """
+    if kernel_impl is not None:
+        D.warn_kernel_impl_kwarg("dist.decode.sharded_flash_decode")
+        backend = kernel_impl
+    # 'auto' resolves HERE, outside shard_map, by cache lookup only
+    # (replaying a winner the local decode path measured for these
+    # shapes, if any): the measuring dispatch tuner — like the block
+    # tuner, hence tune=False below — must not run timed kernels
+    # inside shard_map tracing
+    backend = D.cached_backend("decode_partial", backend,
+                               (q, cache_k, cache_v, cur_len))
     B, H, Dh = q.shape
     T = cache_k.shape[1]
     msize = mesh.shape.get(model_axis, 1) if model_axis else 1
     if model_axis not in mesh.axis_names or T % msize:
         # no model axis / ragged split: single-shard reference
-        return decode_attend_local(q, cache_k, cache_v, jnp.arange(T),
-                                   cur_len)
+        return local_decode_attend(q, cache_k, cache_v, cur_len,
+                                   backend=backend)
     n_local = T // msize
     dsize = mesh.shape.get(data_axis, 1)
     dp = (data_axis if data_axis in mesh.axis_names
@@ -76,13 +92,13 @@ def sharded_flash_decode(mesh, q, cache_k, cache_v, cur_len, *,
 
     def shard_fn(q, k, v, cur):
         pos0 = jax.lax.axis_index(model_axis) * n_local
-        o_t, m, l = _local_partial(q, k, v, cur, pos0, n_local,
-                                   kernel_impl)
+        o_t, m, l = D.dispatch("decode_partial", backend, q, k, v, cur,
+                               pos0, tune=False)
         m_star = jax.lax.pmax(m, model_axis)
         scale = jnp.exp(m - m_star)                       # (B, H)
         o = jax.lax.psum(o_t * scale[..., None], model_axis)
         l = jax.lax.psum(l * scale, model_axis)
-        return (o / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        return _normalize(o, l, q.dtype)
 
     fn = shard_map(
         shard_fn, mesh=mesh,
@@ -100,24 +116,28 @@ def sharded_flash_decode(mesh, q, cache_k, cache_v, cur_len, *,
 
 
 def decode_attend(q, cache_k, cache_v, cur_len, *,
-                  kernel_impl: str = "xla",
-                  mesh=None) -> jax.Array:
+                  backend: str = "xla",
+                  mesh=None, seq_shard: bool = True,
+                  kernel_impl: Optional[str] = None) -> jax.Array:
     """Mesh-aware decode attention used by ``models.lm``.
 
-    Routes to ``sharded_flash_decode`` when a mesh with a 'model' axis
-    is available (explicitly or ambient) and the cache splits evenly;
-    falls back to the local kernel/XLA path otherwise, so the same
-    model code serves one chip and a pod.
+    Routes to ``sharded_flash_decode`` when ``seq_shard`` and a mesh
+    with a 'model' axis is available and the cache splits evenly; falls
+    back to the local registry path otherwise, so the same model code
+    serves one chip and a pod.  Pass the mesh explicitly (the engine
+    does); omitting it hits the deprecated ambient-mesh fallback in
+    ``hints.resolve_mesh``.  ``kernel_impl`` is a deprecated alias for
+    ``backend``.
     """
-    mesh = mesh if mesh is not None else ambient_mesh()
-    T = cache_k.shape[1]
-    if (mesh is not None and "model" in mesh.axis_names
-            and T % mesh.shape["model"] == 0):
-        return sharded_flash_decode(mesh, q, cache_k, cache_v, cur_len,
-                                    kernel_impl=kernel_impl)
-    if kernel_impl == "pallas":
-        from repro.kernels import ops
-        o_t, m, l = ops.vwr_flash_decode(q, cache_k, cache_v, cur_len)
-        return (o_t / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
-    return decode_attend_local(q, cache_k, cache_v, jnp.arange(T),
-                               cur_len)
+    if kernel_impl is not None:
+        D.warn_kernel_impl_kwarg("dist.decode.decode_attend")
+        backend = kernel_impl
+    if seq_shard:
+        mesh = resolve_mesh(mesh, "dist.decode.decode_attend")
+        T = cache_k.shape[1]
+        if (mesh is not None and "model" in mesh.axis_names
+                and T % mesh.shape["model"] == 0):
+            return sharded_flash_decode(mesh, q, cache_k, cache_v,
+                                        cur_len, backend=backend)
+    return local_decode_attend(q, cache_k, cache_v, cur_len,
+                               backend=backend)

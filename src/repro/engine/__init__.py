@@ -1,0 +1,10 @@
+"""Serving engine: explicit-mesh prefill/decode on the dispatch registry.
+
+``DecodeEngine`` owns the mesh, the TP-sharded params, the decode-cache
+PartitionSpecs and the jitted step functions; ``pad_cache_from_prefill``
+is the prefill->decode cache handoff it (and ``launch.serve``) uses.
+"""
+from repro.engine.cache import pad_cache_from_prefill
+from repro.engine.engine import DecodeEngine, EngineConfig
+
+__all__ = ["DecodeEngine", "EngineConfig", "pad_cache_from_prefill"]

@@ -1,0 +1,70 @@
+"""Decode-cache construction: place prefill KV material into the
+fixed-size decode buffers (moved here from ``launch.serve`` — the
+engine owns the cache lifecycle)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+
+
+def pad_cache_from_prefill(cfg, caches, batch, max_len, prefill_len=None,
+                           enc_len=0):
+    """Place prefill KV stacks into fixed-size decode cache buffers
+    (at offset 0; the prefill length is implicit in the stacks).
+
+    ``prefill_len`` is accepted for signature compatibility with the
+    pre-engine ``launch.serve`` API and ignored — the stacks carry
+    their own length."""
+    cache = lm.init_cache(cfg, batch, max_len, enc_len=enc_len)
+    fam = cfg.family
+
+    def put(buf, kv):           # buf (L,B,T,...) <- kv (L,B,S,...)
+        return jax.lax.dynamic_update_slice(
+            buf, kv.astype(buf.dtype), (0,) * buf.ndim)
+
+    if fam in ("dense", "vlm"):
+        if cfg.mla is not None:
+            ckv, krope = caches
+            cache = {"ckv": put(cache["ckv"], ckv),
+                     "krope": put(cache["krope"], krope)}
+        else:
+            k, v = caches
+            cache = {"k": put(cache["k"], k), "v": put(cache["v"], v)}
+    elif fam == "moe":
+        kv_d, kv_m = caches
+        if cfg.mla is not None:
+            if cfg.moe.first_k_dense and kv_d is not None:
+                cache["dense"] = {
+                    "ckv": put(cache["dense"]["ckv"], kv_d[0]),
+                    "krope": put(cache["dense"]["krope"], kv_d[1])}
+            cache["moe"] = {"ckv": put(cache["moe"]["ckv"], kv_m[0]),
+                            "krope": put(cache["moe"]["krope"], kv_m[1])}
+        else:
+            if cfg.moe.first_k_dense and kv_d is not None:
+                cache["dense"] = {"k": put(cache["dense"]["k"], kv_d[0]),
+                                  "v": put(cache["dense"]["v"], kv_d[1])}
+            cache["moe"] = {"k": put(cache["moe"]["k"], kv_m[0]),
+                            "v": put(cache["moe"]["v"], kv_m[1])}
+    elif fam == "hybrid":
+        (st_main, kv_main), (st_tail, kv_tail) = caches
+        cache["mamba_main"] = st_main
+        if st_tail is not None:
+            cache["mamba_tail"] = st_tail
+        ks = [kv_main[0]] if kv_tail is None else [kv_main[0],
+                                                   kv_tail[0][None]]
+        vs = [kv_main[1]] if kv_tail is None else [kv_main[1],
+                                                   kv_tail[1][None]]
+        cache["attn_k"] = put(cache["attn_k"], jnp.concatenate(ks, 0))
+        cache["attn_v"] = put(cache["attn_v"], jnp.concatenate(vs, 0))
+    elif fam == "ssm":
+        m_sts, s_st = caches
+        cache = {"mlstm": m_sts, "slstm": s_st}
+    elif fam == "audio":
+        kv, cross = caches
+        cache["self_k"] = put(cache["self_k"], kv[0])
+        cache["self_v"] = put(cache["self_v"], kv[1])
+        cache["cross_k"] = put(cache["cross_k"], cross[0])
+        cache["cross_v"] = put(cache["cross_v"], cross[1])
+    return cache

@@ -1,0 +1,195 @@
+"""DecodeEngine: the explicit-mesh serving surface.
+
+One object owns everything serving needs — the device mesh, the
+TP-sharded parameters, the decode-cache PartitionSpecs, and the jitted
+prefill/decode step functions — and threads the mesh *explicitly*
+through ``lm.prefill`` / ``lm.decode_step`` / ``dist.decode``.  Nothing
+on the decode hot path consults the ambient ``with mesh:`` context
+(that lookup survives only as a deprecated fallback in
+``common.hints``).
+
+Quickstart::
+
+    from repro.configs import get_config, reduced
+    from repro.engine import DecodeEngine, EngineConfig
+
+    cfg = reduced(get_config("qwen1.5-0.5b"))
+    eng = DecodeEngine(cfg, EngineConfig(batch=4, max_len=48,
+                                         mesh_shape=(1, 1)))
+    tokens, stats = eng.generate({"tokens": prompt_tokens}, gen=16)
+
+Migration from the pre-engine API: where you wrote
+``steps.build_decode(cfg, mesh)`` + hand-rolled ``device_put`` of
+params/cache against ``dist.sharding`` pspecs inside ``with mesh:``,
+construct a ``DecodeEngine`` instead — it builds the same step
+functions and layouts, and the ``with mesh:`` context is no longer
+needed because the mesh rides the call chain.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import sharding as SH
+from repro.engine.cache import pad_cache_from_prefill
+from repro.launch import steps
+from repro.launch.mesh import make_local_mesh
+from repro.models import lm
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Serving-shape knobs (everything model-side lives in ModelConfig).
+
+    ``decode_shard`` / ``kernel_impl`` default to None = inherit the
+    ModelConfig's setting — a cfg pinned to 'pallas'/'seq' is honored
+    unless the EngineConfig overrides it explicitly."""
+    batch: int = 1
+    max_len: int = 128              # prompt + generation budget
+    mesh_shape: Tuple[int, int] = (1, 1)      # (data, model)
+    decode_shard: Optional[str] = None   # 'none' | 'seq' (dist.decode)
+    kernel_impl: Optional[str] = None    # 'xla' | 'pallas' | 'auto'
+    param_strategy: str = "serve"   # dist.sharding param strategy
+
+    def replace(self, **kw) -> "EngineConfig":
+        return dataclasses.replace(self, **kw)
+
+
+class DecodeEngine:
+    """Owns mesh + sharded params + cache pspecs + jitted steps.
+
+    ``params`` may be a ready parameter tree (it is re-laid-out onto
+    the engine's mesh) or None to initialize fresh from ``seed``.
+    ``mesh`` may be passed explicitly (e.g. a production mesh); by
+    default it is built from ``ecfg.mesh_shape`` over local devices.
+    """
+
+    def __init__(self, cfg, ecfg: EngineConfig, params=None, mesh=None,
+                 seed: int = 0):
+        # None in the EngineConfig = inherit the ModelConfig's knob
+        ecfg = ecfg.replace(
+            kernel_impl=(ecfg.kernel_impl if ecfg.kernel_impl is not None
+                         else cfg.kernel_impl),
+            decode_shard=(ecfg.decode_shard
+                          if ecfg.decode_shard is not None
+                          else cfg.decode_shard))
+        cfg = cfg.replace(kernel_impl=ecfg.kernel_impl,
+                          decode_shard=ecfg.decode_shard)
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.mesh = mesh if mesh is not None else make_local_mesh(
+            *ecfg.mesh_shape)
+        if ecfg.decode_shard == "seq":
+            msize = self.mesh.shape.get("model", 1)
+            if ecfg.max_len % msize:
+                raise ValueError(
+                    f"decode_shard='seq' needs max_len={ecfg.max_len} "
+                    f"divisible by the model axis ({msize})")
+
+        self.param_pspecs = SH.param_pspecs(cfg, self.mesh,
+                                            ecfg.param_strategy)
+        if params is None:
+            params = lm.init(cfg, jax.random.PRNGKey(seed))
+        self.params = jax.device_put(
+            params, SH.to_shardings(self.mesh, self.param_pspecs))
+
+        self.cache_pspecs = SH.cache_pspecs(
+            cfg, self.mesh, ecfg.batch,
+            seq_shard=(ecfg.decode_shard == "seq"))
+        self.prefill_fn = jax.jit(steps.build_prefill(cfg, mesh=self.mesh))
+        self.decode_fn = jax.jit(steps.build_decode(cfg, self.mesh))
+
+    # ------------------------------------------------------------------
+    # steps
+    # ------------------------------------------------------------------
+
+    def prefill(self, batch: Dict[str, Any]):
+        """Prefill ``batch['tokens']`` (B, P) [+ frontend_emb] and build
+        the fixed-size, mesh-laid-out decode cache.
+
+        Returns (last-token logits (B, vocab_padded) fp32, cache)."""
+        B, P = batch["tokens"].shape
+        if B != self.ecfg.batch:
+            raise ValueError(f"batch {B} != engine batch {self.ecfg.batch}")
+        # encoder-decoder: the cross-attention cache is sized by the
+        # ENCODER sequence (frontend_emb), which need not equal the
+        # decoder prompt length
+        enc_len = (batch["frontend_emb"].shape[1]
+                   if self.cfg.is_encdec and "frontend_emb" in batch
+                   else P)
+        logits, caches = self.prefill_fn(self.params, batch)
+        cache = pad_cache_from_prefill(self.cfg, caches, B,
+                                       self.ecfg.max_len, enc_len=enc_len)
+        cache = jax.device_put(
+            cache, SH.to_shardings(self.mesh, self.cache_pspecs))
+        return logits, cache
+
+    def decode_step(self, token, cur_len, cache):
+        """One token for the whole batch: token (B,) int32, cur_len
+        scalar.  Returns (logits (B, vocab_padded) fp32, new cache)."""
+        return self.decode_fn(self.params, {
+            "token": token, "cur_len": jnp.int32(cur_len),
+            "cache": cache})
+
+    def prefill_len(self, batch) -> int:
+        """Positions the prefill occupied (vlm prepends frontend tokens)."""
+        P = batch["tokens"].shape[1]
+        if self.cfg.family == "vlm":
+            P += self.cfg.frontend_tokens
+        return P
+
+    # ------------------------------------------------------------------
+    # generation loop
+    # ------------------------------------------------------------------
+
+    def generate(self, batch: Dict[str, Any], gen: int,
+                 temperature: float = 0.0, seed: int = 0,
+                 ) -> Tuple[jax.Array, Dict[str, float]]:
+        """Prefill + ``gen`` greedy (or sampled) decode steps.
+
+        Returns (tokens (B, gen) int32, stats with prefill/decode wall
+        times and tok/s)."""
+        prefill_tokens = self.prefill_len(batch)
+        if prefill_tokens + gen - 1 > self.ecfg.max_len:
+            raise ValueError(
+                f"prompt {prefill_tokens} + gen {gen} exceeds "
+                f"max_len {self.ecfg.max_len}")
+        B = batch["tokens"].shape[0]
+
+        t0 = time.time()
+        logits, cache = self.prefill(batch)
+        logits.block_until_ready()
+        t_prefill = time.time() - t0
+
+        def pick(logits, i):
+            if temperature > 0:
+                key = jax.random.PRNGKey(seed + i)
+                return jax.random.categorical(
+                    key, logits / temperature, -1).astype(jnp.int32)
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+
+        # first token is always the argmax of the prefill logits and
+        # step i samples with PRNGKey(seed + i) — the pre-engine serve
+        # CLI's exact convention, so logged (seed, args) pairs replay
+        # to the same token streams across the engine migration
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out = [tok]
+        t0 = time.time()
+        for i in range(gen - 1):
+            logits, cache = self.decode_step(
+                tok, prefill_tokens + i, cache)
+            tok = pick(logits, i)
+            out.append(tok)
+        jax.block_until_ready(tok)
+        t_decode = time.time() - t0
+        stats = {
+            "t_prefill_s": t_prefill,
+            "t_decode_s": t_decode,
+            "prefill_tok_s": B * prefill_tokens / max(t_prefill, 1e-9),
+            "decode_tok_s": B * max(gen - 1, 0) / max(t_decode, 1e-9),
+        }
+        return jnp.stack(out, 1), stats

@@ -48,6 +48,7 @@ from repro.launch.roofline import HBM_BW, PEAK_FLOPS
 
 DEFAULT_BLOCKS = {
     "matmul": (256, 512, 256),
+    "swiglu": (256, 512, 256),
     "attention": (256, 512),
     "conv": (8, 128),
     "decode": (512,),
@@ -180,6 +181,40 @@ def matmul_prior(M: int, K: int, N: int, dtype: str,
     staged = nm * nn * nk * (bm * bk + bk * bn) * dt + nm * nn * bm * bn * dt
     t = max(flops / PEAK_FLOPS, staged / HBM_BW)
     # wide-transaction width = one staged LHS row (bk operands)
+    e_bit = _stage_energy_fj_per_bit(bk * dt * 8)
+    return (t, e_bit)
+
+
+def swiglu_candidates(M: int, K: int, N: int, dtype: str
+                      ) -> Tuple[Tuple[int, int, int], ...]:
+    """Dual-matmul swiglu: the staged x block is shared by both
+    matmuls, but two weight blocks and two fp32 accumulators live in
+    VMEM at once."""
+    dt = _dtype_bytes(dtype)
+    cands = []
+    for bm in _pow2s(32, 256, max(32, M)):
+        for bk in _pow2s(64, 512, max(64, K)):
+            for bn in _pow2s(32, 256, max(32, N)):
+                vmem = (bm * bk + 2 * bk * bn + bm * bn) * dt \
+                    + 2 * bm * bn * 4
+                if vmem <= VMEM_BUDGET:
+                    cands.append((bm, bk, bn))
+    return tuple(cands)
+
+
+def swiglu_prior(M: int, K: int, N: int, dtype: str,
+                 cand: Tuple[int, int, int]) -> Tuple[float, float]:
+    """Matmul prior with doubled flops/weight-bytes and a *shared* LHS
+    stage: the x block is fetched once per grid step for both matmuls,
+    which is exactly the fusion's bandwidth win over two separate
+    matmul calls (which would stage x twice and round-trip g and h)."""
+    bm, bk, bn = cand
+    dt = _dtype_bytes(dtype)
+    nm, nn, nk = (math.ceil(M / bm), math.ceil(N / bn), math.ceil(K / bk))
+    flops = 2 * 2.0 * (nm * bm) * (nk * bk) * (nn * bn)
+    staged = nm * nn * nk * (bm * bk + 2 * bk * bn) * dt \
+        + nm * nn * bm * bn * dt
+    t = max(flops / PEAK_FLOPS, staged / HBM_BW)
     e_bit = _stage_energy_fj_per_bit(bk * dt * 8)
     return (t, e_bit)
 

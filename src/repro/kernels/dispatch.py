@@ -1,0 +1,242 @@
+"""Kernel-dispatch registry: one seam between model code and kernels.
+
+The paper's thesis is that versatility across streaming workloads comes
+from one adaptive memory/compute surface, not per-workload special
+cases.  The code-level analogue: model and distribution code never
+compares implementation strings (``if kernel_impl == "pallas"``) —
+every op with more than one realization is *registered* here per
+backend, and callers say ``dispatch(op, cfg, *args)``.  New backends
+(a future ``custom_vjp`` training path, a second accelerator) plug in
+with a ``@register`` decorator instead of another branch in every
+caller.
+
+Backends:
+  'xla'     einsum/blockwise reference formulations (GSPMD-shardable,
+            differentiable) — the default.
+  'pallas'  VWR Pallas kernels (fused epilogues, zero-copy GQA,
+            autotuned blocks).  Forward-only.
+  'auto'    per-op, per-shape choice.  Consults the same persisted
+            autotuner cache as the block tuner (``kernels.autotune``):
+            on a miss both backends are *measured* on synthesized
+            inputs of the call's shapes and the winner is cached under
+            ``dispatch:<op>``; with measurement disabled
+            (``REPRO_AUTOTUNE=0``) the prior picks the fused Pallas
+            path when one is registered (the paper's wide-staging
+            default).
+
+Registration lives next to the reference implementation of each op
+(``models/attention.py``, ``models/layers.py``), so importing the
+model layer populates the registry; the Pallas bodies keep their lazy
+``from repro.kernels import ops`` imports.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Any, Callable, Dict, Tuple
+
+# op -> backend -> implementation
+_REGISTRY: Dict[str, Dict[str, Callable]] = {}
+
+# preferred backend order for 'auto' (first = the prior's pick)
+AUTO_ORDER: Tuple[str, ...] = ("pallas", "xla")
+
+# backends jax.grad can differentiate through.  When the custom_vjp
+# training path lands (ROADMAP), 'pallas' joins this tuple and
+# training picks it up with no model-code change — this property is
+# the registry's, not scattered string comparisons'.
+DIFFERENTIABLE_BACKENDS: Tuple[str, ...] = ("xla",)
+
+
+def training_backend(cfg_or_backend: Any) -> str:
+    """The backend training may use: 'auto' narrows to the
+    differentiable set; a non-differentiable pin raises."""
+    backend = backend_for(cfg_or_backend)
+    if backend == "auto":
+        return DIFFERENTIABLE_BACKENDS[0]
+    if backend not in DIFFERENTIABLE_BACKENDS:
+        raise ValueError(
+            f"kernel_impl={backend!r} is forward-only (prefill/decode/"
+            "eval): the VWR Pallas kernels define no VJP yet, and "
+            "jax.grad through them dies with an opaque assertion.  "
+            f"Train with kernel_impl in {DIFFERENTIABLE_BACKENDS} "
+            "(see ROADMAP open items).")
+    return backend
+
+
+def register(op: str, backend: str) -> Callable[[Callable], Callable]:
+    """Decorator: ``@register("mlp", "pallas")`` adds an implementation.
+    Re-registration overwrites (tests monkeypatch through this)."""
+
+    def deco(fn: Callable) -> Callable:
+        _REGISTRY.setdefault(op, {})[backend] = fn
+        return fn
+
+    return deco
+
+
+def ops() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def backends(op: str) -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY.get(op, ())))
+
+
+def backend_for(cfg_or_backend: Any) -> str:
+    """A ModelConfig (uses ``cfg.kernel_impl``) or a backend string."""
+    if isinstance(cfg_or_backend, str):
+        return cfg_or_backend
+    return getattr(cfg_or_backend, "kernel_impl", "xla")
+
+
+def resolve(op: str, cfg_or_backend: Any, args=(), kwargs=None) -> Callable:
+    """The implementation ``dispatch`` would call (without calling it)."""
+    table = _REGISTRY.get(op)
+    if not table:
+        raise KeyError(
+            f"no implementations registered for op {op!r}; "
+            f"registered ops: {ops()}")
+    backend = backend_for(cfg_or_backend)
+    if backend == "auto":
+        backend = _resolve_auto(op, table, args, kwargs or {})
+    impl = table.get(backend)
+    if impl is None:
+        raise KeyError(
+            f"op {op!r} has no {backend!r} backend; "
+            f"registered: {backends(op)}")
+    return impl
+
+
+def dispatch(op: str, cfg_or_backend: Any, *args, **kwargs):
+    """Call the registered implementation of ``op`` for the backend
+    selected by ``cfg_or_backend`` (a ModelConfig or backend string)."""
+    return resolve(op, cfg_or_backend, args, kwargs)(*args, **kwargs)
+
+
+def cached_backend(op: str, cfg_or_backend: Any, args=(),
+                   kwargs=None) -> str:
+    """Resolve 'auto' by pure cache LOOKUP — replay a measured
+    ``dispatch:<op>`` winner if one exists for these arg shapes, else
+    fall back to the prior order.  Never measures and never writes, so
+    it is safe while *constructing* a shard_map program (the measuring
+    path is only unsafe inside the traced body)."""
+    backend = backend_for(cfg_or_backend)
+    if backend != "auto":
+        return backend
+    table = _REGISTRY.get(op, {})
+    cands = [b for b in AUTO_ORDER if b in table]
+    cands += [b for b in sorted(table) if b not in cands]
+    if not cands:
+        return "xla"
+    from repro.kernels import autotune
+    from repro.kernels import ops as kops
+
+    shape, dtype = _arg_signature(args, kwargs or {})
+    if shape and autotune.enabled():
+        tag = kops._backend_tag(kops._auto_interpret(None))
+        key = autotune.cache_key(f"dispatch:{op}", shape, dtype, tag)
+        hit = autotune._load(autotune.cache_path()).get(key)
+        if hit is not None:
+            idx = int(hit["blocks"][0])
+            if 0 <= idx < len(cands):
+                return cands[idx]
+    return cands[0]
+
+
+# ======================================================================
+# 'auto': measured xla-vs-pallas choice through the autotuner cache
+# ======================================================================
+
+def _arg_signature(args, kwargs):
+    """Flattened shapes of every array-typed argument, plus the first
+    array dtype with the non-array static args (activation name,
+    causal flag, ...) folded in — the cache key for a dispatch
+    decision.  Without the static part, ``mlp(..., 'gelu')`` and
+    ``mlp(..., 'relu')`` at the same shapes would collide on one
+    measured winner."""
+    import jax
+
+    shape: list = []
+    static: list = []
+    dtype = None
+    for leaf in jax.tree.leaves(
+            (args, kwargs), is_leaf=lambda x: x is None):
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            shape.extend(int(s) for s in leaf.shape)
+            shape.append(-1)                    # arg separator
+            if dtype is None:
+                dtype = str(leaf.dtype)
+        elif isinstance(leaf, (str, bool, int, float)) or leaf is None:
+            static.append(str(leaf))
+    dtype = dtype or "float32"
+    if static:
+        dtype = dtype + ";" + ",".join(static)
+    return tuple(shape), dtype
+
+
+def _synthesize(args, kwargs):
+    """Concrete zero-filled stand-ins for (possibly traced) call args,
+    so candidate backends can be timed at trace time — the same move
+    the block autotuner's runners make with ``jnp.ones``."""
+    import jax
+    import jax.numpy as jnp
+
+    def conc(leaf):
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            return jnp.zeros(leaf.shape, leaf.dtype)
+        return leaf
+
+    return jax.tree.map(conc, (args, kwargs))
+
+
+def _resolve_auto(op: str, table: Dict[str, Callable], args, kwargs) -> str:
+    from repro.kernels import autotune
+    from repro.kernels import ops as kops
+    import jax
+
+    cands = [b for b in AUTO_ORDER if b in table]
+    cands += [b for b in sorted(table) if b not in cands]
+    if len(cands) == 1:
+        return cands[0]
+    shape, dtype = _arg_signature(args, kwargs)
+    if not shape:                       # nothing to key on: trust prior
+        return cands[0]
+    tag = kops._backend_tag(kops._auto_interpret(None))
+
+    def runner(cand):
+        impl = table[cands[cand[0]]]
+        cargs, ckw = _synthesize(args, kwargs)
+
+        def run():
+            jax.block_until_ready(impl(*cargs, **ckw))
+        return run
+
+    idx, = autotune.get_blocks(
+        f"dispatch:{op}", shape, dtype, tag,
+        candidates=tuple((i,) for i in range(len(cands))),
+        # prior: registration-preference order (pallas first); the
+        # measured pass, when enabled, overrides it per shape
+        prior=lambda c: (float(c[0]), 0.0),
+        runner=runner if autotune.enabled() else None)
+    return cands[idx]
+
+
+# ======================================================================
+# deprecation shim for the old kernel_impl= call-site kwarg
+# ======================================================================
+
+_KERNEL_IMPL_WARNED = False
+
+
+def warn_kernel_impl_kwarg(site: str) -> None:
+    """One DeprecationWarning per process for the legacy ``kernel_impl=``
+    kwarg on ``attention.qkv_proj``/``o_proj`` and ``layers.mlp``."""
+    global _KERNEL_IMPL_WARNED
+    if _KERNEL_IMPL_WARNED:
+        return
+    _KERNEL_IMPL_WARNED = True
+    warnings.warn(
+        f"{site}: the kernel_impl= kwarg is deprecated; pass backend= "
+        "(or a ModelConfig) and let repro.kernels.dispatch route the "
+        "call — implementations are registered per backend there.",
+        DeprecationWarning, stacklevel=3)

@@ -24,7 +24,7 @@ from repro.kernels.vwr_attention import vwr_attention_p
 from repro.kernels.vwr_conv2d import vwr_conv2d_p
 from repro.kernels.vwr_decode import vwr_flash_decode_p
 from repro.kernels.vwr_depthwise import vwr_depthwise_p
-from repro.kernels.vwr_matmul import vwr_matmul_p
+from repro.kernels.vwr_matmul import vwr_matmul_p, vwr_swiglu_p
 
 
 def _auto_interpret(interpret):
@@ -118,6 +118,68 @@ def _matmul_blocks(M, K, N, dtype, interpret):
         "matmul", (M, K, N), dtype, backend,
         candidates=autotune.matmul_candidates(M, K, N, dtype),
         prior=lambda c: autotune.matmul_prior(M, K, N, dtype, c),
+        runner=runner if autotune.enabled() else None)
+
+
+# ======================================================================
+# fused swiglu (dual matmul, shared LHS staging)
+# ======================================================================
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn",
+                                             "interpret"))
+def _vwr_swiglu_jit(x, wg, wi, *, bm, bk, bn, interpret):
+    M, K = x.shape
+    N = wg.shape[1]
+    bm_, bk_, bn_ = (min(bm, M) if M else bm, min(bk, K), min(bn, N))
+    xp = _pad_dim(_pad_dim(x, 0, bm_), 1, bk_)
+    wgp = _pad_dim(_pad_dim(wg, 0, bk_), 1, bn_)
+    wip = _pad_dim(_pad_dim(wi, 0, bk_), 1, bn_)
+    out = vwr_swiglu_p(xp, wgp, wip, bm=bm_, bk=bk_, bn=bn_,
+                       interpret=interpret)
+    return out[:M, :N]
+
+
+def vwr_swiglu(x, wg, wi, *, bm=None, bk=None, bn=None, interpret=None):
+    """``silu(x @ wg) * (x @ wi)`` in one kernel pass.
+
+    x: (M, K); wg, wi: (K, N), arbitrary shapes (padded internally).
+    The staged x block feeds both matmuls and the gate product is
+    applied to the two fp32 accumulators inside the final-K store, so
+    the swiglu hidden activation costs one HBM round-trip total — no
+    separate ``g * h`` elementwise pass.  Block resolution follows the
+    matmul convention (autotuner when unpinned, defaults fill a
+    partial pin)."""
+    interpret = _auto_interpret(interpret)
+    M, K = x.shape
+    N = wg.shape[1]
+    if bm is None and bk is None and bn is None:
+        bm, bk, bn = _swiglu_blocks(M, K, N, str(x.dtype), interpret)
+    else:
+        d_bm, d_bk, d_bn = autotune.DEFAULT_BLOCKS["swiglu"]
+        bm = d_bm if bm is None else bm
+        bk = d_bk if bk is None else bk
+        bn = d_bn if bn is None else bn
+    return _vwr_swiglu_jit(x, wg, wi, bm=bm, bk=bk, bn=bn,
+                           interpret=interpret)
+
+
+def _swiglu_blocks(M, K, N, dtype, interpret):
+    backend = _backend_tag(interpret)
+
+    def runner(cand):
+        bm, bk, bn = cand
+        xz = jnp.ones((M, K), jnp.dtype(dtype))
+        wz = jnp.ones((K, N), jnp.dtype(dtype))
+
+        def run():
+            jax.block_until_ready(_vwr_swiglu_jit(
+                xz, wz, wz, bm=bm, bk=bk, bn=bn, interpret=interpret))
+        return run
+
+    return autotune.get_blocks(
+        "swiglu", (M, K, N), dtype, backend,
+        candidates=autotune.swiglu_candidates(M, K, N, dtype),
+        prior=lambda c: autotune.swiglu_prior(M, K, N, dtype, c),
         runner=runner if autotune.enabled() else None)
 
 

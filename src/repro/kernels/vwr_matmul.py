@@ -62,6 +62,61 @@ def _matmul_kernel(x_ref, w_ref, *rest, n_k: int, has_bias: bool,
         o_ref[...] = out.astype(o_ref.dtype)
 
 
+def _dual_matmul_kernel(x_ref, wg_ref, wi_ref, o_ref, accg_ref, acci_ref,
+                        *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        accg_ref[...] = jnp.zeros_like(accg_ref)
+        acci_ref[...] = jnp.zeros_like(acci_ref)
+
+    x = x_ref[...]
+    accg_ref[...] += jnp.dot(x, wg_ref[...],
+                             preferred_element_type=jnp.float32)
+    acci_ref[...] += jnp.dot(x, wi_ref[...],
+                             preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _store():
+        out = jax.nn.silu(accg_ref[...]) * acci_ref[...]
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+def vwr_swiglu_p(x: jax.Array, wg: jax.Array, wi: jax.Array, *,
+                 bm: int = 256, bk: int = 512, bn: int = 256,
+                 interpret: bool = False) -> jax.Array:
+    """``silu(x @ wg) * (x @ wi)`` in one kernel pass (dual-matmul
+    fused-swiglu epilogue).
+
+    x: (M, K); wg, wi: (K, N); dims must divide the block sizes
+    (``ops.vwr_swiglu`` pads).  One staged (bm x bk) x block feeds BOTH
+    matmuls' MXU substeps — the gate's and the up-projection's — so the
+    LHS wide transaction is paid once, and the ``silu(g) * h`` product
+    happens on the two fp32 accumulators inside the final-K store: the
+    gate and up activations never round-trip HBM and the elementwise
+    pass that used to follow the two separate matmuls disappears."""
+    M, K = x.shape
+    K2, N = wg.shape
+    assert K == K2 and wi.shape == (K, N)
+    assert M % bm == 0 and K % bk == 0 and N % bn == 0
+    n_k = K // bk
+    return pl.pallas_call(
+        functools.partial(_dual_matmul_kernel, n_k=n_k),
+        grid=(M // bm, N // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32),
+                        pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=tpu_compiler_params(
+            "parallel", "parallel", "arbitrary"),
+        interpret=interpret,
+    )(x, wg, wi)
+
+
 def vwr_matmul_p(x: jax.Array, w: jax.Array, bias=None, residual=None, *,
                  bm: int = 256, bk: int = 512, bn: int = 256,
                  activation: str = None,

@@ -1,5 +1,9 @@
 """Serving driver: prefill a batch of prompts, decode with a KV cache.
 
+A thin CLI over ``repro.engine.DecodeEngine`` — the engine owns the
+mesh (explicitly, no ambient ``with mesh:`` context), the TP-sharded
+params, the cache layouts, and the jitted prefill/decode steps.
+
 CPU example (small model, batched requests):
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
         --reduce width --batch 4 --prompt-len 64 --gen 32
@@ -10,83 +14,26 @@ params TP-sharded with the 'serve' strategy, the decode cache batch-
 sharded over 'data', and (with ``--shard seq``) sequence-sharded over
 'model' so decode attention runs distributed FlashDecoding
 (``dist.decode``: per-shard online-softmax partials, one (B, H)-sized
-combine on the wire per token).  ``--kernel-impl pallas`` additionally
-stages each shard's cache slab through the VWR flash-decode kernel.
+combine on the wire per token).  ``--kernel-impl`` picks the dispatch-
+registry backend per op: ``pallas`` stages each shard's cache slab
+through the VWR flash-decode kernel, ``auto`` lets the autotuner cache
+decide per shape.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced
-from repro.dist import sharding as SH
-from repro.launch import steps
-from repro.launch.mesh import make_local_mesh
+from repro.engine import DecodeEngine, EngineConfig
+from repro.engine import pad_cache_from_prefill  # noqa: F401  (compat)
 from repro.launch.train import width_reduce
-from repro.models import lm
 
 
-def pad_cache_from_prefill(cfg, caches, batch, max_len, prefill_len,
-                           enc_len=0):
-    """Place prefill KV stacks into fixed-size decode cache buffers."""
-    cache = lm.init_cache(cfg, batch, max_len, enc_len=enc_len)
-    fam = cfg.family
-
-    def put(buf, kv):           # buf (L,B,T,...) <- kv (L,B,S,...)
-        return jax.lax.dynamic_update_slice(
-            buf, kv.astype(buf.dtype), (0,) * buf.ndim)
-
-    if fam in ("dense", "vlm"):
-        if cfg.mla is not None:
-            ckv, krope = caches
-            cache = {"ckv": put(cache["ckv"], ckv),
-                     "krope": put(cache["krope"], krope)}
-        else:
-            k, v = caches
-            cache = {"k": put(cache["k"], k), "v": put(cache["v"], v)}
-    elif fam == "moe":
-        kv_d, kv_m = caches
-        if cfg.mla is not None:
-            if cfg.moe.first_k_dense and kv_d is not None:
-                cache["dense"] = {
-                    "ckv": put(cache["dense"]["ckv"], kv_d[0]),
-                    "krope": put(cache["dense"]["krope"], kv_d[1])}
-            cache["moe"] = {"ckv": put(cache["moe"]["ckv"], kv_m[0]),
-                            "krope": put(cache["moe"]["krope"], kv_m[1])}
-        else:
-            if cfg.moe.first_k_dense and kv_d is not None:
-                cache["dense"] = {"k": put(cache["dense"]["k"], kv_d[0]),
-                                  "v": put(cache["dense"]["v"], kv_d[1])}
-            cache["moe"] = {"k": put(cache["moe"]["k"], kv_m[0]),
-                            "v": put(cache["moe"]["v"], kv_m[1])}
-    elif fam == "hybrid":
-        (st_main, kv_main), (st_tail, kv_tail) = caches
-        cache["mamba_main"] = st_main
-        if st_tail is not None:
-            cache["mamba_tail"] = st_tail
-        ks = [kv_main[0]] if kv_tail is None else [kv_main[0],
-                                                   kv_tail[0][None]]
-        vs = [kv_main[1]] if kv_tail is None else [kv_main[1],
-                                                   kv_tail[1][None]]
-        cache["attn_k"] = put(cache["attn_k"], jnp.concatenate(ks, 0))
-        cache["attn_v"] = put(cache["attn_v"], jnp.concatenate(vs, 0))
-    elif fam == "ssm":
-        m_sts, s_st = caches
-        cache = {"mlstm": m_sts, "slstm": s_st}
-    elif fam == "audio":
-        kv, cross = caches
-        cache["self_k"] = put(cache["self_k"], kv[0])
-        cache["self_v"] = put(cache["self_v"], kv[1])
-        cache["cross_k"] = put(cache["cross_k"], cross[0])
-        cache["cross_v"] = put(cache["cross_v"], cross[1])
-    return cache
-
-
-def main(argv=None):
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduce", choices=["smoke", "width"], default="width")
@@ -95,36 +42,48 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--data-model", type=int, nargs=2, default=None,
-                    help="mesh shape (data, model)")
+                    help="mesh shape (data, model); default "
+                         "(device_count, 1)")
     ap.add_argument("--shard", choices=["none", "seq"], default="none",
                     help="'seq' = sequence-shard the KV cache over "
                          "'model' (distributed FlashDecoding)")
-    ap.add_argument("--kernel-impl", choices=["xla", "pallas"],
+    ap.add_argument("--kernel-impl", choices=["xla", "pallas", "auto"],
                     default="xla")
-    args = ap.parse_args(argv)
+    return ap
+
+
+def engine_config_from_args(args, cfg=None) -> EngineConfig:
+    """CLI namespace -> EngineConfig (the mapping tests pin).
+
+    ``cfg`` (when given) corrects the cache budget for families whose
+    prefill occupies more positions than --prompt-len: the vlm frontend
+    prefix counts against max_len too."""
+    dm = tuple(args.data_model) if args.data_model \
+        else (jax.device_count(), 1)
+    extra = (cfg.frontend_tokens
+             if cfg is not None and cfg.family == "vlm" else 0)
+    return EngineConfig(
+        batch=args.batch,
+        max_len=args.prompt_len + extra + args.gen,
+        mesh_shape=dm,
+        decode_shard=args.shard,
+        kernel_impl=args.kernel_impl,
+    )
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
 
     cfg = get_config(args.arch)
     cfg = reduced(cfg) if args.reduce == "smoke" else width_reduce(cfg)
-    cfg = cfg.replace(kernel_impl=args.kernel_impl,
-                      decode_shard=args.shard)
     if cfg.mamba2 is not None or cfg.xlstm is not None:
         chunk = (cfg.mamba2 or cfg.xlstm).chunk
         assert args.prompt_len % chunk == 0
 
-    dm = args.data_model or (jax.device_count(), 1)
-    mesh = make_local_mesh(*dm)
-    B, P, G = args.batch, args.prompt_len, args.gen
-    max_len = P + G
-    if args.shard == "seq":
-        msize = mesh.shape.get("model", 1)
-        assert max_len % msize == 0, (
-            f"--shard seq needs (prompt+gen)={max_len} divisible by the "
-            f"model axis ({msize})")
+    engine = DecodeEngine(cfg, engine_config_from_args(args, cfg))
+    cfg = engine.cfg
 
-    params = lm.init(cfg, jax.random.PRNGKey(0))
-    params = jax.device_put(
-        params, SH.to_shardings(mesh, SH.param_pspecs(cfg, mesh,
-                                                      "serve")))
+    B, P, G = args.batch, args.prompt_len, args.gen
     rng = np.random.default_rng(0)
     tokens = jnp.asarray(rng.integers(2, cfg.vocab, (B, P)), jnp.int32)
     batch = {"tokens": tokens}
@@ -135,43 +94,12 @@ def main(argv=None):
         batch["frontend_emb"] = jnp.asarray(rng.standard_normal(
             (B, P, cfg.frontend_dim)), jnp.float32)
 
-    with mesh:
-        t0 = time.time()
-        logits, caches = jax.jit(steps.build_prefill(cfg))(
-            params, batch)
-        logits.block_until_ready()
-        t_prefill = time.time() - t0
+    gen, stats = engine.generate(batch, G, temperature=args.temperature)
 
-        prefill_tokens = P + (cfg.frontend_tokens
-                              if cfg.family == "vlm" else 0)
-        cache = pad_cache_from_prefill(cfg, caches, B, max_len, P,
-                                       enc_len=P)
-        cache = jax.device_put(cache, SH.to_shardings(
-            mesh, SH.cache_pspecs(cfg, mesh, B,
-                                  seq_shard=(args.shard == "seq"))))
-        decode = jax.jit(steps.build_decode(cfg, mesh))
-
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        out_tokens = [tok]
-        t0 = time.time()
-        for i in range(G - 1):
-            dbatch = {"token": tok, "cur_len": jnp.int32(prefill_tokens + i),
-                      "cache": cache}
-            logits, cache = decode(params, dbatch)
-            if args.temperature > 0:
-                key = jax.random.PRNGKey(i)
-                tok = jax.random.categorical(
-                    key, logits / args.temperature, -1).astype(jnp.int32)
-            else:
-                tok = jnp.argmax(logits, -1).astype(jnp.int32)
-            out_tokens.append(tok)
-        jax.block_until_ready(tok)
-        t_decode = time.time() - t0
-
-    gen = jnp.stack(out_tokens, 1)
-    print(f"[serve] {cfg.name}: prefill {B}x{P} in {t_prefill:.2f}s "
-          f"({B*P/t_prefill:.0f} tok/s); decode {G-1} steps in "
-          f"{t_decode:.2f}s ({B*(G-1)/max(t_decode,1e-9):.0f} tok/s)")
+    print(f"[serve] {cfg.name}: prefill {B}x{P} in "
+          f"{stats['t_prefill_s']:.2f}s ({stats['prefill_tok_s']:.0f} "
+          f"tok/s); decode {G-1} steps in {stats['t_decode_s']:.2f}s "
+          f"({stats['decode_tok_s']:.0f} tok/s)")
     print("[serve] sample generations (token ids):")
     for b in range(min(B, 2)):
         print("   ", np.asarray(gen[b])[:16])

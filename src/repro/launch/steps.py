@@ -65,18 +65,20 @@ def build_train_step(cfg: ModelConfig, opt_cfg: adamw.OptConfig):
     return train_step
 
 
-def build_prefill(cfg: ModelConfig):
+def build_prefill(cfg: ModelConfig, mesh=None):
     def prefill_step(params, batch):
-        return lm.prefill(params, batch, cfg)
+        return lm.prefill(params, batch, cfg, mesh=mesh)
     return prefill_step
 
 
 def build_decode(cfg: ModelConfig, mesh=None):
-    """One-token serve step.  With a mesh, the step pins the returned
-    logits/cache to the decode sharding vocabulary (dist.sharding), so
-    chained decode calls under jit never drift layouts — the sharded
-    serve path in ``launch.serve`` runs this end to end (sequence-
-    sharded caches when cfg.decode_shard == 'seq')."""
+    """One-token serve step with the mesh passed explicitly through
+    ``lm.decode_step`` (no ambient-mesh lookup on the decode hot path).
+
+    With a mesh, the step pins the returned logits/cache to the decode
+    sharding vocabulary (dist.sharding), so chained decode calls under
+    jit never drift layouts — ``engine.DecodeEngine`` runs this end to
+    end (sequence-sharded caches when cfg.decode_shard == 'seq')."""
     if mesh is None:
         def serve_step(params, batch):
             return lm.decode_step(params, batch, cfg)
@@ -85,7 +87,7 @@ def build_decode(cfg: ModelConfig, mesh=None):
     from repro.dist import sharding as SH
 
     def sharded_serve_step(params, batch):
-        logits, cache = lm.decode_step(params, batch, cfg)
+        logits, cache = lm.decode_step(params, batch, cfg, mesh=mesh)
         B = logits.shape[0]
         pspecs = SH.decode_batch_pspecs(
             cfg, mesh, B, seq_shard=(cfg.decode_shard == "seq"))

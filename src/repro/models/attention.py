@@ -21,6 +21,7 @@ from jax.sharding import PartitionSpec as PS
 
 from repro.common.hints import shard_hint
 from repro.common.module import ParamDef, zeros_init
+from repro.kernels import dispatch as D
 from repro.models.layers import apply_rope
 
 NEG_INF = -1e30
@@ -44,48 +45,75 @@ def gqa_spec(cfg):
     return spec
 
 
-def qkv_proj(p, x, positions, rope_theta, kernel_impl: str = "xla"):
-    if kernel_impl == "pallas":
-        from repro.kernels import ops
-        B, S, d = x.shape
-        x2 = x.reshape(B * S, d)
+@D.register("qkv_proj", "xla")
+def _qkv_proj_xla(p, x):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return q, k, v
 
-        def proj(w, b):
-            nh, dh = w.shape[1], w.shape[2]
-            bias = None if b is None else b.reshape(1, nh * dh)
-            out = ops.vwr_matmul(x2, w.reshape(d, nh * dh), bias)
-            return out.reshape(B, S, nh, dh)
 
-        q = proj(p["wq"], p.get("bq"))     # qkv bias fused in-kernel
-        k = proj(p["wk"], p.get("bk"))
-        v = proj(p["wv"], p.get("bv"))
-    else:
-        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
-        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
-        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
-        if "bq" in p:
-            q = q + p["bq"]
-            k = k + p["bk"]
-            v = v + p["bv"]
+@D.register("qkv_proj", "pallas")
+def _qkv_proj_pallas(p, x):
+    from repro.kernels import ops
+    B, S, d = x.shape
+    x2 = x.reshape(B * S, d)
+
+    def proj(w, b):
+        nh, dh = w.shape[1], w.shape[2]
+        bias = None if b is None else b.reshape(1, nh * dh)
+        out = ops.vwr_matmul(x2, w.reshape(d, nh * dh), bias)
+        return out.reshape(B, S, nh, dh)
+
+    return (proj(p["wq"], p.get("bq")),    # qkv bias fused in-kernel
+            proj(p["wk"], p.get("bk")),
+            proj(p["wv"], p.get("bv")))
+
+
+def qkv_proj(p, x, positions, rope_theta, backend="xla", *,
+             kernel_impl=None):
+    """QKV projection (+rope) via the dispatch registry.  ``backend``
+    is a backend string or a ModelConfig; the legacy ``kernel_impl=``
+    kwarg still works but is deprecated."""
+    if kernel_impl is not None:
+        D.warn_kernel_impl_kwarg("attention.qkv_proj")
+        backend = kernel_impl
+    q, k, v = D.dispatch("qkv_proj", backend, p, x)
     if rope_theta:
         q = apply_rope(q, positions, rope_theta)
         k = apply_rope(k, positions, rope_theta)
     return q, k, v
 
 
-def o_proj(p, o, kernel_impl: str = "xla", residual=None):
-    """Output projection; with ``residual`` returns residual + o@wo —
-    fused into the matmul's final-K store on the pallas path."""
-    if kernel_impl == "pallas":
-        from repro.kernels import ops
-        B, S, H, Dh = o.shape
-        d = p["wo"].shape[-1]
-        r2 = None if residual is None else residual.reshape(B * S, d)
-        out = ops.vwr_matmul(o.reshape(B * S, H * Dh),
-                             p["wo"].reshape(H * Dh, d), residual=r2)
-        return out.reshape(B, S, d)
+@D.register("o_proj", "xla")
+def _o_proj_xla(p, o, residual=None):
     out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
     return out if residual is None else residual + out
+
+
+@D.register("o_proj", "pallas")
+def _o_proj_pallas(p, o, residual=None):
+    from repro.kernels import ops
+    B, S, H, Dh = o.shape
+    d = p["wo"].shape[-1]
+    r2 = None if residual is None else residual.reshape(B * S, d)
+    out = ops.vwr_matmul(o.reshape(B * S, H * Dh),
+                         p["wo"].reshape(H * Dh, d), residual=r2)
+    return out.reshape(B, S, d)
+
+
+def o_proj(p, o, backend="xla", residual=None, *, kernel_impl=None):
+    """Output projection; with ``residual`` returns residual + o@wo —
+    fused into the matmul's final-K store on the pallas path.  The
+    legacy ``kernel_impl=`` kwarg still works but is deprecated."""
+    if kernel_impl is not None:
+        D.warn_kernel_impl_kwarg("attention.o_proj")
+        backend = kernel_impl
+    return D.dispatch("o_proj", backend, p, o, residual=residual)
 
 
 # ---------------- blockwise flash attention (training / prefill) ----------------
@@ -112,6 +140,7 @@ def blockwise_attn(
     block_q: int = 512,
     block_kv: int = 1024,
     head_axis=None,
+    mesh=None,
 ) -> jax.Array:
     """Streaming softmax attention; peak memory O(block_q * block_kv).
 
@@ -151,9 +180,12 @@ def blockwise_attn(
     kb = k.reshape(B, nk, block_kv, KV, Dh)
     vb = v.reshape(B, nk, block_kv, KV, Dh)
     if head_axis is not None:
-        qb = shard_hint(qb, PS(None, None, None, head_axis, None, None))
-        kb = shard_hint(kb, PS(None, None, None, head_axis, None))
-        vb = shard_hint(vb, PS(None, None, None, head_axis, None))
+        qb = shard_hint(qb, PS(None, None, None, head_axis, None, None),
+                        mesh=mesh)
+        kb = shard_hint(kb, PS(None, None, None, head_axis, None),
+                        mesh=mesh)
+        vb = shard_hint(vb, PS(None, None, None, head_axis, None),
+                        mesh=mesh)
     qposb = qpos.reshape(nq, block_q)
     kposb = kpos.reshape(nk, block_kv)
     kvalb = kval.reshape(nk, block_kv)
@@ -169,7 +201,8 @@ def blockwise_attn(
                 "bqhgd,bkhd->bhgqk", q_i, k_j.astype(jnp.float32)
             )                                            # (B,KV,G,bq,bkv)
             if head_axis is not None:
-                s = shard_hint(s, PS(None, head_axis, None, None, None))
+                s = shard_hint(s, PS(None, head_axis, None, None, None),
+                               mesh=mesh)
             mask = km_j[None, None, None, None, :]
             if causal:
                 mask = mask & (kp_j[None, :] <= qp_i[:, None])[None, None, None]
@@ -196,6 +229,31 @@ def blockwise_attn(
     _, ob = jax.lax.scan(q_step, None, (qb.swapaxes(0, 1), qposb))
     out = ob.swapaxes(0, 1).reshape(B, nq * block_q, H, Dh)
     return out[:, :Sq]
+
+
+@D.register("attention", "xla")
+def _attention_xla(q, k, v, *, causal, q_positions=None, kv_positions=None,
+                   block_q=512, block_kv=1024, head_axis=None, mesh=None):
+    return blockwise_attn(q, k, v, causal=causal, q_positions=q_positions,
+                          kv_positions=kv_positions, block_q=block_q,
+                          block_kv=block_kv, head_axis=head_axis,
+                          mesh=mesh)
+
+
+@D.register("attention", "pallas")
+def _attention_pallas(q, k, v, *, causal, q_positions=None,
+                      kv_positions=None, block_q=512, block_kv=1024,
+                      head_axis=None, mesh=None):
+    """Zero-copy GQA flash kernel (blocks autotuned).  The non-causal
+    (encoder) path keeps the blockwise formulation, whose kv-padding
+    masks don't require S % block == 0."""
+    if causal:
+        from repro.kernels import ops
+        return ops.vwr_attention(q, k, v, causal=True)
+    return _attention_xla(q, k, v, causal=causal, q_positions=q_positions,
+                          kv_positions=kv_positions, block_q=block_q,
+                          block_kv=block_kv, head_axis=head_axis,
+                          mesh=mesh)
 
 
 def full_attn_ref(q, k, v, *, causal, q_positions=None, kv_positions=None,
@@ -256,3 +314,29 @@ def decode_attend_local(q, cache_k, cache_v, kv_positions, cur_len):
     """Single-shard decode attention (normalized)."""
     o_t, m, l = flash_decode_partial(q, cache_k, cache_v, kv_positions, cur_len)
     return (o_t / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+
+# Registered decode-partial contract (shared by GQA, MLA-absorbed and
+# cross-attention decode — dist.decode combines the partials across
+# sequence shards): (q (B,H,Dh), k/v (B,T,KV,Dh) slab starting at
+# global position pos0, cur_len) -> fp32 (o_tilde, m, l).
+
+@D.register("decode_partial", "xla")
+def _decode_partial_xla(q, k, v, cur_len, pos0=0, *, tune=True):
+    T = k.shape[1]
+    return flash_decode_partial(q, k, v, pos0 + jnp.arange(T), cur_len)
+
+
+@D.register("decode_partial", "pallas")
+def _decode_partial_pallas(q, k, v, cur_len, pos0=0, *, tune=True):
+    from repro.kernels import autotune, ops
+    if tune:
+        return ops.vwr_flash_decode(q, k, v, cur_len, pos0=pos0)
+    # tune=False (shard_map tracing): block size from the cost-model
+    # prior only — the measuring tuner must not fire inside shard_map
+    T = k.shape[1]
+    cands = autotune.decode_candidates(T, q.shape[-1], str(q.dtype))
+    bkv = min(cands, key=lambda c: autotune.decode_prior(
+        q.shape[0], T, q.shape[1], k.shape[2], q.shape[-1],
+        str(q.dtype), c))[0]
+    return ops.vwr_flash_decode(q, k, v, cur_len, pos0=pos0, bkv=bkv)

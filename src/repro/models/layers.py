@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.module import ParamDef, embed_init, ones_init, zeros_init
+from repro.kernels import dispatch as D
 
 
 def dt(cfg):
@@ -103,35 +104,66 @@ def mlp_spec(d, d_ff, act, dtype):
     }
 
 
-def mlp(p, x, act: str, *, kernel_impl: str = "xla", residual=None):
-    """FFN block.  With ``residual`` the residual add is part of the
-    block (``residual + mlp(x)``); on the pallas path it is fused into
-    the down-projection's final-K store (one HBM round-trip), and the
-    activation is fused into the up-projection the same way."""
-    if kernel_impl == "pallas":
-        from repro.kernels import ops
-        lead, d = x.shape[:-1], x.shape[-1]
-        x2 = x.reshape(-1, d)
-        r2 = None if residual is None else residual.reshape(
-            -1, residual.shape[-1])
-        if act == "swiglu":
-            g = ops.vwr_matmul(x2, p["wg"], activation="silu")
-            h = (g * ops.vwr_matmul(x2, p["wi"])).astype(x.dtype)
-        else:
-            h = ops.vwr_matmul(x2, p["wi"],
-                               activation="gelu" if act == "gelu" else "relu")
-        out = ops.vwr_matmul(h, p["wo"], residual=r2)
-        return out.reshape(*lead, out.shape[-1])
+@D.register("swiglu", "xla")
+def _swiglu_xla(x2, wg, wi):
+    h = jnp.einsum("md,df->mf", x2, wi)
+    g = jnp.einsum("md,df->mf", x2, wg)
+    return jax.nn.silu(g.astype(jnp.float32)).astype(x2.dtype) * h
+
+
+@D.register("swiglu", "pallas")
+def _swiglu_pallas(x2, wg, wi):
+    from repro.kernels import ops
+    return ops.vwr_swiglu(x2, wg, wi)
+
+
+@D.register("mlp", "xla")
+def _mlp_xla(p, x, act, residual=None):
     if act == "swiglu":
-        h = jnp.einsum("...d,df->...f", x, p["wi"])
-        g = jnp.einsum("...d,df->...f", x, p["wg"])
-        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * h
+        lead, d = x.shape[:-1], x.shape[-1]
+        h = D.dispatch("swiglu", "xla", x.reshape(-1, d),
+                       p["wg"], p["wi"]).reshape(*lead, -1)
     else:
         h = jnp.einsum("...d,df->...f", x, p["wi"])
         fn = jax.nn.gelu if act == "gelu" else jax.nn.relu
         h = fn(h.astype(jnp.float32)).astype(x.dtype)
     out = jnp.einsum("...f,fd->...d", h, p["wo"])
     return out if residual is None else residual + out
+
+
+@D.register("mlp", "pallas")
+def _mlp_pallas(p, x, act, residual=None):
+    from repro.kernels import ops
+    lead, d = x.shape[:-1], x.shape[-1]
+    x2 = x.reshape(-1, d)
+    r2 = None if residual is None else residual.reshape(
+        -1, residual.shape[-1])
+    if act == "swiglu":
+        # dual-matmul fused swiglu: one staged x block feeds both
+        # projections and silu(g) * h happens on the fp32 accumulators
+        # in the final-K store — no separate elementwise pass
+        h = D.dispatch("swiglu", "pallas", x2,
+                       p["wg"], p["wi"]).astype(x.dtype)
+    else:
+        h = ops.vwr_matmul(x2, p["wi"],
+                           activation="gelu" if act == "gelu" else "relu")
+    out = ops.vwr_matmul(h, p["wo"], residual=r2)
+    return out.reshape(*lead, out.shape[-1])
+
+
+def mlp(p, x, act: str, *, backend="xla", residual=None,
+        kernel_impl=None):
+    """FFN block via the dispatch registry.  With ``residual`` the
+    residual add is part of the block (``residual + mlp(x)``); on the
+    pallas path it is fused into the down-projection's final-K store
+    (one HBM round-trip), the non-gated activation into the
+    up-projection, and swiglu runs the dual-matmul fused kernel.
+    ``backend`` is a backend string or a ModelConfig; the legacy
+    ``kernel_impl=`` kwarg still works but is deprecated."""
+    if kernel_impl is not None:
+        D.warn_kernel_impl_kwarg("layers.mlp")
+        backend = kernel_impl
+    return D.dispatch("mlp", backend, p, x, act, residual=residual)
 
 
 # ---------------- frontends (stubs per brief) ----------------

@@ -13,7 +13,7 @@ Families:
 Conventions:
   * attn/mlp sub-blocks take the residual stream as ``residual=`` and
     return the updated stream (the add is fused into the Pallas
-    epilogue when cfg.kernel_impl == 'pallas'); SSM/MoE sub-blocks
+    epilogue on the 'pallas' dispatch backend); SSM/MoE sub-blocks
     still return the residual *delta*.  Pre-norms are applied by the
     caller (exception: sLSTM blocks norm internally).
   * layer stacks are stored stacked (L, ...) and iterated with lax.scan
@@ -31,7 +31,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.common import module as M
-from repro.common.hints import shard_batch
+from repro.common.hints import shard_batch  # noqa: F401  (re-export)
+from repro.kernels import dispatch as D
 from repro.models import attention as A
 from repro.models import layers as L
 from repro.models import mla as MLA
@@ -244,36 +245,32 @@ def _scan_stack(cfg, body, x, stacked, extra_xs=None, length=None):
 # layer bodies (training / prefill)
 # ======================================================================
 
-def _attn_delta(cfg, ap, h, positions, *, causal=True, residual=None):
+def _attn_delta(cfg, ap, h, positions, *, causal=True, residual=None,
+                mesh=None):
     """h already normed; ap = attention param subtree.
 
     Returns (residual + attn(h) if residual is given else attn(h),
     (k, v)) for cache building.  The residual add is fused into the
-    output projection's final-K store on the pallas kernel path."""
+    output projection's final-K store on the pallas kernel path.  All
+    implementation choice goes through the dispatch registry
+    (cfg.kernel_impl selects the backend: 'xla' | 'pallas' | 'auto')."""
     if cfg.mla is not None:
         out, cache = MLA.mla_attention(ap, h, positions, cfg, causal=causal,
                                        dense=cfg.accounting,
-                                       head_axis=_head_axis(cfg))
+                                       head_axis=_head_axis(cfg),
+                                       mesh=mesh)
         return (out if residual is None else residual + out), cache
-    q, k, v = A.qkv_proj(ap, h, positions, cfg.rope_theta,
-                         kernel_impl=cfg.kernel_impl)
+    q, k, v = A.qkv_proj(ap, h, positions, cfg.rope_theta, cfg)
     if cfg.accounting:
         o = A.full_attn_ref(q, k, v, causal=causal, q_positions=positions,
                             kv_positions=positions)
-    elif cfg.kernel_impl == "pallas" and causal:
-        # zero-copy GQA flash kernel, block sizes autotuned; the
-        # non-causal (encoder) path keeps the blockwise formulation,
-        # whose kv-padding masks don't require S % block == 0
-        from repro.kernels import ops
-        o = ops.vwr_attention(q, k, v, causal=True)
     else:
-        o = A.blockwise_attn(q, k, v, causal=causal, q_positions=positions,
-                             kv_positions=positions,
-                             block_q=cfg.attn_block_q,
-                             block_kv=cfg.attn_block_kv,
-                             head_axis=_head_axis(cfg))
-    return A.o_proj(ap, o, kernel_impl=cfg.kernel_impl,
-                    residual=residual), (k, v)
+        o = D.dispatch("attention", cfg, q, k, v, causal=causal,
+                       q_positions=positions, kv_positions=positions,
+                       block_q=cfg.attn_block_q,
+                       block_kv=cfg.attn_block_kv,
+                       head_axis=_head_axis(cfg), mesh=mesh)
+    return A.o_proj(ap, o, cfg, residual=residual), (k, v)
 
 
 def _head_axis(cfg):
@@ -284,26 +281,28 @@ def _head_axis(cfg):
     return "model"
 
 
-def _dense_body(cfg, positions, x, lp, _ex, *, causal=True, collect=False):
+def _dense_body(cfg, positions, x, lp, _ex, *, causal=True, collect=False,
+                mesh=None):
     x, kv = _attn_delta(cfg, lp["attn"], _norm(cfg, lp["attn_norm"], x),
-                        positions, causal=causal, residual=x)
+                        positions, causal=causal, residual=x, mesh=mesh)
     x = L.mlp(lp["mlp"], _norm(cfg, lp["mlp_norm"], x), cfg.act,
-              kernel_impl=cfg.kernel_impl, residual=x)
+              backend=cfg, residual=x)
     return x, (kv if collect else None)
 
 
-def _moe_body(cfg, positions, x, lp, _ex, *, collect=False):
+def _moe_body(cfg, positions, x, lp, _ex, *, collect=False, mesh=None):
     x, kv = _attn_delta(cfg, lp["attn"], _norm(cfg, lp["attn_norm"], x),
-                        positions, residual=x)
-    y, aux = MOE.moe_ffn(lp["moe"], _norm(cfg, lp["mlp_norm"], x), cfg)
+                        positions, residual=x, mesh=mesh)
+    y, aux = MOE.moe_ffn(lp["moe"], _norm(cfg, lp["mlp_norm"], x), cfg,
+                          mesh=mesh)
     return x + y, ((kv if collect else None), aux)
 
 
 def _xattn_body(cfg, positions, enc_out, enc_valid, x, lp, _ex, *,
-                collect=False):
+                collect=False, mesh=None):
     """Encoder-decoder decoder layer (training/prefill)."""
     x, kv = _attn_delta(cfg, lp["self"], _norm(cfg, lp["self_norm"], x),
-                        positions, residual=x)
+                        positions, residual=x, mesh=mesh)
     h = _norm(cfg, lp["cross_norm"], x)
     q = jnp.einsum("bsd,dhk->bshk", h, lp["cross"]["wq"])
     k = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross"]["wk"])
@@ -313,18 +312,18 @@ def _xattn_body(cfg, positions, enc_out, enc_valid, x, lp, _ex, *,
     else:
         o = A.blockwise_attn(q, k, v, causal=False, kv_valid=enc_valid,
                              block_q=cfg.attn_block_q,
-                             block_kv=cfg.attn_block_kv)
-    x = A.o_proj(lp["cross"], o, kernel_impl=cfg.kernel_impl, residual=x)
+                             block_kv=cfg.attn_block_kv, mesh=mesh)
+    x = A.o_proj(lp["cross"], o, cfg, residual=x)
     x = L.mlp(lp["mlp"], _norm(cfg, lp["mlp_norm"], x), cfg.act,
-              kernel_impl=cfg.kernel_impl, residual=x)
+              backend=cfg, residual=x)
     return x, ((kv, (k, v)) if collect else None)
 
 
-def _shared_attn_apply(cfg, sp, x, positions, *, collect=False):
+def _shared_attn_apply(cfg, sp, x, positions, *, collect=False, mesh=None):
     x, kv = _attn_delta(cfg, sp["attn"], _norm(cfg, sp["attn_norm"], x),
-                        positions, residual=x)
+                        positions, residual=x, mesh=mesh)
     x = L.mlp(sp["mlp"], _norm(cfg, sp["mlp_norm"], x), cfg.act,
-              kernel_impl=cfg.kernel_impl, residual=x)
+              backend=cfg, residual=x)
     return x, (kv if collect else None)
 
 
@@ -339,14 +338,17 @@ class ForwardOut(NamedTuple):
 
 
 def backbone(params, tokens, cfg, *, frontend_emb=None,
-             enc_tokens_valid=None, collect_cache=False) -> ForwardOut:
+             enc_tokens_valid=None, collect_cache=False,
+             mesh=None) -> ForwardOut:
     """tokens: (B, S_text) int32. frontend_emb: (B, S_f, fe_dim) or None.
 
     For 'audio', frontend_emb is the ENCODER input sequence and tokens are
     decoder tokens.  For 'vlm', frontend embeddings are projected and
     prepended to the token embeddings (sequence = S_f + S_text).
     ``collect_cache=True`` (prefill) additionally returns the per-layer
-    cache material (KV stacks / recurrent final states).
+    cache material (KV stacks / recurrent final states).  ``mesh`` (the
+    engine passes it) resolves the internal sharding hints explicitly
+    instead of through the deprecated ambient-mesh lookup.
     """
     fam = cfg.family
     cc = collect_cache
@@ -365,7 +367,8 @@ def backbone(params, tokens, cfg, *, frontend_emb=None,
     positions = jnp.arange(S)
 
     if fam in ("dense", "vlm"):
-        body = functools.partial(_dense_body, cfg, positions, collect=cc)
+        body = functools.partial(_dense_body, cfg, positions, collect=cc,
+                                 mesh=mesh)
         x, kvs = _scan_stack(cfg, body, x, params["layers"])
         caches = kvs
 
@@ -373,9 +376,11 @@ def backbone(params, tokens, cfg, *, frontend_emb=None,
         m = cfg.moe
         kv_d = None
         if m.first_k_dense:
-            body = functools.partial(_dense_body, cfg, positions, collect=cc)
+            body = functools.partial(_dense_body, cfg, positions,
+                                     collect=cc, mesh=mesh)
             x, kv_d = _scan_stack(cfg, body, x, params["dense_layers"])
-        body = functools.partial(_moe_body, cfg, positions, collect=cc)
+        body = functools.partial(_moe_body, cfg, positions, collect=cc,
+                                 mesh=mesh)
         x, (kv_m, moe_aux) = _scan_stack(cfg, body, x, params["layers"])
         aux["lb_loss"] = jnp.mean(moe_aux["lb_loss"])
         aux["z_loss_router"] = jnp.mean(moe_aux["z_loss"])
@@ -392,7 +397,8 @@ def backbone(params, tokens, cfg, *, frontend_emb=None,
 
         def group_body(x, gp, gn):
             x, sts = _scan_stack(cfg, mamba_body, x, gp, extra_xs=gn)
-            x, kv = _shared_attn_apply(cfg, sp, x, positions, collect=cc)
+            x, kv = _shared_attn_apply(cfg, sp, x, positions, collect=cc,
+                                       mesh=mesh)
             return x, (sts, kv)
 
         x, (st_main, kv_main) = _scan_stack(
@@ -402,7 +408,8 @@ def backbone(params, tokens, cfg, *, frontend_emb=None,
         if tail:
             x, st_tail = _scan_stack(cfg, mamba_body, x, params["mamba_tail"],
                                      extra_xs=params["tail_norms"])
-            x, kv_tail = _shared_attn_apply(cfg, sp, x, positions, collect=cc)
+            x, kv_tail = _shared_attn_apply(cfg, sp, x, positions,
+                                            collect=cc, mesh=mesh)
         caches = ((st_main, kv_main), (st_tail, kv_tail))
 
     elif fam == "ssm":
@@ -423,12 +430,13 @@ def backbone(params, tokens, cfg, *, frontend_emb=None,
         enc = L.frontend_proj(params["frontend"], frontend_emb)
         enc = enc.astype(jnp.dtype(cfg.dtype))
         enc_pos = jnp.arange(enc.shape[1])
-        body = functools.partial(_dense_body, cfg, enc_pos, causal=False)
+        body = functools.partial(_dense_body, cfg, enc_pos, causal=False,
+                                 mesh=mesh)
         enc, _ = _scan_stack(cfg, body, enc, params["enc_layers"])
         enc = _norm(cfg, params["enc_norm"], enc)
 
         body = functools.partial(_xattn_body, cfg, positions, enc,
-                                 enc_tokens_valid, collect=cc)
+                                 enc_tokens_valid, collect=cc, mesh=mesh)
         x, caches = _scan_stack(cfg, body, x, params["layers"])
 
     else:
@@ -509,12 +517,9 @@ def ce_loss(params, h, labels, mask, cfg) -> Tuple[jax.Array, Dict]:
 
 def train_loss(params, batch, cfg) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """batch: tokens (B,S), labels (B,S), loss_mask (B,S) [+ frontend_emb]."""
-    if cfg.kernel_impl == "pallas":
-        raise ValueError(
-            "kernel_impl='pallas' is forward-only (prefill/decode/eval): "
-            "the VWR Pallas kernels define no VJP yet, and jax.grad "
-            "through them dies with an opaque assertion.  Train with "
-            "kernel_impl='xla' (see ROADMAP open items).")
+    # the registry knows which backends differentiate: 'auto' narrows
+    # to the differentiable set, a forward-only pin ('pallas') raises
+    cfg = cfg.replace(kernel_impl=D.training_backend(cfg))
     out = backbone(params, batch["tokens"], cfg,
                    frontend_emb=batch.get("frontend_emb"))
     labels, mask = batch["labels"], batch["loss_mask"].astype(jnp.float32)
@@ -648,24 +653,20 @@ def _rope1(x, pos, theta):
     return L.apply_rope(x[:, None], jnp.asarray(pos)[None], theta)[:, 0]
 
 
-def _decode_attend(cfg, q, ck, cv, n_valid):
-    """Decode attention dispatch: distributed FlashDecoding when the
-    cache is sequence-sharded (cfg.decode_shard == 'seq' under an
-    ambient mesh), the VWR flash-decode kernel when
-    cfg.kernel_impl == 'pallas', the XLA reference otherwise."""
-    if cfg.decode_shard == "seq":
-        from repro.dist import decode as DD
-        return DD.decode_attend(q, ck, cv, n_valid,
-                                kernel_impl=cfg.kernel_impl)
-    if cfg.kernel_impl == "pallas":
-        from repro.kernels import ops
-        o_t, _, l = ops.vwr_flash_decode(q, ck, cv, n_valid)
-        return (o_t / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
-    T = ck.shape[1]
-    return A.decode_attend_local(q, ck, cv, jnp.arange(T), n_valid)
+def _decode_attend(cfg, q, ck, cv, n_valid, mesh=None):
+    """Decode attention: GQA, absorbed MLA and cross-attention all pass
+    through here, and from here through ``dist.decode`` — distributed
+    FlashDecoding when the cache is sequence-sharded
+    (cfg.decode_shard == 'seq' and a mesh was passed), the shard-local
+    ``decode_partial`` registry op (cfg.kernel_impl selects 'xla' |
+    'pallas' | 'auto') otherwise."""
+    from repro.dist import decode as DD
+    return DD.decode_attend(q, ck, cv, n_valid, backend=cfg.kernel_impl,
+                            mesh=mesh,
+                            seq_shard=(cfg.decode_shard == "seq"))
 
 
-def _decode_gqa(cfg, lp, h, ck, cv, cur_len):
+def _decode_gqa(cfg, lp, h, ck, cv, cur_len, mesh=None):
     """h: (B,D) normed. ck/cv: (B,T,KV,Dh). Returns (delta, ck, cv)."""
     B = h.shape[0]
     q = jnp.einsum("bd,dhk->bhk", h, lp["wq"])
@@ -677,75 +678,84 @@ def _decode_gqa(cfg, lp, h, ck, cv, cur_len):
     k = _rope1(k, cur_len, cfg.rope_theta)
     ck = jax.lax.dynamic_update_slice(ck, k[:, None], (0, cur_len, 0, 0))
     cv = jax.lax.dynamic_update_slice(cv, v[:, None], (0, cur_len, 0, 0))
-    o = _decode_attend(cfg, q, ck, cv, cur_len + 1)
+    o = _decode_attend(cfg, q, ck, cv, cur_len + 1, mesh)
     delta = jnp.einsum("bhk,hkd->bd", o, lp["wo"])
     return delta, ck, cv
 
 
-def _decode_mla(cfg, lp, h, cckv, ckr, cur_len):
-    """MLA absorbed decode. cckv: (B,T,r); ckr: (B,T,rope)."""
-    m = cfg.mla
+def _decode_mla(cfg, lp, h, cckv, ckr, cur_len, mesh=None):
+    """MLA absorbed decode. cckv: (B,T,r); ckr: (B,T,rope).
+
+    The absorbed form is recast as an MQA flash-decode problem
+    (``MLA.mla_absorbed_mqa``: latent+rope caches concatenated into one
+    shared KV head), so it takes the SAME ``_decode_attend`` path as
+    GQA — VWR flash-decode kernel, 'auto' dispatch, and sequence-
+    sharded distributed FlashDecoding all included."""
     h3 = h[:, None, :]
     pos = jnp.asarray(cur_len)[None]
     q_nope, q_rope = MLA.mla_queries(lp, h3, pos, cfg)
     c_kv, k_rope = MLA.mla_latent(lp, h3, pos, cfg)
     cckv = jax.lax.dynamic_update_slice(cckv, c_kv, (0, cur_len, 0))
     ckr = jax.lax.dynamic_update_slice(ckr, k_rope, (0, cur_len, 0))
-    T = cckv.shape[1]
-    o_t, mx, lse = MLA.mla_decode_partial(
-        lp, q_nope[:, 0], q_rope[:, 0], cckv, ckr, jnp.arange(T),
-        cur_len + 1, cfg)
-    o = o_t / jnp.maximum(lse, 1e-30)[..., None]
+    q_cat, k_cat, v_cat, r = MLA.mla_absorbed_mqa(
+        lp, q_nope[:, 0], q_rope[:, 0], cckv, ckr, cfg)
+    o_cat = _decode_attend(cfg, q_cat, k_cat, v_cat, cur_len + 1, mesh)
+    o = o_cat[..., :r]
     delta = MLA.mla_decode_finish(lp, o.astype(jnp.float32), cfg)
     return delta.astype(h.dtype), cckv, ckr
 
 
-def _decode_cross(cfg, lp, h, xk, xv):
+def _decode_cross(cfg, lp, h, xk, xv, mesh=None):
     """Cross-attention against the (static) encoder KV cache."""
     q = jnp.einsum("bd,dhk->bhk", h, lp["wq"])
     T = xk.shape[1]
-    o = _decode_attend(cfg, q, xk, xv, jnp.int32(T))
+    o = _decode_attend(cfg, q, xk, xv, jnp.int32(T), mesh)
     return jnp.einsum("bhk,hkd->bd", o, lp["wo"])
 
 
-def _dense_decode_body(cfg, cur_len, x, lp, cache_slice):
+def _dense_decode_body(cfg, cur_len, x, lp, cache_slice, mesh=None):
     if cfg.mla is not None:
         h = _norm(cfg, lp["attn_norm"], x)
         d, cckv, ckr = _decode_mla(cfg, lp["attn"], h, cache_slice["ckv"],
-                                   cache_slice["krope"], cur_len)
+                                   cache_slice["krope"], cur_len, mesh)
         new = {"ckv": cckv, "krope": ckr}
     else:
         h = _norm(cfg, lp["attn_norm"], x)
         d, ck, cv = _decode_gqa(cfg, lp["attn"], h, cache_slice["k"],
-                                cache_slice["v"], cur_len)
+                                cache_slice["v"], cur_len, mesh)
         new = {"k": ck, "v": cv}
     x = x + d
-    x = x + L.mlp(lp["mlp"], _norm(cfg, lp["mlp_norm"], x), cfg.act)
+    x = x + L.mlp(lp["mlp"], _norm(cfg, lp["mlp_norm"], x), cfg.act,
+                  backend=cfg)
     return x, new
 
 
-def _moe_decode_body(cfg, cur_len, x, lp, cache_slice):
+def _moe_decode_body(cfg, cur_len, x, lp, cache_slice, mesh=None):
     if cfg.mla is not None:
         h = _norm(cfg, lp["attn_norm"], x)
         d, cckv, ckr = _decode_mla(cfg, lp["attn"], h, cache_slice["ckv"],
-                                   cache_slice["krope"], cur_len)
+                                   cache_slice["krope"], cur_len, mesh)
         new = {"ckv": cckv, "krope": ckr}
     else:
         h = _norm(cfg, lp["attn_norm"], x)
         d, ck, cv = _decode_gqa(cfg, lp["attn"], h, cache_slice["k"],
-                                cache_slice["v"], cur_len)
+                                cache_slice["v"], cur_len, mesh)
         new = {"k": ck, "v": cv}
     x = x + d
     # decode grouping: one group of all B tokens (see moe.py docstring)
     y, _aux = MOE.moe_ffn(lp["moe"], _norm(cfg, lp["mlp_norm"], x)[None],
-                          cfg)
+                          cfg, mesh=mesh)
     return x + y[0], new
 
 
-def decode_step(params, batch, cfg):
+def decode_step(params, batch, cfg, mesh=None):
     """One-token serve step. batch: token (B,), cur_len (), cache pytree.
 
-    Returns (logits (B, vocab) fp32, new_cache).
+    Returns (logits (B, vocab) fp32, new_cache).  ``mesh`` is the
+    explicit device mesh for the sequence-sharded decode path
+    (cfg.decode_shard == 'seq'); without it that path falls back to the
+    deprecated ambient-mesh lookup.  ``engine.DecodeEngine`` (or
+    ``steps.build_decode(cfg, mesh)``) threads it for you.
     """
     fam = cfg.family
     tok = batch["token"]
@@ -754,7 +764,7 @@ def decode_step(params, batch, cfg):
     x = L.embed(params["embed"], tok).astype(jnp.dtype(cfg.dtype))  # (B,D)
 
     if fam in ("dense", "vlm"):
-        body = functools.partial(_dense_decode_body, cfg, cur)
+        body = functools.partial(_dense_decode_body, cfg, cur, mesh=mesh)
         x, new_cache = _scan_stack(cfg, body, x, params["layers"],
                                    extra_xs=cache)
 
@@ -762,11 +772,12 @@ def decode_step(params, batch, cfg):
         m = cfg.moe
         new_cache = dict(cache)
         if m.first_k_dense:
-            body = functools.partial(_dense_decode_body, cfg, cur)
+            body = functools.partial(_dense_decode_body, cfg, cur,
+                                     mesh=mesh)
             x, nd = _scan_stack(cfg, body, x, params["dense_layers"],
                                 extra_xs=cache["dense"])
             new_cache["dense"] = nd
-        body = functools.partial(_moe_decode_body, cfg, cur)
+        body = functools.partial(_moe_decode_body, cfg, cur, mesh=mesh)
         x, nm = _scan_stack(cfg, body, x, params["layers"],
                             extra_xs=cache["moe"])
         new_cache["moe"] = nm
@@ -782,9 +793,10 @@ def decode_step(params, batch, cfg):
 
         def shared_dec(x, ck, cv):
             h = _norm(cfg, sp["attn_norm"], x)
-            d, ck, cv = _decode_gqa(cfg, sp["attn"], h, ck, cv, cur)
+            d, ck, cv = _decode_gqa(cfg, sp["attn"], h, ck, cv, cur, mesh)
             x = x + d
-            x = x + L.mlp(sp["mlp"], _norm(cfg, sp["mlp_norm"], x), cfg.act)
+            x = x + L.mlp(sp["mlp"], _norm(cfg, sp["mlp_norm"], x), cfg.act,
+                          backend=cfg)
             return x, ck, cv
 
         def group_dec(x, gp, ex):
@@ -832,12 +844,13 @@ def decode_step(params, batch, cfg):
         def dec_body(x, lp, cs):
             h = _norm(cfg, lp["self_norm"], x)
             d, ck, cv = _decode_gqa(cfg, lp["self"], h, cs["self_k"],
-                                    cs["self_v"], cur)
+                                    cs["self_v"], cur, mesh)
             x = x + d
             h = _norm(cfg, lp["cross_norm"], x)
             x = x + _decode_cross(cfg, lp["cross"], h, cs["cross_k"],
-                                  cs["cross_v"])
-            x = x + L.mlp(lp["mlp"], _norm(cfg, lp["mlp_norm"], x), cfg.act)
+                                  cs["cross_v"], mesh)
+            x = x + L.mlp(lp["mlp"], _norm(cfg, lp["mlp_norm"], x), cfg.act,
+                          backend=cfg)
             return x, {"self_k": ck, "self_v": cv}
 
         xs_cache = {"self_k": cache["self_k"], "self_v": cache["self_v"],
@@ -855,16 +868,18 @@ def decode_step(params, batch, cfg):
     return logits, new_cache
 
 
-def prefill(params, batch, cfg):
+def prefill(params, batch, cfg, mesh=None):
     """Full-sequence prefill: returns (last-token logits, cache material).
 
     The cache material is the backbone's per-layer KV stacks / final
-    recurrent states at the prefill length; ``examples/serve.py`` shows
-    how to pad them into a fixed-size decode cache.
+    recurrent states at the prefill length;
+    ``engine.pad_cache_from_prefill`` pads them into a fixed-size
+    decode cache (``engine.DecodeEngine`` does both in one call).
+    ``mesh`` is threaded to the backbone's sharding hints.
     """
     out = backbone(params, batch["tokens"], cfg,
                    frontend_emb=batch.get("frontend_emb"),
-                   collect_cache=True)
+                   collect_cache=True, mesh=mesh)
     logits = _logits(params, out.h[:, -1:, :], cfg)[:, 0]
     return logits.astype(jnp.float32), out.caches
 

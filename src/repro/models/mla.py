@@ -65,7 +65,7 @@ def mla_queries(p, x, positions, cfg):
 
 
 def mla_attention(p, x, positions, cfg, *, causal=True, dense=False,
-                  head_axis=None):
+                  head_axis=None, mesh=None):
     """Expanded-form attention for train/prefill. Returns (out, (c_kv, k_rope))."""
     m = cfg.mla
     H = cfg.n_heads
@@ -93,7 +93,7 @@ def mla_attention(p, x, positions, cfg, *, causal=True, dense=False,
             q, k, v_pad(v, q.shape[-1]), causal=causal,
             q_positions=positions, kv_positions=positions,
             block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv,
-            head_axis=head_axis,
+            head_axis=head_axis, mesh=mesh,
         )[..., : m.v_head_dim]
     out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
     return out, (c_kv, k_rope)
@@ -133,6 +133,48 @@ def mla_decode_partial(
     l = ptab.sum(axis=-1)
     o_t = jnp.einsum("bht,btr->bhr", ptab, cache_ckv.astype(jnp.float32))
     return o_t, m, l
+
+
+def mla_absorbed_mqa(p, q_nope, q_rope, cache_ckv, cache_krope, cfg):
+    """Absorbed MLA decode as an MQA flash-decode problem.
+
+    Folding q_nope through wk_b makes scores a plain dot product
+    against the latent cache, and concatenating the latent and rope-key
+    caches along the feature dim makes it *literally* the GQA decode
+    contract with KV=1:
+
+        s   = [q_abs, q_rope] . [c_kv, k_rope]   (one shared KV head)
+        o~  = p . [c_kv, 0]                       (values = latent part)
+
+    so MLA decode runs the very same ``decode_partial`` registry op —
+    XLA reference or VWR flash-decode kernel — and the very same
+    ``dist.decode`` sequence-sharded combine as GQA, instead of a
+    private einsum path.  The price of the uniform surface: the value
+    stream is zero-padded by rope_head_dim (64/576 ≈ 11% for V3), and
+    the two concats *materialize* k_cat/v_cat copies of the cache each
+    step (the concat operands feeding pallas_call/shard_map are not
+    fusion-eliminated), so per-token cache bytes are a small multiple
+    of the in-place einsum read.  A flash-decode kernel variant taking
+    the latent and rope caches as separate operands would remove both
+    costs (ROADMAP).
+
+    q_nope: (B,H,nope); q_rope: (B,H,rope); cache_ckv: (B,T,r);
+    cache_krope: (B,T,rope).  Returns (q_cat (B,H,r+rope) f32 —
+    pre-scaled so the kernel's 1/sqrt(Dh) equals the absorbed-MLA
+    1/sqrt(nope+rope) — k_cat, v_cat (B,T,1,r+rope), r).
+    """
+    m = cfg.mla
+    r = m.kv_lora_rank
+    q_abs = jnp.einsum("bhk,rhk->bhr", q_nope.astype(jnp.float32),
+                       p["wk_b"].astype(jnp.float32))
+    Dc = r + m.rope_head_dim
+    scale_fix = (Dc ** 0.5) / ((m.nope_head_dim + m.rope_head_dim) ** 0.5)
+    q_cat = jnp.concatenate([q_abs, q_rope.astype(jnp.float32)],
+                            axis=-1) * scale_fix
+    k_cat = jnp.concatenate([cache_ckv, cache_krope], axis=-1)[:, :, None]
+    v_cat = jnp.concatenate([cache_ckv, jnp.zeros_like(cache_krope)],
+                            axis=-1)[:, :, None]
+    return q_cat, k_cat, v_cat, r
 
 
 def mla_decode_finish(p, o_latent, cfg):

@@ -117,11 +117,14 @@ def _positions_sort(idx_flat, n_experts):
 
 # ---------------- dispatch / combine ----------------
 
-def moe_ffn(p, x, cfg) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+def moe_ffn(p, x, cfg, mesh=None) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """x: (G, S, D) grouped tokens. Returns (y (G,S,D), aux dict).
 
     aux: 'lb_loss' (load balance), 'z_loss' (router logit magnitude),
     'drop_frac' (fraction of assignments dropped by capacity).
+    ``mesh`` resolves the expert-parallel sharding constraints
+    explicitly (callers without an ambient mesh context — the engine
+    path — must pass it or full_ep constraints silently no-op).
     """
     m = cfg.moe
     G, S, D = x.shape
@@ -160,7 +163,7 @@ def moe_ffn(p, x, cfg) -> Tuple[jax.Array, Dict[str, jax.Array]]:
         # expert weights, sharded E -> (data, model), never move.
         # (measured WORSE when combined with gather-based combine at
         # decode — §Perf H7a — so not applied by default)
-        xd = _ep_constraint(xd, ep_spec)
+        xd = _ep_constraint(xd, ep_spec, mesh=mesh)
 
     # expert FFN (swiglu) as batched einsum over the expert dim
     h = jnp.einsum("gecd,edf->gecf", xd, p["wi"])
@@ -168,7 +171,7 @@ def moe_ffn(p, x, cfg) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     h = jax.nn.silu(gte.astype(jnp.float32)).astype(h.dtype) * h
     y_e = jnp.einsum("gecf,efd->gecd", h, p["wo"])              # (G,E,cap,D)
     if m.ep == "full_ep":
-        y_e = _ep_constraint(y_e, ep_spec)
+        y_e = _ep_constraint(y_e, ep_spec, mesh=mesh)
 
     # combine: gather each assignment's slot output, weight by gate
     y_flat = y_e.reshape(G, E * cap, D)
@@ -181,7 +184,7 @@ def moe_ffn(p, x, cfg) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     y = y.astype(x.dtype)
 
     if m.n_shared:
-        y = y + mlp(p["shared"], x, "swiglu")
+        y = y + mlp(p["shared"], x, "swiglu", backend=cfg)
 
     # aux metrics / losses (fp32)
     me = probs.mean(axis=(0, 1))                                # (E,) mean prob

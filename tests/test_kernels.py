@@ -101,6 +101,28 @@ def test_vwr_matmul_fused_epilogue(dtype, m, k, n, act, bias, res):
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,n,bm,bk,bn", [
+    (64, 64, 64, 64, 64, 64),
+    (100, 130, 50, 32, 64, 32),      # ragged -> padding path
+    (128, 256, 96, 64, 128, 32),
+])
+def test_vwr_swiglu_fused_dual_matmul(dtype, m, k, n, bm, bk, bn):
+    """The dual-matmul fused swiglu == silu(x@wg) * (x@wi) composed
+    from two plain matmuls (one staged x block, the gate product on
+    the fp32 accumulators in the final-K store)."""
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    x = _rand(k1, (m, k), dtype)
+    wg = _rand(k2, (k, n), dtype)
+    wi = _rand(k3, (k, n), dtype)
+    out = ops.vwr_swiglu(x, wg, wi, bm=bm, bk=bk, bn=bn)
+    g = ref.matmul_ref(x, wg).astype(jnp.float32)
+    h = ref.matmul_ref(x, wi).astype(jnp.float32)
+    want = (jax.nn.silu(g) * h).astype(dtype)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("b,s,h,kv,d,bq,bkv,causal", [
     (2, 64, 4, 4, 16, 32, 32, True),
     (2, 100, 8, 2, 16, 32, 64, True),    # GQA + ragged seq
@@ -234,6 +256,50 @@ def test_vwr_flash_decode_sharded_offset():
     got = o / jnp.maximum(l, 1e-30)[..., None]
     want = decode_attend_local(q, ck, cv, jnp.arange(T), cur)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_mla_absorbed_mqa_view_matches_partial_oracle():
+    """MLA decode recast as MQA flash-decode (concat latent+rope cache,
+    KV=1) must reproduce the absorbed-form einsum partial's normalized
+    output — the contract that lets MLA ride the GQA decode path."""
+    from repro.common.config import MLAConfig, ModelConfig
+    from repro.models import mla
+    from repro.models.attention import flash_decode_partial
+
+    cfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=64,
+                      n_heads=4, n_kv_heads=4, d_head=16, d_ff=128,
+                      vocab=64, dtype="float32", remat="none",
+                      mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16,
+                                    rope_head_dim=8, nope_head_dim=16,
+                                    v_head_dim=16))
+    p = jax.tree.map(lambda d: d.init(KEY, d.shape, d.dtype),
+                     mla.mla_spec(cfg),
+                     is_leaf=lambda x: hasattr(x, "init"))
+    B, T = 2, 12
+    x = _rand(KEY, (B, T, 64), jnp.float32)
+    _, (ckv, krope) = mla.mla_attention(p, x, jnp.arange(T), cfg,
+                                        causal=True, dense=True)
+    q_nope, q_rope = mla.mla_queries(p, x[:, -1:], jnp.arange(T)[-1:],
+                                     cfg)
+    o_ref, m_ref, l_ref = mla.mla_decode_partial(
+        p, q_nope[:, 0], q_rope[:, 0], ckv, krope, jnp.arange(T),
+        jnp.int32(T), cfg)
+    want = o_ref / np.maximum(np.asarray(l_ref), 1e-30)[..., None]
+
+    q_cat, k_cat, v_cat, r = mla.mla_absorbed_mqa(
+        p, q_nope[:, 0], q_rope[:, 0], ckv, krope, cfg)
+    # xla registry impl
+    o_t, m, l = flash_decode_partial(q_cat, k_cat, v_cat, jnp.arange(T),
+                                     jnp.int32(T))
+    got = (o_t / np.maximum(np.asarray(l), 1e-30)[..., None])[..., :r]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    # pallas registry impl (the VWR flash-decode kernel)
+    o_t2, m2, l2 = ops.vwr_flash_decode(q_cat, k_cat, v_cat,
+                                        jnp.int32(T), bkv=32)
+    got2 = (o_t2 / np.maximum(np.asarray(l2), 1e-30)[..., None])[..., :r]
+    np.testing.assert_allclose(np.asarray(got2), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
 
 
