@@ -87,6 +87,52 @@ for B, T in ((4, 2048), (4, 8192)):
         "collective_bytes": coll,
     })
 
+# ---- paged vs dense decode attention ---------------------------------
+# same (B, T) cells at 50% occupancy — the continuous-batching regime.
+# The dense path streams its full (B, T) budget every step (dead bytes
+# included: masking skips math, not DMA); the paged path's block table
+# names only the ceil(len/page_size) pages that hold live data, so the
+# step stages half the bytes.  That table-width economy is exactly
+# what the scheduler's per-request page allocation buys.
+from repro.dist.decode import local_paged_decode_attend
+
+PS_PAGE = 64
+for B, T in ((4, 2048), (4, 8192)):
+    T_live = T // 2
+    J = T_live // PS_PAGE                       # live pages per slot
+    n_pages = B * J
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, Dh))
+    kp = jax.random.normal(ks[1], (n_pages, PS_PAGE, KV, Dh))
+    vp = jax.random.normal(ks[2], (n_pages, PS_PAGE, KV, Dh))
+    table = (jnp.arange(B, dtype=jnp.int32)[:, None] * J
+             + jnp.arange(J, dtype=jnp.int32)[None, :])
+    lens = jnp.full((B,), T_live, jnp.int32)
+    # dense comparison cache: same live contents, (B, T) budget
+    ck = jnp.zeros((B, T, KV, Dh)).at[:, :T_live].set(
+        kp.reshape(B, T_live, KV, Dh))
+    cv = jnp.zeros((B, T, KV, Dh)).at[:, :T_live].set(
+        vp.reshape(B, T_live, KV, Dh))
+
+    local = jax.jit(lambda q, k, v, c: decode_attend_local(
+        q, k, v, jnp.arange(T), c))
+    paged = jax.jit(lambda q, kp, vp, tb, ln: local_paged_decode_attend(
+        q, kp, vp, tb, ln))
+    t_dense = timed(local, q, ck, cv, jnp.int32(T_live))
+    t_paged = timed(paged, q, kp, vp, table, lens)
+    live_bytes = 2 * B * T_live * KV * Dh * 4
+    budget_bytes = 2 * B * T * KV * Dh * 4
+    rows.append({
+        "op": "paged_decode", "shape": f"{B}x{T}x{H}x{KV}x{Dh}",
+        "us": round(t_paged, 1), "us_ref": round(t_dense, 1),
+        "flops": B * H * 2 * T_live * Dh * 2,
+        "staged_bytes": live_bytes, "arith_intensity": None,
+        "note": (f"page_size {PS_PAGE}, 50% occupancy: paged stages "
+                 f"{live_bytes} live B/token vs the dense budget's "
+                 f"{budget_bytes} B/token (us_ref = dense)"),
+        "collective_bytes": None,
+    })
+
 # ---- full engine step: the production serve path ---------------------
 from repro.configs import get_config, reduced
 from repro.engine import DecodeEngine, EngineConfig
@@ -111,6 +157,31 @@ rows.append({
              f"explicit mesh; collective {coll:.0f} B/token ({kinds})"),
     "collective_bytes": coll,
 })
+
+# ---- paged engine step: pool seq-sharded over 8 devices --------------
+peng = DecodeEngine(cfg, EngineConfig(batch=B, max_len=P + G,
+                                      mesh_shape=(1, 8),
+                                      decode_shard="seq", paged=True,
+                                      page_size=8),
+                    params=eng.params)
+logits_p, pcache = peng.prefill({"tokens": toks})
+ptable = peng.default_block_table()
+lens = jnp.full((B,), P, jnp.int32)
+pbatch = {"token": tok, "cur_len": lens, "block_table": ptable,
+          "cache": pcache}
+t_peng = timed(peng.decode_fn, peng.params, pbatch)
+coll_p, kinds_p = hlo_analysis.collective_bytes(
+    peng.decode_fn.lower(peng.params, pbatch).compile().as_text())
+rows.append({
+    "op": "engine_decode_paged", "shape": f"{cfg.name}:{B}x{P + G}",
+    "us": round(t_peng, 1), "us_ref": round(t_eng, 1), "flops": None,
+    "staged_bytes": None, "arith_intensity": None,
+    "note": (f"paged DecodeEngine one-token step (page_size 8, pool "
+             f"seq-sharded over 8 shards, block-table combine); "
+             f"collective {coll_p:.0f} B/token ({kinds_p}); "
+             "us_ref = dense engine step"),
+    "collective_bytes": coll_p,
+})
 print("JSON:" + json.dumps(rows))
 """
 
@@ -130,11 +201,12 @@ def dist_decode_bench(json_path="BENCH_kernels.json"):
     payload = [ln for ln in r.stdout.splitlines()
                if ln.startswith("JSON:")][-1]
     rows = json.loads(payload[len("JSON:"):])
-    print("\n# dist_decode: op,shape,us_sharded,us_local,"
+    print("\n# dist_decode: op,shape,us,us_ref,"
           "collective_bytes_per_token")
     for row in rows:
+        coll = row["collective_bytes"]
         print(f"{row['op']},{row['shape']},{row['us']},{row['us_ref']},"
-              f"{row['collective_bytes']:.0f}")
+              f"{'-' if coll is None else format(coll, '.0f')}")
     if json_path:
         existing = []
         if os.path.exists(json_path):
@@ -144,7 +216,9 @@ def dist_decode_bench(json_path="BENCH_kernels.json"):
             except ValueError:
                 existing = []
         existing = [r for r in existing
-                    if r.get("op") not in ("dist_decode", "engine_decode")]
+                    if r.get("op") not in ("dist_decode", "engine_decode",
+                                           "paged_decode",
+                                           "engine_decode_paged")]
         existing.extend(rows)
         with open(json_path, "w") as f:
             json.dump(existing, f, indent=1)

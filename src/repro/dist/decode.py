@@ -115,6 +115,104 @@ def sharded_flash_decode(mesh, q, cache_k, cache_v, cur_len, *,
               jnp.asarray(cur_len, jnp.int32).reshape(()))
 
 
+def _page_counts(lens, J, page_size):
+    """(B,) valid-position counts -> (B, J) per-logical-page counts."""
+    return jnp.clip(lens[:, None]
+                    - jnp.arange(J, dtype=jnp.int32)[None, :] * page_size,
+                    0, page_size).astype(jnp.int32)
+
+
+def local_paged_decode_attend(q, k_pool, v_pool, table, lens, *,
+                              backend="xla") -> jax.Array:
+    """Single-shard paged decode attention (normalized).
+
+    q: (B, H, Dh); k_pool/v_pool: (n_pages, page_size, KV, Dh);
+    table: (B, max_pages) int32; lens: (B,) int32 valid positions per
+    slot (0 = inactive slot -> zero output)."""
+    ps = k_pool.shape[1]
+    counts = _page_counts(lens, table.shape[1], ps)
+    o_t, m, l = D.dispatch("decode_partial_paged", backend, q, k_pool,
+                           v_pool, table, counts)
+    return _normalize(o_t, l, q.dtype)
+
+
+def sharded_paged_flash_decode(mesh, q, k_pool, v_pool, table, lens, *,
+                               backend: str = "xla",
+                               data_axis: str = "data",
+                               model_axis: str = "model"):
+    """Paged decode attention with the page POOL sharded over
+    ``model_axis`` (shard s owns the contiguous slab of pages
+    [s*pp, (s+1)*pp)) and the slot batch over ``data_axis``.
+
+    Block tables are replicated and may point at any shard's pages:
+    each shard zeroes the counts of pages outside its slab, computes
+    the unnormalized partial over the pages it owns, and the same
+    pmax/psum statistics combine as ``sharded_flash_decode`` stitches
+    the slots back together — so page->shard placement is free (the
+    allocator never needs to know the mesh).  Per-token collective
+    bytes stay O(B * H * (Dh + 2)), independent of pool size.
+    """
+    backend = D.cached_backend("decode_partial_paged", backend,
+                               (q, k_pool, v_pool, table, lens))
+    n_pages, ps = k_pool.shape[0], k_pool.shape[1]
+    msize = mesh.shape.get(model_axis, 1) if model_axis else 1
+    if model_axis not in mesh.axis_names or n_pages % msize:
+        return local_paged_decode_attend(q, k_pool, v_pool, table, lens,
+                                         backend=backend)
+    pp = n_pages // msize
+    B = q.shape[0]
+    dsize = mesh.shape.get(data_axis, 1)
+    dp = (data_axis if data_axis in mesh.axis_names
+          and B % max(dsize, 1) == 0 else None)
+    J = table.shape[1]
+
+    def shard_fn(q, kp, vp, tbl, lens):
+        p0 = jax.lax.axis_index(model_axis) * pp
+        owned = (tbl >= p0) & (tbl < p0 + pp)
+        tloc = jnp.clip(tbl - p0, 0, pp - 1)
+        counts = jnp.where(owned, _page_counts(lens, J, ps), 0)
+        o_t, m, l = D.dispatch("decode_partial_paged", backend, q, kp,
+                               vp, tloc, counts, tune=False)
+        m_star = jax.lax.pmax(m, model_axis)
+        scale = jnp.exp(m - m_star)
+        o = jax.lax.psum(o_t * scale[..., None], model_axis)
+        l = jax.lax.psum(l * scale, model_axis)
+        return _normalize(o, l, q.dtype)
+
+    fn = shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(PS(dp, None, None),
+                  PS(model_axis, None, None, None),
+                  PS(model_axis, None, None, None),
+                  PS(dp, None),
+                  PS(dp)),
+        out_specs=PS(dp, None, None),
+        check_rep=False)
+    return fn(q, k_pool, v_pool, table.astype(jnp.int32),
+              jnp.asarray(lens, jnp.int32))
+
+
+def paged_decode_attend(q, k_pool, v_pool, table, lens, *,
+                        backend: str = "xla", mesh=None,
+                        seq_shard: bool = True) -> jax.Array:
+    """Mesh-aware paged decode attention used by ``models.lm``.
+
+    The paged sibling of ``decode_attend``: routes to
+    ``sharded_paged_flash_decode`` when ``seq_shard`` and a mesh with a
+    'model' axis divides the pool evenly, else the local registry op.
+    """
+    if seq_shard:
+        mesh = resolve_mesh(mesh, "dist.decode.paged_decode_attend")
+        n_pages = k_pool.shape[0]
+        if (mesh is not None and "model" in mesh.axis_names
+                and n_pages % mesh.shape["model"] == 0):
+            return sharded_paged_flash_decode(mesh, q, k_pool, v_pool,
+                                              table, lens,
+                                              backend=backend)
+    return local_paged_decode_attend(q, k_pool, v_pool, table, lens,
+                                     backend=backend)
+
+
 def decode_attend(q, cache_k, cache_v, cur_len, *,
                   backend: str = "xla",
                   mesh=None, seq_shard: bool = True,

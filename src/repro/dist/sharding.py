@@ -233,6 +233,75 @@ def cache_pspecs(cfg, mesh, batch: int, *, seq_shard: bool = False):
     raise ValueError(fam)
 
 
+def paged_cache_pspecs(cfg, mesh, batch_slots: int, *,
+                       seq_shard: bool = False,
+                       n_pages: Optional[int] = None):
+    """PartitionSpec tree matching ``engine.paged_cache.paged_cache_spec``.
+
+    Pool leaves are ``(L, n_pages, page_size, ...)``: with
+    ``seq_shard=True`` the *page* dim takes 'model' (each shard owns a
+    contiguous slab of the pool — ``dist.decode.
+    sharded_paged_flash_decode`` masks foreign pages by count and
+    combines the statistics), else the kv-head dim takes 'model' when
+    divisible, mirroring the dense layout.  The audio cross cache stays
+    slot-dense (batch over data, replicated over 'model': it is
+    attended locally per shard in paged mode).
+    """
+    from repro.engine import paged_cache as PC  # local import: no cycle
+
+    PC.check_family(cfg)
+    mp = model_axis(mesh)
+    dp = _dp_entry(mesh)
+    sizes = _axis_sizes(mesh)
+    bax = (dp if dp is not None and batch_slots % data_size(mesh) == 0
+           else None)
+    pageax = (mp if (seq_shard and mp is not None
+                     and (n_pages is None or n_pages % sizes[mp] == 0))
+              else None)
+    kvax = (mp if (pageax is None and mp is not None
+                   and cfg.n_kv_heads % sizes[mp] == 0) else None)
+
+    def gqa_pool():
+        sh = PS(None, pageax, None, kvax, None)
+        return {"k": sh, "v": sh}
+
+    def mla_pool():
+        latent = PS(None, pageax, None, None)
+        return {"ckv": latent, "krope": latent}
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return mla_pool() if cfg.mla is not None else gqa_pool()
+    if fam == "moe":
+        mk = mla_pool if cfg.mla is not None else gqa_pool
+        return {"dense": mk() if cfg.moe.first_k_dense else None,
+                "moe": mk()}
+    # audio
+    pool = gqa_pool()
+    cross = PS(None, bax, None, None, None)
+    return {"self_k": pool["k"], "self_v": pool["v"],
+            "cross_k": cross, "cross_v": cross}
+
+
+def paged_decode_batch_pspecs(cfg, mesh, global_batch: int, *,
+                              seq_shard: bool = False,
+                              n_pages: Optional[int] = None):
+    """PartitionSpec tree for a paged decode batch
+    ({token, cur_len (B,), block_table, cache} [+ enc_lens for
+    audio])."""
+    out = {
+        "token": _batched(mesh, 1, global_batch),
+        "cur_len": _batched(mesh, 1, global_batch),
+        "block_table": _batched(mesh, 2, global_batch),
+        "cache": paged_cache_pspecs(cfg, mesh, global_batch,
+                                    seq_shard=seq_shard,
+                                    n_pages=n_pages),
+    }
+    if cfg.family == "audio":
+        out["enc_lens"] = _batched(mesh, 1, global_batch)
+    return out
+
+
 def decode_batch_pspecs(cfg, mesh, global_batch: int, *,
                         seq_shard: bool = False):
     """PartitionSpec tree for a decode batch

@@ -3,8 +3,14 @@
 ``DecodeEngine`` owns the mesh, the TP-sharded params, the decode-cache
 PartitionSpecs and the jitted step functions; ``pad_cache_from_prefill``
 is the prefill->decode cache handoff it (and ``launch.serve``) uses.
+With ``EngineConfig(paged=True)`` the cache is a paged page pool +
+block tables (``engine.paged_cache``) and ``Scheduler`` / ``Request``
+run request-level continuous batching on top of it.
 """
 from repro.engine.cache import pad_cache_from_prefill
 from repro.engine.engine import DecodeEngine, EngineConfig
+from repro.engine.paged_cache import PageAllocator, PagePoolExhausted
+from repro.engine.scheduler import Request, Scheduler
 
-__all__ = ["DecodeEngine", "EngineConfig", "pad_cache_from_prefill"]
+__all__ = ["DecodeEngine", "EngineConfig", "pad_cache_from_prefill",
+           "PageAllocator", "PagePoolExhausted", "Request", "Scheduler"]

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist import sharding as SH
+from repro.engine import paged_cache
 from repro.engine.cache import pad_cache_from_prefill
 from repro.launch import steps
 from repro.launch.mesh import make_local_mesh
@@ -47,13 +48,25 @@ class EngineConfig:
 
     ``decode_shard`` / ``kernel_impl`` default to None = inherit the
     ModelConfig's setting — a cfg pinned to 'pallas'/'seq' is honored
-    unless the EngineConfig overrides it explicitly."""
+    unless the EngineConfig overrides it explicitly.
+
+    ``paged=True`` replaces the dense ``(batch, max_len)`` decode cache
+    with a paged one (``engine.paged_cache``): a shared pool of
+    ``n_pages`` pages of ``page_size`` positions plus per-slot block
+    tables, so ``batch`` counts *slots* and ``max_len`` bounds any one
+    request (it no longer multiplies into every slot's footprint).
+    ``n_pages=None`` sizes the pool for a full dense-equivalent batch
+    (batch * ceil(max_len / page_size)); continuous batching
+    (``engine.scheduler``) typically runs with a smaller pool."""
     batch: int = 1
     max_len: int = 128              # prompt + generation budget
     mesh_shape: Tuple[int, int] = (1, 1)      # (data, model)
     decode_shard: Optional[str] = None   # 'none' | 'seq' (dist.decode)
     kernel_impl: Optional[str] = None    # 'xla' | 'pallas' | 'auto'
     param_strategy: str = "serve"   # dist.sharding param strategy
+    paged: bool = False             # paged KV cache + block tables
+    page_size: int = 16             # positions per page (paged=True)
+    n_pages: Optional[int] = None   # pool size; None = dense-equivalent
 
     def replace(self, **kw) -> "EngineConfig":
         return dataclasses.replace(self, **kw)
@@ -83,9 +96,22 @@ class DecodeEngine:
         self.ecfg = ecfg
         self.mesh = mesh if mesh is not None else make_local_mesh(
             *ecfg.mesh_shape)
+        if ecfg.paged:
+            paged_cache.check_family(cfg)
+            self.page_size = ecfg.page_size
+            self.max_pages = paged_cache.max_pages(ecfg.max_len,
+                                                   ecfg.page_size)
+            self.n_pages = (ecfg.n_pages if ecfg.n_pages is not None
+                            else ecfg.batch * self.max_pages)
         if ecfg.decode_shard == "seq":
             msize = self.mesh.shape.get("model", 1)
-            if ecfg.max_len % msize:
+            if ecfg.paged:
+                if self.n_pages % msize:
+                    raise ValueError(
+                        f"decode_shard='seq' needs n_pages="
+                        f"{self.n_pages} divisible by the model axis "
+                        f"({msize})")
+            elif ecfg.max_len % msize:
                 raise ValueError(
                     f"decode_shard='seq' needs max_len={ecfg.max_len} "
                     f"divisible by the model axis ({msize})")
@@ -97,11 +123,18 @@ class DecodeEngine:
         self.params = jax.device_put(
             params, SH.to_shardings(self.mesh, self.param_pspecs))
 
-        self.cache_pspecs = SH.cache_pspecs(
-            cfg, self.mesh, ecfg.batch,
-            seq_shard=(ecfg.decode_shard == "seq"))
+        if ecfg.paged:
+            self.cache_pspecs = SH.paged_cache_pspecs(
+                cfg, self.mesh, ecfg.batch,
+                seq_shard=(ecfg.decode_shard == "seq"),
+                n_pages=self.n_pages)
+        else:
+            self.cache_pspecs = SH.cache_pspecs(
+                cfg, self.mesh, ecfg.batch,
+                seq_shard=(ecfg.decode_shard == "seq"))
         self.prefill_fn = jax.jit(steps.build_prefill(cfg, mesh=self.mesh))
         self.decode_fn = jax.jit(steps.build_decode(cfg, self.mesh))
+        self._enc_len = 0           # audio: encoder positions at prefill
 
     # ------------------------------------------------------------------
     # steps
@@ -121,16 +154,78 @@ class DecodeEngine:
         enc_len = (batch["frontend_emb"].shape[1]
                    if self.cfg.is_encdec and "frontend_emb" in batch
                    else P)
+        self._enc_len = enc_len
         logits, caches = self.prefill_fn(self.params, batch)
-        cache = pad_cache_from_prefill(self.cfg, caches, B,
-                                       self.ecfg.max_len, enc_len=enc_len)
+        if self.ecfg.paged:
+            cache = paged_cache.init_paged_cache(
+                self.cfg, self.n_pages, self.page_size, B,
+                enc_len=enc_len)
+            cache = paged_cache.write_prefill(
+                self.cfg, cache, caches, self.default_block_table())
+        else:
+            cache = pad_cache_from_prefill(self.cfg, caches, B,
+                                           self.ecfg.max_len,
+                                           enc_len=enc_len)
         cache = jax.device_put(
             cache, SH.to_shardings(self.mesh, self.cache_pspecs))
         return logits, cache
 
-    def decode_step(self, token, cur_len, cache):
-        """One token for the whole batch: token (B,) int32, cur_len
-        scalar.  Returns (logits (B, vocab_padded) fp32, new cache)."""
+    def init_paged_cache(self, enc_len: Optional[int] = None):
+        """Zeroed page pools laid out on the engine mesh — the
+        starting cache for continuous batching (``engine.scheduler``
+        fills it per admitted request).  ``enc_len`` budgets the audio
+        cross cache (default: the engine max_len)."""
+        if not self.ecfg.paged:
+            raise ValueError("init_paged_cache() needs paged=True")
+        cache = paged_cache.init_paged_cache(
+            self.cfg, self.n_pages, self.page_size, self.ecfg.batch,
+            enc_len=(enc_len if enc_len is not None
+                     else self.ecfg.max_len))
+        return jax.device_put(
+            cache, SH.to_shardings(self.mesh, self.cache_pspecs))
+
+    def default_block_table(self) -> jax.Array:
+        """Whole-batch identity block table: slot b owns pages
+        [b * max_pages, (b+1) * max_pages) — the dense-equivalent
+        layout ``generate`` uses.  Continuous batching
+        (``engine.scheduler``) builds its own tables from the page
+        allocator instead."""
+        if not self.ecfg.paged:
+            raise ValueError("default_block_table() needs paged=True")
+        B, J = self.ecfg.batch, self.max_pages
+        if self.n_pages < B * J:
+            raise ValueError(
+                f"whole-batch paged prefill needs n_pages >= "
+                f"batch*max_pages = {B * J}, got {self.n_pages}; "
+                "drive an oversubscribed pool through "
+                "engine.scheduler.Scheduler instead")
+        return (jnp.arange(B, dtype=jnp.int32)[:, None] * J
+                + jnp.arange(J, dtype=jnp.int32)[None, :])
+
+    def decode_step(self, token, cur_len, cache, block_table=None):
+        """One token for the whole batch: token (B,) int32.
+
+        Dense cache: ``cur_len`` is a scalar (every slot at the same
+        position).  Paged (ecfg.paged): ``cur_len`` is a per-slot (B,)
+        int32 vector and ``block_table`` (B, max_pages) int32 is
+        required.  Returns (logits (B, vocab_padded) fp32, new cache).
+        """
+        if self.ecfg.paged:
+            if block_table is None:
+                raise ValueError(
+                    "paged decode_step needs the block_table operand "
+                    "(engine.default_block_table() for whole-batch "
+                    "generation)")
+            lens = jnp.asarray(cur_len, jnp.int32)
+            if lens.ndim == 0:
+                lens = jnp.full((self.ecfg.batch,), lens, jnp.int32)
+            dbatch = {"token": token, "cur_len": lens,
+                      "block_table": jnp.asarray(block_table, jnp.int32),
+                      "cache": cache}
+            if self.cfg.family == "audio":
+                dbatch["enc_lens"] = jnp.full(
+                    (self.ecfg.batch,), self._enc_len, jnp.int32)
+            return self.decode_fn(self.params, dbatch)
         return self.decode_fn(self.params, {
             "token": token, "cur_len": jnp.int32(cur_len),
             "cache": cache})
@@ -165,23 +260,31 @@ class DecodeEngine:
         logits.block_until_ready()
         t_prefill = time.time() - t0
 
+        base_key = jax.random.PRNGKey(seed)
+
         def pick(logits, i):
             if temperature > 0:
-                key = jax.random.PRNGKey(seed + i)
+                # fold_in, NOT PRNGKey(seed + i): additive seeds make
+                # step i of seed s and step i-1 of seed s+1 sample with
+                # the IDENTICAL key, so adjacent-seed requests in a
+                # fleet replay correlated token streams.  fold_in keeps
+                # (seed, args) -> tokens deterministic while giving
+                # every (seed, step) pair an independent key.
+                key = jax.random.fold_in(base_key, i)
                 return jax.random.categorical(
                     key, logits / temperature, -1).astype(jnp.int32)
             return jnp.argmax(logits, -1).astype(jnp.int32)
 
-        # first token is always the argmax of the prefill logits and
-        # step i samples with PRNGKey(seed + i) — the pre-engine serve
-        # CLI's exact convention, so logged (seed, args) pairs replay
-        # to the same token streams across the engine migration
+        # first token is always the argmax of the prefill logits (the
+        # pre-engine serve CLI's convention)
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        block_table = (self.default_block_table() if self.ecfg.paged
+                       else None)
         out = [tok]
         t0 = time.time()
         for i in range(gen - 1):
             logits, cache = self.decode_step(
-                tok, prefill_tokens + i, cache)
+                tok, prefill_tokens + i, cache, block_table=block_table)
             tok = pick(logits, i)
             out.append(tok)
         jax.block_until_ready(tok)

@@ -1,0 +1,219 @@
+"""Paged KV cache: a shared page pool + per-slot block tables.
+
+The dense decode cache pads every request to the engine's full
+``(B, max_len)`` budget, so at serving scale most cache bytes are
+*dead* — allocated, streamed around, never read.  Paging replaces the
+per-slot budget with a shared pool of fixed-width pages:
+
+  * each family cache leaf becomes a **page pool** with the (B, T)
+    dims replaced by ``(n_pages, page_size)`` — e.g. the GQA leaf
+    ``(L, B, T, KV, Dh)`` becomes ``(L, n_pages, page_size, KV, Dh)``;
+  * a ``(B_slots, max_pages)`` int32 **block table** maps each slot's
+    logical page j to a physical page id (the allocator hands pages
+    out on demand, so a slot only ever owns ``ceil(len/page_size)``
+    pages).
+
+The page is the software analogue of the paper's intermediate-tier
+transaction: a fixed-width unit staged whole into the kernel (the
+block-table scalar prefetch in ``kernels.vwr_decode`` resolves the
+page id before the DMA fires), so reclaiming dead bytes costs no
+transaction width.  Recurrent families (hybrid/ssm) carry O(1) state
+per slot — nothing to page — and are rejected here.
+
+This module owns the *layout* (pool specs, zero-init, prefill
+scatter) and the host-side page allocator; request-level admission /
+eviction policy lives in ``engine.scheduler``.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+PAGED_FAMILIES = ("dense", "vlm", "moe", "audio")
+
+
+def check_family(cfg) -> None:
+    if cfg.family not in PAGED_FAMILIES:
+        raise ValueError(
+            f"paged KV cache supports the KV-cache families "
+            f"{PAGED_FAMILIES}; family {cfg.family!r} carries O(1) "
+            "recurrent state per slot (nothing to page) — serve it "
+            "with the dense engine")
+
+
+def max_pages(max_len: int, page_size: int) -> int:
+    return -(-max_len // page_size)
+
+
+def paged_cache_spec(cfg, n_pages: int, page_size: int,
+                     batch_slots: int, enc_len: int = 0):
+    """ShapeDtypeStruct tree for the paged decode cache.
+
+    KV leaves become ``(L, n_pages, page_size, ...)`` pools.  The audio
+    cross-attention cache stays slot-dense ``(L, B_slots, enc_len_p,
+    KV, Dh)`` — it is written once at admission and sized exactly by
+    the encoder length (no dead bytes to reclaim); ``lm`` *views* it as
+    an identity-paged pool at attend time, so ``enc_len`` is padded up
+    to a page multiple here.
+    """
+    check_family(cfg)
+    fam = cfg.family
+    dt_ = jnp.dtype(cfg.dtype)
+
+    def sds(shape, dtype=dt_):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    def gqa_pool(L):
+        sh = (L, n_pages, page_size, cfg.n_kv_heads, cfg.d_head)
+        return {"k": sds(sh), "v": sds(sh)}
+
+    def mla_pool(L):
+        m = cfg.mla
+        return {"ckv": sds((L, n_pages, page_size, m.kv_lora_rank)),
+                "krope": sds((L, n_pages, page_size, m.rope_head_dim))}
+
+    if fam in ("dense", "vlm"):
+        return mla_pool(cfg.n_layers) if cfg.mla is not None \
+            else gqa_pool(cfg.n_layers)
+
+    if fam == "moe":
+        m = cfg.moe
+        n_moe = cfg.n_layers - m.first_k_dense
+        mk = mla_pool if cfg.mla is not None else gqa_pool
+        return {"dense": mk(m.first_k_dense) if m.first_k_dense else None,
+                "moe": mk(n_moe)}
+
+    # audio: paged self-attention pool + slot-dense cross cache padded
+    # to a page multiple (lm reshapes it into an identity-paged view)
+    enc_p = max_pages(max(enc_len, 1), page_size) * page_size
+    xh = (cfg.n_layers, batch_slots, enc_p, cfg.n_kv_heads, cfg.d_head)
+    pool = gqa_pool(cfg.n_layers)
+    return {"self_k": pool["k"], "self_v": pool["v"],
+            "cross_k": sds(xh), "cross_v": sds(xh)}
+
+
+def init_paged_cache(cfg, n_pages: int, page_size: int,
+                     batch_slots: int, enc_len: int = 0):
+    spec = paged_cache_spec(cfg, n_pages, page_size, batch_slots, enc_len)
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), spec,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+# ----------------------------------------------------------------------
+# prefill -> pages
+# ----------------------------------------------------------------------
+
+def _scatter_pages(pool, kv, table):
+    """pool (L, n_pages, ps, ...) <- kv (L, B', S, ...) at the pages of
+    ``table`` (B', max_pages); S is padded up to a page multiple (the
+    zero pad also scrubs stale bytes from reused pages)."""
+    L, Bp, S = kv.shape[:3]
+    ps = pool.shape[2]
+    pad = (-S) % ps
+    if pad:
+        kv = jnp.pad(kv, ((0, 0), (0, 0), (0, pad))
+                     + ((0, 0),) * (kv.ndim - 3))
+    J = kv.shape[2] // ps
+    kv = kv.reshape(L, Bp, J, ps, *kv.shape[3:]).astype(pool.dtype)
+    return pool.at[:, table[:, :J]].set(kv)
+
+
+def write_prefill(cfg, cache, caches, table, *, enc_caches_slots=None):
+    """Scatter prefill KV material into the page pools.
+
+    ``caches`` is the raw ``lm.prefill`` cache material for B' requests
+    (B' = full slot count for whole-batch prefill, or 1 for the
+    scheduler's admit-into-slot path); ``table`` holds those requests'
+    block-table rows (B', max_pages).  For audio,
+    ``enc_caches_slots`` is the list of slot indices receiving the
+    slot-dense cross cache rows.  Returns the updated cache tree.
+    """
+    check_family(cfg)
+    fam = cfg.family
+    cache = dict(cache)
+
+    if fam in ("dense", "vlm"):
+        if cfg.mla is not None:
+            ckv, krope = caches
+            cache["ckv"] = _scatter_pages(cache["ckv"], ckv, table)
+            cache["krope"] = _scatter_pages(cache["krope"], krope, table)
+        else:
+            k, v = caches
+            cache["k"] = _scatter_pages(cache["k"], k, table)
+            cache["v"] = _scatter_pages(cache["v"], v, table)
+        return cache
+
+    if fam == "moe":
+        kv_d, kv_m = caches
+        keys = ("ckv", "krope") if cfg.mla is not None else ("k", "v")
+        if cfg.moe.first_k_dense and kv_d is not None:
+            cache["dense"] = {
+                kk: _scatter_pages(cache["dense"][kk], kv_d[i], table)
+                for i, kk in enumerate(keys)}
+        cache["moe"] = {
+            kk: _scatter_pages(cache["moe"][kk], kv_m[i], table)
+            for i, kk in enumerate(keys)}
+        return cache
+
+    # audio
+    kv, cross = caches
+    cache["self_k"] = _scatter_pages(cache["self_k"], kv[0], table)
+    cache["self_v"] = _scatter_pages(cache["self_v"], kv[1], table)
+    slots = jnp.asarray(
+        enc_caches_slots if enc_caches_slots is not None
+        else range(kv[0].shape[1]), jnp.int32)
+    enc_p = cache["cross_k"].shape[2]
+    for kk, xkv in (("cross_k", cross[0]), ("cross_v", cross[1])):
+        pad = enc_p - xkv.shape[2]
+        if pad:
+            xkv = jnp.pad(xkv, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        cache[kk] = cache[kk].at[:, slots].set(
+            xkv.astype(cache[kk].dtype))
+    return cache
+
+
+# ----------------------------------------------------------------------
+# host-side page allocator
+# ----------------------------------------------------------------------
+
+class PagePoolExhausted(RuntimeError):
+    """Raised when an admit/step needs more pages than the pool has
+    free — evict a request, shrink the stream, or raise ``n_pages``."""
+
+
+class PageAllocator:
+    """Free-list over physical page ids [0, n_pages).  Pure host state:
+    the device only ever sees the resulting block tables."""
+
+    def __init__(self, n_pages: int):
+        self.n_pages = int(n_pages)
+        self._free: List[int] = list(range(self.n_pages - 1, -1, -1))
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise PagePoolExhausted(
+                f"page pool exhausted: need {n} page(s), "
+                f"{len(self._free)} free of {self.n_pages} "
+                f"(evict a request or raise n_pages / EngineConfig."
+                f"page_size)")
+        out = [self._free.pop() for _ in range(n)]
+        return out
+
+    def free(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            if not 0 <= p < self.n_pages:
+                raise ValueError(f"freeing invalid page id {p}")
+            if p in self._free:
+                raise ValueError(f"double free of page {p}")
+        self._free.extend(pages)

@@ -1,0 +1,344 @@
+"""Continuous batching: request-level serving on the paged DecodeEngine.
+
+The dense ``engine.generate`` admits a whole batch at once and holds
+every slot until the longest request finishes — at serving scale most
+of the cache and most of the step budget is spent on retired or
+not-yet-started requests.  This scheduler runs the engine's jitted
+paged decode step as a *slot machine* instead:
+
+  admit    a pending request takes a free slot: its prompt is prefilled
+           alone (batch-1 prefill, one jit cache per prompt length) and
+           scattered into freshly allocated pages — survivors in other
+           slots are untouched (no re-prefill, no cache copy);
+  step     ONE decode step advances every active slot through the
+           shared jitted step (per-slot lengths + block tables);
+           inactive slots ride along masked;
+  grow     a slot crossing a page boundary gets one more page from the
+           allocator — a request's footprint is ceil(len/page_size)
+           pages, never the engine-wide max_len budget;
+  preempt  when growth finds the pool dry, the latest-admitted slot is
+           evicted back to the pending queue (pages freed now, prompt +
+           generated prefix teacher-forced back in at re-admission) —
+           an oversubscribed pool degrades to less concurrency instead
+           of killing the stream;
+  retire   a finished request frees its pages and its slot immediately;
+           the next pending request is admitted on the following
+           ``admit()`` — short requests stop paying for long ones.
+
+Token streams are bit-identical to a solo ``engine.generate`` run of
+the same request (first token = argmax of the prefill logits; sampled
+step i uses ``fold_in(PRNGKey(seed), i)``), which the paged-vs-dense
+tests pin — except across a preemption, where the re-prefilled prefix
+reproduces the decode-written cache only to fp rounding (a near-tie
+argmax can flip, the usual recompute-preemption caveat).
+
+All bookkeeping (free slots, free pages, per-slot lengths, block
+tables) is host-side numpy; the device only ever sees the batch arrays
+of the current step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine.paged_cache import (PageAllocator, PagePoolExhausted,
+                                      write_prefill)
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.  ``tokens`` is the (P,) int32 prompt;
+    ``gen`` counts generated tokens (prefill argmax included);
+    ``frontend_emb`` feeds the vlm/audio modality frontends."""
+    rid: Any
+    tokens: np.ndarray
+    gen: int
+    temperature: float = 0.0
+    seed: int = 0
+    frontend_emb: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    length: int                     # valid cache positions
+    pages: List[int]                # physical pages owned
+    out: List[int]                  # generated tokens so far
+    steps: int = 0                  # decode steps taken (RNG fold_in)
+    order: int = 0                  # admission sequence (LIFO preempt)
+
+
+class Scheduler:
+    """Admit / step / retire requests over a paged ``DecodeEngine``.
+
+    ``enc_len`` budgets the audio cross-attention cache (frames per
+    slot); it defaults to the engine's decoder ``max_len``, which is
+    usually too SHORT for speech — encoder frame counts routinely
+    exceed the decoder token budget, so audio streams should size it
+    to the longest expected ``frontend_emb``."""
+
+    def __init__(self, engine, enc_len: Optional[int] = None):
+        if not engine.ecfg.paged:
+            raise ValueError(
+                "Scheduler needs a paged engine: EngineConfig("
+                "paged=True, page_size=..., n_pages=...)")
+        self.eng = engine
+        self.cfg = engine.cfg
+        B, J = engine.ecfg.batch, engine.max_pages
+        self.page_size = engine.page_size
+        self.allocator = PageAllocator(engine.n_pages)
+        self.slots: List[Optional[_Slot]] = [None] * B
+        self.table = np.zeros((B, J), np.int32)
+        self.lens = np.zeros((B,), np.int32)
+        self.tokens = np.zeros((B,), np.int32)
+        self.enc_lens = np.zeros((B,), np.int32)
+        self.cache = engine.init_paged_cache(enc_len=enc_len)
+        self.enc_budget = (self.cache["cross_k"].shape[2]
+                           if self.cfg.family == "audio" else 0)
+        self.pending: deque = deque()   # Request | preempted _Slot
+        self.finished: Dict[Any, np.ndarray] = {}
+        self.stats = {"prefills": 0, "admitted": 0, "retired": 0,
+                      "steps": 0, "peak_pages": 0, "preempted": 0}
+        self._order = 0
+        # jitted prefill->pages scatter with the pool DONATED (where
+        # the backend supports donation): the eager .at[].set would
+        # copy every full pool leaf per admission
+        self._write_prefill = jax.jit(
+            lambda cache, caches, table, slots: write_prefill(
+                self.cfg, cache, caches, table,
+                enc_caches_slots=slots),
+            donate_argnums=(() if jax.default_backend() == "cpu"
+                            else (0,)))
+
+    # ------------------------------------------------------------------
+
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def submit(self, req: Request) -> None:
+        self.pending.append(req)
+
+    def _prefill_positions(self, req: Request) -> int:
+        P = len(req.tokens)
+        if self.cfg.family == "vlm":
+            P += self.cfg.frontend_tokens
+        return P
+
+    def _pages_needed(self, positions: int, more_writes: bool) -> int:
+        """Pages covering ``positions`` occupied slots — plus the page
+        the next decode token writes to, but only when one is coming
+        (a gen-exhausted request must not ask for a page beyond its
+        block-table row)."""
+        last = positions + 1 if more_writes else positions
+        return -(-last // self.page_size)
+
+    def admit(self) -> int:
+        """Admit pending requests (or preempted slots) into free slots
+        while pages allow.  Returns the number admitted (0 = no free
+        slot, nothing pending, or the pool is momentarily too full —
+        retiring slots frees pages, so admission retries on the next
+        call)."""
+        admitted = 0
+        while self.pending:
+            try:
+                slot_id = self.slots.index(None)
+            except ValueError:
+                break
+            item = self.pending[0]
+            req = item.req if isinstance(item, _Slot) else item
+            P = self._prefill_positions(req)
+            if P + req.gen - 1 > self.eng.ecfg.max_len:
+                raise ValueError(
+                    f"request {req.rid!r}: prompt {P} + gen {req.gen} "
+                    f"exceeds engine max_len {self.eng.ecfg.max_len}")
+            if (self.cfg.family == "audio"
+                    and req.frontend_emb is not None
+                    and req.frontend_emb.shape[0] > self.enc_budget):
+                raise ValueError(
+                    f"request {req.rid!r}: {req.frontend_emb.shape[0]} "
+                    f"encoder frames exceed the cross-cache budget "
+                    f"{self.enc_budget} — construct the Scheduler with "
+                    "enc_len >= the longest expected frontend_emb")
+            done = len(item.out) if isinstance(item, _Slot) else 1
+            positions = P + (len(item.out) - 1
+                             if isinstance(item, _Slot) else 0)
+            need = self._pages_needed(positions, done < req.gen)
+            if need > self.allocator.n_pages:
+                raise PagePoolExhausted(
+                    f"request {req.rid!r} needs {need} pages but the "
+                    f"pool only has {self.allocator.n_pages} in total "
+                    "— raise EngineConfig.n_pages or page_size")
+            if need > self.allocator.free_pages:
+                break               # wait for a retirement
+            self.pending.popleft()
+            self._admit_into(slot_id, item, self.allocator.alloc(need))
+            admitted += 1
+        return admitted
+
+    def _admit_into(self, slot_id: int, item, pages: List[int]) -> None:
+        """Prefill ``item`` (a fresh Request, or a preempted _Slot whose
+        prompt + generated prefix is teacher-forced back in) into the
+        allocated pages of ``slot_id``."""
+        resumed = isinstance(item, _Slot)
+        req = item.req if resumed else item
+        tokens = np.asarray(req.tokens, np.int32)
+        if resumed:
+            # re-prefill everything already in the cache at preemption:
+            # prompt + generated tokens except the last, which is the
+            # slot's pending input token (written by the next step)
+            tokens = np.concatenate([tokens,
+                                     np.asarray(item.out[:-1], np.int32)])
+        batch = {"tokens": jnp.asarray(tokens)[None]}
+        if req.frontend_emb is not None:
+            batch["frontend_emb"] = jnp.asarray(req.frontend_emb)[None]
+        logits, caches = self.eng.prefill_fn(self.eng.params, batch)
+        self.stats["prefills"] += 1
+        row = np.zeros((1, self.table.shape[1]), np.int32)
+        row[0, :len(pages)] = pages
+        self.cache = self._write_prefill(self.cache, caches,
+                                         jnp.asarray(row),
+                                         jnp.asarray([slot_id]))
+        if resumed:
+            slot = _Slot(req=req, length=self._prefill_positions(req)
+                         + len(item.out) - 1,
+                         pages=list(pages), out=list(item.out),
+                         steps=item.steps, order=self._order)
+            tok = item.out[-1]
+        else:
+            # engine convention: the first generated token is the
+            # argmax of the prefill logits; sampled steps start at
+            # fold_in(key, 0)
+            tok = int(jnp.argmax(logits[0]))
+            slot = _Slot(req=req, length=self._prefill_positions(req),
+                         pages=list(pages), out=[tok],
+                         order=self._order)
+        self._order += 1
+        self.slots[slot_id] = slot
+        self.table[slot_id] = row[0]
+        self.lens[slot_id] = slot.length
+        self.tokens[slot_id] = tok
+        self.enc_lens[slot_id] = (req.frontend_emb.shape[0]
+                                  if self.cfg.family == "audio"
+                                  and req.frontend_emb is not None else 0)
+        self.stats["admitted"] += 1
+        self.stats["peak_pages"] = max(self.stats["peak_pages"],
+                                       self.allocator.used_pages)
+        if len(slot.out) >= req.gen:
+            self._retire(slot_id)   # gen=1: the prefill already ends it
+
+    def _retire(self, slot_id: int) -> None:
+        slot = self.slots[slot_id]
+        self.finished[slot.req.rid] = np.asarray(slot.out, np.int32)
+        self.allocator.free(slot.pages)
+        self.slots[slot_id] = None
+        self.lens[slot_id] = 0
+        self.tokens[slot_id] = 0
+        self.enc_lens[slot_id] = 0
+        self.stats["retired"] += 1
+
+    def _preempt(self, slot_id: int) -> None:
+        """Evict an active slot back to the FRONT of the pending queue
+        (vLLM-style recompute preemption): its pages free immediately
+        and its prompt + generated prefix is teacher-forced back in at
+        re-admission, so no tokens are lost — only the prefix compute
+        is redone."""
+        slot = self.slots[slot_id]
+        self.allocator.free(slot.pages)
+        slot.pages = []
+        self.pending.appendleft(slot)
+        self.slots[slot_id] = None
+        self.lens[slot_id] = 0
+        self.tokens[slot_id] = 0
+        self.enc_lens[slot_id] = 0
+        self.stats["preempted"] += 1
+
+    def _grow_pages(self) -> None:
+        """A slot whose next write position opens a new page gets one
+        more from the pool (the only mid-flight allocation).  When the
+        pool is dry, the LATEST-admitted active slot is preempted
+        (freeing its pages) until the allocation fits — the stream
+        degrades to less concurrency instead of dying with every
+        in-flight request lost."""
+        for slot_id, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            page_idx = slot.length // self.page_size
+            if page_idx < len(slot.pages):
+                continue
+            while self.allocator.free_pages < 1:
+                victim = max(
+                    (s for s, sl in enumerate(self.slots)
+                     if sl is not None),
+                    key=lambda s: self.slots[s].order)
+                self._preempt(victim)
+                if victim == slot_id:
+                    break           # the needy slot itself backed off
+            if self.slots[slot_id] is None:
+                continue
+            (page,) = self.allocator.alloc(1)
+            slot.pages.append(page)
+            self.table[slot_id, page_idx] = page
+            self.stats["peak_pages"] = max(
+                self.stats["peak_pages"], self.allocator.used_pages)
+
+    def step(self) -> None:
+        """One decode step for every active slot, then retirement."""
+        if self.n_active == 0:
+            return
+        self._grow_pages()
+        if self.n_active == 0:      # growth preempted everything
+            return
+        dbatch = {"token": jnp.asarray(self.tokens),
+                  "cur_len": jnp.asarray(self.lens),
+                  "block_table": jnp.asarray(self.table),
+                  "cache": self.cache}
+        if self.cfg.family == "audio":
+            dbatch["enc_lens"] = jnp.asarray(self.enc_lens)
+        logits, self.cache = self.eng.decode_fn(self.eng.params, dbatch)
+        self.stats["steps"] += 1
+        # one batched argmax + one device->host transfer for the whole
+        # step; only sampled (temperature > 0) slots pay a per-slot
+        # categorical on top
+        greedy = np.asarray(jnp.argmax(logits, -1))
+        for slot_id, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            if slot.req.temperature > 0:
+                key = jax.random.fold_in(
+                    jax.random.PRNGKey(slot.req.seed), slot.steps)
+                tok = int(jax.random.categorical(
+                    key, logits[slot_id] / slot.req.temperature))
+            else:
+                tok = int(greedy[slot_id])
+            slot.steps += 1
+            slot.length += 1
+            slot.out.append(tok)
+            self.lens[slot_id] = slot.length
+            self.tokens[slot_id] = tok
+            if len(slot.out) >= slot.req.gen:
+                self._retire(slot_id)
+
+    def run(self) -> Dict[Any, np.ndarray]:
+        """Drain the pending queue: admit / step until everything
+        retires.  Raises ``PagePoolExhausted`` if the stream deadlocks
+        (pending work, no active slots, and still not enough pages)."""
+        while self.pending or self.n_active:
+            self.admit()
+            if self.n_active == 0:
+                if self.pending:
+                    raise PagePoolExhausted(
+                        f"page pool exhausted: {len(self.pending)} "
+                        f"pending request(s) cannot be admitted with "
+                        f"{self.allocator.free_pages} free page(s) of "
+                        f"{self.allocator.n_pages} and no active "
+                        "request left to retire — raise "
+                        "EngineConfig.n_pages")
+                break
+            self.step()
+        return dict(self.finished)

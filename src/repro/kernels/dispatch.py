@@ -137,10 +137,21 @@ def cached_backend(op: str, cfg_or_backend: Any, args=(),
         key = autotune.cache_key(f"dispatch:{op}", shape, dtype, tag)
         hit = autotune._load(autotune.cache_path()).get(key)
         if hit is not None:
-            idx = int(hit["blocks"][0])
-            if 0 <= idx < len(cands):
-                return cands[idx]
+            name = _decode_winner(hit["blocks"][0], cands)
+            if name is not None:
+                return name
     return cands[0]
+
+
+def _decode_winner(entry, cands) -> "str | None":
+    """A persisted dispatch winner: the backend NAME (current format —
+    immune to registry growth/reordering), or a legacy positional index
+    into the candidate list (pre-paged-kernel cache files), tolerated
+    as long as it is still in range."""
+    if isinstance(entry, str):
+        return entry if entry in cands else None
+    idx = int(entry)
+    return cands[idx] if 0 <= idx < len(cands) else None
 
 
 # ======================================================================
@@ -203,22 +214,43 @@ def _resolve_auto(op: str, table: Dict[str, Callable], args, kwargs) -> str:
         return cands[0]
     tag = kops._backend_tag(kops._auto_interpret(None))
 
+    # migrate legacy positional-index entries to backend names: an
+    # index decoded against the CURRENT candidate list silently shifts
+    # meaning whenever a backend is registered (or a test monkeypatches
+    # an op), so the name is the only stable thing to persist
+    if autotune.enabled():
+        path = autotune.cache_path()
+        tbl = autotune._load(path)
+        key = autotune.cache_key(f"dispatch:{op}", shape, dtype, tag)
+        hit = tbl.get(key)
+        if hit is not None and not isinstance(hit["blocks"][0], str):
+            name = _decode_winner(hit["blocks"][0], cands)
+            if name is None:
+                tbl.pop(key)        # unmappable: re-measure below
+            else:
+                tbl[key] = {**hit, "blocks": [name]}
+                autotune._persist(path, tbl)
+
     def runner(cand):
-        impl = table[cands[cand[0]]]
+        impl = table[cand[0]]
         cargs, ckw = _synthesize(args, kwargs)
 
         def run():
             jax.block_until_ready(impl(*cargs, **ckw))
         return run
 
-    idx, = autotune.get_blocks(
+    winner, = autotune.get_blocks(
         f"dispatch:{op}", shape, dtype, tag,
-        candidates=tuple((i,) for i in range(len(cands))),
+        # candidates are the backend NAMES — the persisted entry
+        # replays by name, so later registrations can't shift it
+        candidates=tuple((b,) for b in cands),
         # prior: registration-preference order (pallas first); the
         # measured pass, when enabled, overrides it per shape
-        prior=lambda c: (float(c[0]), 0.0),
+        prior=lambda c: (float(cands.index(c[0])), 0.0),
         runner=runner if autotune.enabled() else None)
-    return cands[idx]
+    if winner not in table:             # stale name (backend removed)
+        return cands[0]
+    return winner
 
 
 # ======================================================================

@@ -22,7 +22,8 @@ import jax.numpy as jnp
 from repro.kernels import autotune
 from repro.kernels.vwr_attention import vwr_attention_p
 from repro.kernels.vwr_conv2d import vwr_conv2d_p
-from repro.kernels.vwr_decode import vwr_flash_decode_p
+from repro.kernels.vwr_decode import (vwr_flash_decode_p,
+                                      vwr_paged_flash_decode_p)
 from repro.kernels.vwr_depthwise import vwr_depthwise_p
 from repro.kernels.vwr_matmul import vwr_matmul_p, vwr_swiglu_p
 
@@ -370,6 +371,40 @@ def vwr_flash_decode(q, k, v, cur_len, pos0=0, *, bkv=None,
                      ).reshape(1, 2)
     return _vwr_flash_decode_jit(q, k, v, lens, bkv=bkv,
                                  interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _vwr_paged_flash_decode_jit(q, k_pool, v_pool, table, counts, *,
+                                interpret):
+    B, H, D = q.shape
+    n_pages, ps, KV, _ = k_pool.shape
+    G = H // KV
+    qf = q.reshape(B * KV, G, D)
+    # unallocated / foreign table entries carry count 0, so any legal
+    # page index is safe to stage — clamp rather than branch
+    tbl = jnp.clip(table, 0, n_pages - 1).astype(jnp.int32)
+    o_t, m, l = vwr_paged_flash_decode_p(
+        qf, k_pool, v_pool, tbl, counts.astype(jnp.int32),
+        interpret=interpret)
+    return (o_t.reshape(B, H, D), m.reshape(B, H), l.reshape(B, H))
+
+
+def vwr_paged_flash_decode(q, k_pool, v_pool, table, counts, *,
+                           interpret=None):
+    """Unnormalized flash-decode partials against a paged KV pool.
+
+    q: (B, H, Dh); k_pool, v_pool: (n_pages, page_size, KV, Dh) — the
+    shared page pool (possibly one shard's slab of it); table: (B,
+    max_pages) int32 physical page per (slot, logical page); counts:
+    (B, max_pages) int32 valid tokens per (slot, logical page) — 0
+    masks a page completely.  Page size is the transaction width here
+    (the engine owns it), so there is no block autotuning; the 'auto'
+    dispatch backend still measures this wrapper against the XLA
+    gather reference per shape.  Returns fp32 (o_tilde (B,H,Dh),
+    m (B,H), l (B,H)), the ``dist.decode`` combine contract."""
+    interpret = _auto_interpret(interpret)
+    return _vwr_paged_flash_decode_jit(q, k_pool, v_pool, table, counts,
+                                       interpret=interpret)
 
 
 def _decode_blocks(B, T, H, KV, D, dtype, interpret):

@@ -77,6 +77,113 @@ def _decode_kernel(q_ref, k_ref, v_ref, lens_ref, ot_ref, m_ref, l_ref,
         l_ref[0] = ls_ref[:, 0]
 
 
+def _paged_decode_kernel(tbl_ref, cnt_ref, q_ref, k_ref, v_ref,
+                         ot_ref, m_ref, l_ref, acc_ref, ms_ref, ls_ref,
+                         *, scale, page_size, n_logical, kv_heads):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        ms_ref[...] = jnp.full_like(ms_ref, NEG_INF)
+        ls_ref[...] = jnp.zeros_like(ls_ref)
+
+    count = cnt_ref[b // kv_heads, j]                   # tokens valid here
+    q = q_ref[0].astype(jnp.float32) * scale            # (G, Dh)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)           # (page_size, Dh)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    idx = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    # count == 0 masks the whole page: a logical page past the slot's
+    # length, an unallocated table entry, or (sharded) a page owned by
+    # another shard's slab — the caller folds all three into counts
+    s = jnp.where(idx < count, s, NEG_INF)
+    m_prev = ms_ref[:, 0]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))         # (G,)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where((m_new > NEG_INF / 2)[:, None], p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    ls_ref[:, 0] = ls_ref[:, 0] * corr + p.sum(axis=-1)
+    pv = jnp.dot(p, v_ref[0, :, 0, :].astype(jnp.float32),
+                 preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+    ms_ref[:, 0] = m_new
+
+    @pl.when(j == n_logical - 1)
+    def _store():
+        ot_ref[0] = acc_ref[...]
+        m_ref[0] = ms_ref[:, 0]
+        l_ref[0] = ls_ref[:, 0]
+
+
+def vwr_paged_flash_decode_p(q: jax.Array, k_pool: jax.Array,
+                             v_pool: jax.Array, table: jax.Array,
+                             counts: jax.Array, *,
+                             interpret: bool = False):
+    """Flash-decode over a paged KV pool, one staged page per grid step.
+
+    The block table IS the transaction schedule: it rides in as a
+    scalar-prefetch operand, so each (slot, logical-page) grid step's
+    BlockSpec index map resolves ``table[slot, j]`` *before* the DMA
+    fires and stages exactly that physical (page_size x Dh) page in
+    VMEM — the gather never materializes in HBM.  ``counts[slot, j]``
+    is the number of valid tokens in that page (0 masks the page
+    entirely — length overrun, unallocated entry, or a page owned by
+    another shard's slab).
+
+    q: (B*KV, G, Dh); k_pool, v_pool: (n_pages, page_size, KV, Dh);
+    table, counts: (B, max_pages) int32, table pre-clamped to
+    [0, n_pages).  Returns (o_tilde (BKV, G, Dh) f32, m (BKV, G) f32,
+    l (BKV, G) f32) — the same unnormalized combine contract as
+    ``vwr_flash_decode_p``.
+    """
+    BKV, G, D = q.shape
+    n_pages, ps, KV, Dp = k_pool.shape
+    assert v_pool.shape == k_pool.shape and Dp == D
+    assert BKV % KV == 0, (BKV, KV)
+    B, J = table.shape
+    assert counts.shape == (B, J) and B * KV == BKV, (table.shape, BKV)
+    scale = 1.0 / (D ** 0.5)
+    kernel = functools.partial(_paged_decode_kernel, scale=scale,
+                               page_size=ps, n_logical=J, kv_heads=KV)
+    f32 = jnp.float32
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # table, counts
+        grid=(BKV, J),
+        in_specs=[
+            pl.BlockSpec((1, G, D), lambda b, j, tbl, cnt: (b, 0, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, j, tbl, cnt:
+                         (tbl[b // KV, j], 0, b % KV, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, j, tbl, cnt:
+                         (tbl[b // KV, j], 0, b % KV, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, G, D), lambda b, j, tbl, cnt: (b, 0, 0)),
+            pl.BlockSpec((1, G), lambda b, j, tbl, cnt: (b, 0)),
+            pl.BlockSpec((1, G), lambda b, j, tbl, cnt: (b, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((G, D), f32),
+            pltpu.VMEM((G, 1), f32),
+            pltpu.VMEM((G, 1), f32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((BKV, G, D), f32),
+            jax.ShapeDtypeStruct((BKV, G), f32),
+            jax.ShapeDtypeStruct((BKV, G), f32),
+        ],
+        compiler_params=tpu_compiler_params("parallel", "arbitrary"),
+        interpret=interpret,
+    )(table, counts, q, k_pool, v_pool)
+
+
 def vwr_flash_decode_p(q: jax.Array, k: jax.Array, v: jax.Array,
                        lens: jax.Array, *, bkv: int, t_valid: int,
                        interpret: bool = False):

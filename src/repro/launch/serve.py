@@ -49,6 +49,20 @@ def build_parser() -> argparse.ArgumentParser:
                          "'model' (distributed FlashDecoding)")
     ap.add_argument("--kernel-impl", choices=["xla", "pallas", "auto"],
                     default="xla")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: page pool + per-slot block "
+                         "tables instead of the dense (B, max_len) "
+                         "cache")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="positions per page (with --paged)")
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="page-pool size; default sizes a full "
+                         "dense-equivalent batch")
+    ap.add_argument("--stream", type=int, default=0, metavar="N",
+                    help="request-stream mode: continuously batch N "
+                         "staggered requests of varying lengths "
+                         "through the scheduler (implies --paged; "
+                         "--batch is the slot count)")
     return ap
 
 
@@ -68,7 +82,60 @@ def engine_config_from_args(args, cfg=None) -> EngineConfig:
         mesh_shape=dm,
         decode_shard=args.shard,
         kernel_impl=args.kernel_impl,
+        paged=bool(args.paged or args.stream),
+        page_size=args.page_size,
+        n_pages=args.n_pages,
     )
+
+
+def _serve_stream(engine, args):
+    """Request-stream mode: N staggered requests of varying prompt/gen
+    lengths continuously batched through ``engine.Scheduler`` — short
+    requests retire and free pages mid-stream while long ones keep
+    decoding, and freed slots admit pending requests without touching
+    (or re-prefilling) the survivors."""
+    import time
+
+    from repro.engine import Request, Scheduler
+
+    cfg = engine.cfg
+    rng = np.random.default_rng(0)
+    n, P, G = args.stream, args.prompt_len, args.gen
+    sched = Scheduler(engine)
+    # varying lengths: prompts in [P/2, P], gens in [G/2, G]
+    reqs = [Request(rid=i,
+                    tokens=rng.integers(
+                        2, cfg.vocab,
+                        (int(rng.integers(max(P // 2, 1), P + 1)),)
+                    ).astype(np.int32),
+                    gen=int(rng.integers(max(G // 2, 1), G + 1)),
+                    temperature=args.temperature, seed=i)
+            for i in range(n)]
+    # staggered arrival: one new request every 2 decode steps
+    t0 = time.time()
+    arrivals = {i: 2 * i for i in range(n)}
+    step = 0
+    while len(sched.finished) < n:
+        for i, at in arrivals.items():
+            if at <= step:
+                sched.submit(reqs[i])
+        arrivals = {i: a for i, a in arrivals.items() if a > step}
+        sched.admit()
+        if sched.n_active:
+            sched.step()
+        step += 1
+    dt = time.time() - t0
+    toks = sum(len(v) for v in sched.finished.values())
+    print(f"[serve] {cfg.name} request-stream: {n} requests, "
+          f"{sched.stats['steps']} decode steps, {toks} tokens in "
+          f"{dt:.2f}s; peak pages {sched.stats['peak_pages']}/"
+          f"{engine.n_pages} (page_size {engine.page_size}); "
+          f"prefills {sched.stats['prefills']} (one per request — "
+          "survivors never re-prefill)")
+    for i in range(min(n, 3)):
+        print(f"    req {i} ({len(reqs[i].tokens)} prompt -> "
+              f"{reqs[i].gen} gen):", sched.finished[i][:12])
+    return sched.finished
 
 
 def main(argv=None):
@@ -82,6 +149,9 @@ def main(argv=None):
 
     engine = DecodeEngine(cfg, engine_config_from_args(args, cfg))
     cfg = engine.cfg
+
+    if args.stream:
+        return _serve_stream(engine, args)
 
     B, P, G = args.batch, args.prompt_len, args.gen
     rng = np.random.default_rng(0)

@@ -53,7 +53,9 @@ def build_train_step(cfg: ModelConfig, opt_cfg: adamw.OptConfig):
             (grads, loss_sum), metrics = jax.lax.scan(
                 mb_step, (zero_g, jnp.zeros(())), mbatch)
             grads = jax.tree.map(lambda g: g / nm, grads)
-            metrics = jax.tree.map(lambda m: m[-1], metrics)
+            # average the stacked (nm, ...) aux metrics like the loss —
+            # taking m[-1] would log only the final microbatch's view
+            metrics = jax.tree.map(lambda m: m.mean(axis=0), metrics)
             metrics["loss"] = loss_sum / nm
         else:
             (loss, metrics), grads = grad_fn(params, batch)
@@ -86,12 +88,25 @@ def build_decode(cfg: ModelConfig, mesh=None):
 
     from repro.dist import sharding as SH
 
+    def _paged_n_pages(cache):
+        """Pool page count, read off the family's paged KV leaf."""
+        if cfg.family == "audio":
+            return cache["self_k"].shape[1]
+        sub = cache["moe"] if cfg.family == "moe" else cache
+        leaf = sub["ckv"] if cfg.mla is not None else sub["k"]
+        return leaf.shape[1]
+
     def sharded_serve_step(params, batch):
         logits, cache = lm.decode_step(params, batch, cfg, mesh=mesh)
         B = logits.shape[0]
-        pspecs = SH.decode_batch_pspecs(
-            cfg, mesh, B, seq_shard=(cfg.decode_shard == "seq"))
-        shardings = SH.to_shardings(mesh, pspecs["cache"])
+        if "block_table" in batch:
+            pspecs = SH.paged_cache_pspecs(
+                cfg, mesh, B, seq_shard=(cfg.decode_shard == "seq"),
+                n_pages=_paged_n_pages(cache))
+        else:
+            pspecs = SH.decode_batch_pspecs(
+                cfg, mesh, B, seq_shard=(cfg.decode_shard == "seq"))["cache"]
+        shardings = SH.to_shardings(mesh, pspecs)
         cache = jax.tree.map(jax.lax.with_sharding_constraint,
                              cache, shardings)
         return logits, cache

@@ -327,6 +327,58 @@ def _decode_partial_xla(q, k, v, cur_len, pos0=0, *, tune=True):
     return flash_decode_partial(q, k, v, pos0 + jnp.arange(T), cur_len)
 
 
+# ---------------- paged decode (block-table-indexed page pool) ----------------
+
+def paged_flash_decode_partial(
+    q: jax.Array,            # (B, H, Dh) — one new token per slot
+    k_pool: jax.Array,       # (n_pages, page_size, KV, Dh) shared pool
+    v_pool: jax.Array,
+    block_table: jax.Array,  # (B, max_pages) int32 physical page ids
+    page_counts: jax.Array,  # (B, max_pages) int32 valid tokens per page
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """XLA gather reference for the paged decode contract.
+
+    Gathers each slot's pages from the pool (``pool[block_table]``) and
+    runs the same online-softmax partial as ``flash_decode_partial``,
+    masked per (slot, page) by ``page_counts`` (0 = page fully masked:
+    past the slot's length, unallocated, or owned by another shard).
+    Returns fp32 (o_tilde (B,H,Dh), m (B,H), l (B,H)).
+    """
+    B, H, Dh = q.shape
+    n_pages, ps, KV, _ = k_pool.shape
+    G = H // KV
+    J = block_table.shape[1]
+    tbl = jnp.clip(block_table, 0, n_pages - 1)
+    k = k_pool[tbl]                              # (B, J, ps, KV, Dh)
+    v = v_pool[tbl]
+    valid = (jnp.arange(ps)[None, None, :]
+             < page_counts[..., None]).reshape(B, J * ps)
+    k = k.reshape(B, J * ps, KV, Dh)
+    v = v.reshape(B, J * ps, KV, Dh)
+    qf = q.astype(jnp.float32).reshape(B, KV, G, Dh) / (Dh ** 0.5)
+    s = jnp.einsum("bhgd,bthd->bhgt", qf, k.astype(jnp.float32))
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where((m > NEG_INF / 2)[..., None], p, 0.0)
+    l = p.sum(axis=-1)
+    o_t = jnp.einsum("bhgt,bthd->bhgd", p, v.astype(jnp.float32))
+    return (o_t.reshape(B, H, Dh), m.reshape(B, H), l.reshape(B, H))
+
+
+@D.register("decode_partial_paged", "xla")
+def _decode_partial_paged_xla(q, k_pool, v_pool, table, counts, *,
+                              tune=True):
+    return paged_flash_decode_partial(q, k_pool, v_pool, table, counts)
+
+
+@D.register("decode_partial_paged", "pallas")
+def _decode_partial_paged_pallas(q, k_pool, v_pool, table, counts, *,
+                                 tune=True):
+    from repro.kernels import ops
+    return ops.vwr_paged_flash_decode(q, k_pool, v_pool, table, counts)
+
+
 @D.register("decode_partial", "pallas")
 def _decode_partial_pallas(q, k, v, cur_len, pos0=0, *, tune=True):
     from repro.kernels import autotune, ops

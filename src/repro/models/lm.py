@@ -713,6 +713,214 @@ def _decode_cross(cfg, lp, h, xk, xv, mesh=None):
     return jnp.einsum("bhk,hkd->bd", o, lp["wo"])
 
 
+# ---------------- paged decode (block-table + per-slot lengths) -------
+
+def _rope_slots(x, pos, theta):
+    """x: (B,H,Dh) one token per slot at per-slot positions pos (B,)."""
+    return L.apply_rope(x[:, None], pos[:, None], theta)[:, 0]
+
+
+def _paged_attend(cfg, q, k_pool, v_pool, table, n_valid, mesh=None):
+    """Paged decode attention: GQA, absorbed MLA and (identity-paged)
+    cross-attention all route through ``dist.decode.paged_decode_attend``
+    — the pool-sharded FlashDecoding combine when
+    cfg.decode_shard == 'seq', the shard-local ``decode_partial_paged``
+    registry op otherwise.  ``n_valid`` (B,) counts valid positions per
+    slot (0 = inactive slot)."""
+    from repro.dist import decode as DD
+    return DD.paged_decode_attend(q, k_pool, v_pool, table, n_valid,
+                                  backend=cfg.kernel_impl, mesh=mesh,
+                                  seq_shard=(cfg.decode_shard == "seq"))
+
+
+def _page_write_ids(table, lens, page_size, n_pages):
+    """Physical (page, offset) each slot's new token writes to; inactive
+    slots (lens == 0) get page id ``n_pages`` so mode='drop' scatters
+    discard the write instead of corrupting page table[b, 0]."""
+    active = lens > 0
+    pages = jnp.take_along_axis(table, (lens // page_size)[:, None],
+                                axis=1)[:, 0]
+    pages = jnp.where(active, pages, n_pages)
+    return pages, lens % page_size, lens + active.astype(lens.dtype)
+
+
+def _decode_gqa_paged(cfg, lp, h, kp, vp, table, lens, mesh=None):
+    """h: (B,D) normed; kp/vp: (n_pages, ps, KV, Dh) pools; lens: (B,)
+    per-slot valid positions (the new token writes at position lens).
+    Returns (delta, kp, vp)."""
+    n_pages, ps = kp.shape[0], kp.shape[1]
+    q = jnp.einsum("bd,dhk->bhk", h, lp["wq"])
+    k = jnp.einsum("bd,dhk->bhk", h, lp["wk"])
+    v = jnp.einsum("bd,dhk->bhk", h, lp["wv"])
+    if "bq" in lp:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    q = _rope_slots(q, lens, cfg.rope_theta)
+    k = _rope_slots(k, lens, cfg.rope_theta)
+    pages, offs, n_valid = _page_write_ids(table, lens, ps, n_pages)
+    kp = kp.at[pages, offs].set(k.astype(kp.dtype), mode="drop")
+    vp = vp.at[pages, offs].set(v.astype(vp.dtype), mode="drop")
+    o = _paged_attend(cfg, q, kp, vp, table, n_valid, mesh)
+    delta = jnp.einsum("bhk,hkd->bd", o, lp["wo"])
+    return delta, kp, vp
+
+
+def _decode_mla_paged(cfg, lp, h, ckv_pool, krope_pool, table, lens,
+                      mesh=None):
+    """MLA absorbed decode against paged latent pools: ckv_pool
+    (n_pages, ps, r); krope_pool (n_pages, ps, rope).
+    ``MLA.mla_absorbed_mqa`` concatenates the two pools into one
+    KV=1 pool view, so the same ``decode_partial_paged`` op serves
+    MLA."""
+    n_pages, ps = ckv_pool.shape[0], ckv_pool.shape[1]
+    h3 = h[:, None, :]
+    pos = lens[:, None]
+    q_nope, q_rope = MLA.mla_queries(lp, h3, pos, cfg)
+    c_kv, k_rope = MLA.mla_latent(lp, h3, pos, cfg)
+    pages, offs, n_valid = _page_write_ids(table, lens, ps, n_pages)
+    ckv_pool = ckv_pool.at[pages, offs].set(
+        c_kv[:, 0].astype(ckv_pool.dtype), mode="drop")
+    krope_pool = krope_pool.at[pages, offs].set(
+        k_rope[:, 0].astype(krope_pool.dtype), mode="drop")
+    q_cat, k_cat, v_cat, r = MLA.mla_absorbed_mqa(
+        lp, q_nope[:, 0], q_rope[:, 0], ckv_pool, krope_pool, cfg)
+    o_cat = _paged_attend(cfg, q_cat, k_cat, v_cat, table, n_valid, mesh)
+    o = o_cat[..., :r]
+    delta = MLA.mla_decode_finish(lp, o.astype(jnp.float32), cfg)
+    return delta.astype(h.dtype), ckv_pool, krope_pool
+
+
+def _decode_cross_paged(cfg, lp, h, xk, xv, enc_lens, page_size,
+                        mesh=None):
+    """Cross-attention against the slot-dense encoder cache, VIEWED as
+    an identity-paged pool (slot b's pages are rows [b*Jx, (b+1)*Jx) of
+    the reshaped cache — a zero-copy reshape, no gather), so per-slot
+    encoder lengths ride the same paged masking as self-attention.
+    Cross KV is static per slot and attended shard-locally."""
+    from repro.dist import decode as DD
+    B, Tx = xk.shape[0], xk.shape[1]
+    Jx = Tx // page_size
+    kp = xk.reshape(B * Jx, page_size, *xk.shape[2:])
+    vp = xv.reshape(B * Jx, page_size, *xv.shape[2:])
+    tbl = (jnp.arange(B, dtype=jnp.int32)[:, None] * Jx
+           + jnp.arange(Jx, dtype=jnp.int32)[None, :])
+    q = jnp.einsum("bd,dhk->bhk", h, lp["wq"])
+    o = DD.paged_decode_attend(q, kp, vp, tbl, enc_lens,
+                               backend=cfg.kernel_impl, mesh=mesh,
+                               seq_shard=False)
+    return jnp.einsum("bhk,hkd->bd", o, lp["wo"])
+
+
+def _dense_paged_body(cfg, lens, table, x, lp, cache_slice, mesh=None):
+    h = _norm(cfg, lp["attn_norm"], x)
+    if cfg.mla is not None:
+        d, ckv, ckr = _decode_mla_paged(cfg, lp["attn"], h,
+                                        cache_slice["ckv"],
+                                        cache_slice["krope"], table,
+                                        lens, mesh)
+        new = {"ckv": ckv, "krope": ckr}
+    else:
+        d, kp, vp = _decode_gqa_paged(cfg, lp["attn"], h,
+                                      cache_slice["k"], cache_slice["v"],
+                                      table, lens, mesh)
+        new = {"k": kp, "v": vp}
+    x = x + d
+    x = x + L.mlp(lp["mlp"], _norm(cfg, lp["mlp_norm"], x), cfg.act,
+                  backend=cfg)
+    return x, new
+
+
+def _moe_paged_body(cfg, lens, table, x, lp, cache_slice, mesh=None):
+    h = _norm(cfg, lp["attn_norm"], x)
+    if cfg.mla is not None:
+        d, ckv, ckr = _decode_mla_paged(cfg, lp["attn"], h,
+                                        cache_slice["ckv"],
+                                        cache_slice["krope"], table,
+                                        lens, mesh)
+        new = {"ckv": ckv, "krope": ckr}
+    else:
+        d, kp, vp = _decode_gqa_paged(cfg, lp["attn"], h,
+                                      cache_slice["k"], cache_slice["v"],
+                                      table, lens, mesh)
+        new = {"k": kp, "v": vp}
+    x = x + d
+    y, _aux = MOE.moe_ffn(lp["moe"], _norm(cfg, lp["mlp_norm"], x)[None],
+                          cfg, mesh=mesh)
+    return x + y[0], new
+
+
+def _audio_paged_body(cfg, lens, table, enc_lens, x, lp, cs, mesh=None):
+    h = _norm(cfg, lp["self_norm"], x)
+    d, kp, vp = _decode_gqa_paged(cfg, lp["self"], h, cs["self_k"],
+                                  cs["self_v"], table, lens, mesh)
+    x = x + d
+    h = _norm(cfg, lp["cross_norm"], x)
+    x = x + _decode_cross_paged(cfg, lp["cross"], h, cs["cross_k"],
+                                cs["cross_v"], enc_lens,
+                                cs["self_k"].shape[1], mesh)
+    x = x + L.mlp(lp["mlp"], _norm(cfg, lp["mlp_norm"], x), cfg.act,
+                  backend=cfg)
+    return x, {"self_k": kp, "self_v": vp}
+
+
+def paged_decode_step(params, batch, cfg, mesh=None):
+    """One-token serve step over a paged KV cache.
+
+    batch: token (B,), cur_len (B,) per-slot valid positions,
+    block_table (B, max_pages) int32, cache (page pools from
+    ``engine.paged_cache``) [+ enc_lens (B,) for audio].  Slots with
+    cur_len == 0 are inactive: their write is dropped, their attention
+    masks to zero, and their logits are garbage the caller discards.
+    Returns (logits (B, vocab) fp32, new_cache)."""
+    fam = cfg.family
+    if fam not in ("dense", "vlm", "moe", "audio"):
+        raise ValueError(
+            f"paged decode supports KV-cache families "
+            f"('dense', 'vlm', 'moe', 'audio'); family {fam!r} carries "
+            "O(1) recurrent state per slot — use the dense decode path")
+    tok = batch["token"]
+    lens = jnp.asarray(batch["cur_len"], jnp.int32)
+    table = jnp.asarray(batch["block_table"], jnp.int32)
+    cache = batch["cache"]
+    x = L.embed(params["embed"], tok).astype(jnp.dtype(cfg.dtype))
+
+    if fam in ("dense", "vlm"):
+        body = functools.partial(_dense_paged_body, cfg, lens, table,
+                                 mesh=mesh)
+        x, new_cache = _scan_stack(cfg, body, x, params["layers"],
+                                   extra_xs=cache)
+
+    elif fam == "moe":
+        m = cfg.moe
+        new_cache = dict(cache)
+        if m.first_k_dense:
+            body = functools.partial(_dense_paged_body, cfg, lens, table,
+                                     mesh=mesh)
+            x, nd = _scan_stack(cfg, body, x, params["dense_layers"],
+                                extra_xs=cache["dense"])
+            new_cache["dense"] = nd
+        body = functools.partial(_moe_paged_body, cfg, lens, table,
+                                 mesh=mesh)
+        x, nm = _scan_stack(cfg, body, x, params["layers"],
+                            extra_xs=cache["moe"])
+        new_cache["moe"] = nm
+
+    else:                                   # audio
+        enc_lens = jnp.asarray(batch["enc_lens"], jnp.int32)
+        body = functools.partial(_audio_paged_body, cfg, lens, table,
+                                 enc_lens, mesh=mesh)
+        xs_cache = {"self_k": cache["self_k"], "self_v": cache["self_v"],
+                    "cross_k": cache["cross_k"],
+                    "cross_v": cache["cross_v"]}
+        x, upd = _scan_stack(cfg, body, x, params["layers"],
+                             extra_xs=xs_cache)
+        new_cache = dict(cache)
+        new_cache.update(upd)
+
+    h = _norm(cfg, params["final_norm"], x)
+    logits = _logits(params, h[:, None, :], cfg)[:, 0].astype(jnp.float32)
+    return logits, new_cache
+
+
 def _dense_decode_body(cfg, cur_len, x, lp, cache_slice, mesh=None):
     if cfg.mla is not None:
         h = _norm(cfg, lp["attn_norm"], x)
@@ -756,7 +964,14 @@ def decode_step(params, batch, cfg, mesh=None):
     (cfg.decode_shard == 'seq'); without it that path falls back to the
     deprecated ambient-mesh lookup.  ``engine.DecodeEngine`` (or
     ``steps.build_decode(cfg, mesh)``) threads it for you.
+
+    With a ``block_table`` operand in the batch (and per-slot (B,)
+    ``cur_len``), the step runs over a paged KV cache instead —
+    ``paged_decode_step`` — which is how continuous batching serves
+    slots at different lengths from one shared page pool.
     """
+    if "block_table" in batch:
+        return paged_decode_step(params, batch, cfg, mesh=mesh)
     fam = cfg.family
     tok = batch["token"]
     cur = batch["cur_len"]

@@ -271,6 +271,81 @@ def test_cached_backend_replays_measured_winner(tmp_path, monkeypatch):
     autotune.reset()
 
 
+def test_cached_backend_replay_survives_registry_growth(tmp_path,
+                                                        monkeypatch):
+    """Regression: persisted dispatch winners used to be positional
+    indices into the CURRENT candidate list, so registering one more
+    backend (e.g. this PR's paged variant) silently shifted every
+    replay.  Winners are now stored by NAME; legacy integer entries
+    are tolerated while still in range."""
+    import json
+    from repro.kernels import autotune
+    from repro.kernels import ops as kops
+
+    path = str(tmp_path / "tune.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+    autotune.reset()
+    q = jnp.zeros((2, 4, 16))
+    ck = jnp.zeros((2, 64, 2, 16))
+    args = (q, ck, ck, jnp.int32(64))
+    shape, dtype = D._arg_signature(args, {})
+    tag = kops._backend_tag(kops._auto_interpret(None))
+    key = autotune.cache_key("dispatch:decode_partial", shape, dtype, tag)
+    with open(path, "w") as f:
+        json.dump({key: {"blocks": ["xla"], "us": 1.0}}, f)
+    assert D.cached_backend("decode_partial", "auto", args) == "xla"
+
+    # registering an extra backend reorders/extends the candidate list;
+    # a name entry must replay unchanged
+    try:
+        D.register("decode_partial", "aaa_stub")(lambda *a, **k: None)
+        autotune.reset()
+        assert D.cached_backend("decode_partial", "auto", args) == "xla"
+        # legacy int entry: decoded positionally while in range (the
+        # old format), against the candidate list including the stub
+        with open(path, "w") as f:
+            json.dump({key: {"blocks": [1], "us": 1.0}}, f)
+        autotune.reset()
+        cands = ["pallas", "xla", "aaa_stub"]
+        assert D.cached_backend("decode_partial", "auto", args) == \
+            cands[1]
+        # out-of-range legacy index: prior order, not a crash
+        with open(path, "w") as f:
+            json.dump({key: {"blocks": [7], "us": 1.0}}, f)
+        autotune.reset()
+        assert D.cached_backend("decode_partial", "auto", args) == \
+            "pallas"
+    finally:
+        D._REGISTRY["decode_partial"].pop("aaa_stub", None)
+        autotune.reset()
+
+
+def test_resolve_auto_migrates_legacy_index_entries(tmp_path,
+                                                    monkeypatch):
+    """The measuring resolver rewrites a legacy positional entry to the
+    backend name in place, so old cache files heal on first use."""
+    import json
+    from repro.kernels import autotune
+    from repro.kernels import ops as kops
+
+    path = str(tmp_path / "tune.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+    autotune.reset()
+    x = jax.random.normal(KEY, (2, 8, 64))
+    p = {"wi": jax.random.normal(KEY, (64, 128)),
+         "wo": jax.random.normal(KEY, (128, 64))}
+    args = (p, x, "relu")
+    shape, dtype = D._arg_signature(args, {})
+    tag = kops._backend_tag(kops._auto_interpret(None))
+    key = autotune.cache_key("dispatch:mlp", shape, dtype, tag)
+    with open(path, "w") as f:
+        json.dump({key: {"blocks": [1], "us": 1.0}}, f)
+    assert D._resolve_auto("mlp", D._REGISTRY["mlp"], args, {}) == "xla"
+    table = json.load(open(path))
+    assert table[key]["blocks"] == ["xla"]
+    autotune.reset()
+
+
 def test_train_loss_pins_auto_to_xla():
     """kernel_impl='auto' must not break the backward pass: train_loss
     runs it on the xla backend (pallas stays rejected)."""

@@ -58,6 +58,35 @@ def test_microbatch_accumulation_close_to_full_batch():
     assert max(jax.tree.leaves(d)) < 5e-5, max(jax.tree.leaves(d))
 
 
+def test_microbatch_metrics_average_all_microbatches():
+    """Regression: logged metrics under nm>1 must equal the nm=1
+    metrics on the same batch (the pre-fix code took metrics[-1], so
+    every aux metric reflected only the FINAL microbatch)."""
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=64,
+                                  global_batch=8))
+    batch = _np_batch(data.batch(0))
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    opt_cfg = adamw.OptConfig(lr=1e-3, warmup_steps=0, total_steps=10)
+
+    _, _, m1 = jax.jit(build_train_step(cfg, opt_cfg))(
+        params, adamw.init(opt_cfg, params), batch)
+    cfg4 = cfg.replace(n_microbatches=4)
+    _, _, m4 = jax.jit(build_train_step(cfg4, opt_cfg))(
+        params, adamw.init(opt_cfg, params), batch)
+    assert set(m1) == set(m4)
+    for k in ("ce", "z_loss", "loss"):
+        np.testing.assert_allclose(float(m4[k]), float(m1[k]),
+                                   rtol=1e-5, atol=1e-6, err_msg=k)
+    # and the average is NOT just the last microbatch's value: the
+    # last microbatch alone gives a measurably different ce here
+    (_, mb_metrics), _ = jax.value_and_grad(
+        lambda p: lm.train_loss(
+            p, jax.tree.map(lambda x: x[6:], batch), cfg), has_aux=True
+    )(params)
+    assert abs(float(mb_metrics["ce"]) - float(m1["ce"])) > 1e-4
+
+
 def test_checkpoint_resume_exact(tmp_path):
     """Stop at step 10, resume, reach step 20 with bit-identical params
     vs an uninterrupted run (stateless data pipeline + full state
