@@ -19,6 +19,15 @@ Plus one ``engine_decode`` row: a full one-token ``DecodeEngine`` step
 the production serve path) with its per-token collective bytes from
 the engine's compiled decode step.
 
+The ``mla_decode`` / ``mla_decode_paged`` rows pin the split-operand
+MLA win in the staged_bytes column: ``mla_split`` stages r+rope
+features/position (latent read once for scores AND values),
+``mla_concat`` 2*(r+rope) (k_cat + zero-padded v_cat copies — on the
+paged path, copies of the whole pool).  ``paged_decode_bucketed``
+pins the block-table width bucketing: the table sliced to the
+power-of-two bucket of the live page count stages the live-table
+row's bytes instead of the fixed max_pages budget.
+
 On a host-device CPU mesh the sharded latency is pure overhead
 (interpret-mode kernels, emulated collectives); the latency columns
 track the *trajectory*, the collective-bytes column is the modeled
@@ -133,6 +142,164 @@ for B, T in ((4, 2048), (4, 8192)):
         "collective_bytes": None,
     })
 
+# ---- MLA decode: split-operand vs concatenated cache -----------------
+# The concat view (mla_absorbed_mqa) rebuilds k_cat + zero-padded v_cat
+# copies of the latent+rope cache every step, so it STAGES
+# 2*(r+rope) features/position; the split-operand decode_partial_mla
+# path reads the latent cache once (scores AND values) plus the rope
+# cache — r+rope features/position, a 2x staged-cache-bytes win the
+# staged_bytes columns pin (dense and paged).
+from repro.dist.decode import (local_mla_decode_attend,
+                               local_mla_paged_decode_attend,
+                               local_paged_decode_attend)
+from repro.models.mla import mla_concat_view
+
+R_LAT, ROPE = 256, 32                   # deepseek-shaped ratio r:rope
+scale_mla = 1.0 / ((R_LAT + ROPE) ** 0.5)
+for B, T in ((4, 2048), (4, 8192)):
+    ks = jax.random.split(key, 4)
+    q_abs = jax.random.normal(ks[0], (B, H, R_LAT))
+    q_rope = jax.random.normal(ks[1], (B, H, ROPE))
+    ckv = jax.random.normal(ks[2], (B, T, R_LAT))
+    krope = jax.random.normal(ks[3], (B, T, ROPE))
+    cur = jnp.int32(T)
+
+    split = jax.jit(lambda qa, qr, ck, kr, c: local_mla_decode_attend(
+        qa, qr, ck, kr, c, scale=scale_mla))
+
+    def concat_attend(qa, qr, ck, kr, c):
+        q_cat, k_cat, v_cat, r = mla_concat_view(qa, qr, ck, kr,
+                                                 scale_mla)
+        return decode_attend_local(q_cat, k_cat, v_cat, jnp.arange(T),
+                                   c)[..., :r]
+
+    concat = jax.jit(concat_attend)
+    t_split = timed(split, q_abs, q_rope, ckv, krope, cur)
+    t_concat = timed(concat, q_abs, q_rope, ckv, krope, cur)
+    split_bytes = B * T * (R_LAT + ROPE) * 4
+    concat_bytes = 2 * B * T * (R_LAT + ROPE) * 4
+    shape = f"{B}x{T}x{H}x{R_LAT}+{ROPE}"
+    flops = B * H * 2 * T * (R_LAT + ROPE + R_LAT)
+    rows.append({
+        "op": "mla_decode", "shape": shape, "us": round(t_split, 1),
+        "us_ref": round(t_concat, 1), "flops": flops,
+        "staged_bytes": split_bytes, "arith_intensity": None,
+        "note": (f"mla_split: latent+rope as separate operands, "
+                 f"{split_bytes} staged cache B/token "
+                 f"({concat_bytes / split_bytes:.1f}x fewer than "
+                 "mla_concat; us_ref = concat)"),
+        "collective_bytes": None,
+    })
+    rows.append({
+        "op": "mla_decode", "shape": shape, "us": round(t_concat, 1),
+        "us_ref": None, "flops": flops,
+        "staged_bytes": concat_bytes, "arith_intensity": None,
+        "note": (f"mla_concat: k_cat + zero-padded v_cat cache copies "
+                 f"rebuilt per step, {concat_bytes} staged cache "
+                 "B/token"),
+        "collective_bytes": None,
+    })
+
+# paged MLA: the concat view copies the whole POOL per step
+for B, T in ((4, 2048),):
+    T_live = T // 2
+    J = T_live // PS_PAGE
+    n_pages = B * J
+    ks = jax.random.split(key, 4)
+    q_abs = jax.random.normal(ks[0], (B, H, R_LAT))
+    q_rope = jax.random.normal(ks[1], (B, H, ROPE))
+    ckv_pool = jax.random.normal(ks[2], (n_pages, PS_PAGE, R_LAT))
+    krope_pool = jax.random.normal(ks[3], (n_pages, PS_PAGE, ROPE))
+    table = (jnp.arange(B, dtype=jnp.int32)[:, None] * J
+             + jnp.arange(J, dtype=jnp.int32)[None, :])
+    lens = jnp.full((B,), T_live, jnp.int32)
+
+    psplit = jax.jit(lambda qa, qr, ck, kr, tb, ln:
+                     local_mla_paged_decode_attend(
+                         qa, qr, ck, kr, tb, ln, scale=scale_mla))
+
+    def concat_paged_attend(qa, qr, ck, kr, tb, ln):
+        # mla_concat_view materializes whole-POOL k_cat/v_cat copies —
+        # exactly the cost the split row avoids
+        q_cat, k_cat, v_cat, r = mla_concat_view(qa, qr, ck, kr,
+                                                 scale_mla)
+        return local_paged_decode_attend(q_cat, k_cat, v_cat, tb,
+                                         ln)[..., :r]
+
+    pconcat = jax.jit(concat_paged_attend)
+    t_psplit = timed(psplit, q_abs, q_rope, ckv_pool, krope_pool,
+                     table, lens)
+    t_pconcat = timed(pconcat, q_abs, q_rope, ckv_pool, krope_pool,
+                      table, lens)
+    split_bytes = B * T_live * (R_LAT + ROPE) * 4
+    # concat copies the whole pool (k_cat + v_cat) before attending
+    concat_bytes = 2 * n_pages * PS_PAGE * (R_LAT + ROPE) * 4 \
+        + split_bytes
+    shape = f"{B}x{T}x{H}x{R_LAT}+{ROPE}"
+    rows.append({
+        "op": "mla_decode_paged", "shape": shape,
+        "us": round(t_psplit, 1), "us_ref": round(t_pconcat, 1),
+        "flops": B * H * 2 * T_live * (R_LAT + ROPE + R_LAT),
+        "staged_bytes": split_bytes, "arith_intensity": None,
+        "note": (f"mla_split paged: pools stay separate, {split_bytes} "
+                 f"staged cache B/token "
+                 f"({concat_bytes / split_bytes:.1f}x fewer than "
+                 "mla_concat's pool-wide copies; us_ref = concat)"),
+        "collective_bytes": None,
+    })
+    rows.append({
+        "op": "mla_decode_paged", "shape": shape,
+        "us": round(t_pconcat, 1), "us_ref": None,
+        "flops": B * H * 2 * T_live * (R_LAT + ROPE + R_LAT),
+        "staged_bytes": concat_bytes, "arith_intensity": None,
+        "note": (f"mla_concat paged: whole-pool k_cat/v_cat copies per "
+                 f"step, {concat_bytes} staged cache B/token"),
+        "collective_bytes": None,
+    })
+
+# ---- bucketed block tables: stage only live table columns ------------
+# Fixed-width tables hold max_pages columns per slot (the jit-stable
+# engine budget) even when every live slot owns a handful — the
+# dead-column analogue of the dense cache's dead bytes.  Bucketing
+# slices the table to the power-of-two width covering the longest
+# slot (engine.paged_cache.bucket_table_width), converging on the
+# live-table paged_decode row above.
+from repro.engine.paged_cache import bucket_table_width
+
+for B, T in ((4, 2048),):
+    T_live = T // 2
+    J_live = T_live // PS_PAGE                  # live pages per slot
+    J_max = T // PS_PAGE                        # engine-wide budget
+    n_pages = B * J_max
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, Dh))
+    kp = jax.random.normal(ks[1], (n_pages, PS_PAGE, KV, Dh))
+    vp = jax.random.normal(ks[2], (n_pages, PS_PAGE, KV, Dh))
+    table = jnp.zeros((B, J_max), jnp.int32).at[:, :J_live].set(
+        jnp.arange(B, dtype=jnp.int32)[:, None] * J_live
+        + jnp.arange(J_live, dtype=jnp.int32)[None, :])
+    lens = jnp.full((B,), T_live, jnp.int32)
+    W = bucket_table_width(J_live, J_max)
+
+    paged = jax.jit(lambda q, kp, vp, tb, ln: local_paged_decode_attend(
+        q, kp, vp, tb, ln))
+    t_fixed = timed(paged, q, kp, vp, table, lens)
+    t_bucket = timed(paged, q, kp, vp, table[:, :W], lens)
+    live_bytes = 2 * B * T_live * KV * Dh * 4
+    bucket_bytes = 2 * B * W * PS_PAGE * KV * Dh * 4
+    fixed_bytes = 2 * B * J_max * PS_PAGE * KV * Dh * 4
+    rows.append({
+        "op": "paged_decode_bucketed", "shape": f"{B}x{T}x{H}x{KV}x{Dh}",
+        "us": round(t_bucket, 1), "us_ref": round(t_fixed, 1),
+        "flops": B * H * 2 * T_live * Dh * 2,
+        "staged_bytes": bucket_bytes, "arith_intensity": None,
+        "note": (f"table bucketed {J_max}->{W} cols at 50% occupancy: "
+                 f"{bucket_bytes} staged B/token vs fixed-width "
+                 f"{fixed_bytes} (live-table floor {live_bytes}; "
+                 "us_ref = fixed-width)"),
+        "collective_bytes": None,
+    })
+
 # ---- full engine step: the production serve path ---------------------
 from repro.configs import get_config, reduced
 from repro.engine import DecodeEngine, EngineConfig
@@ -218,7 +385,10 @@ def dist_decode_bench(json_path="BENCH_kernels.json"):
         existing = [r for r in existing
                     if r.get("op") not in ("dist_decode", "engine_decode",
                                            "paged_decode",
-                                           "engine_decode_paged")]
+                                           "engine_decode_paged",
+                                           "mla_decode",
+                                           "mla_decode_paged",
+                                           "paged_decode_bucketed")]
         existing.extend(rows)
         with open(json_path, "w") as f:
             json.dump(existing, f, indent=1)

@@ -7,6 +7,12 @@ prefill/decode steps; generation is three calls.
     PYTHONPATH=src python examples/serve_batch.py            # batch decode
     PYTHONPATH=src python examples/serve_batch.py --stream   # continuous
                                                              # batching
+    # any paged-family text arch (dense/vlm/moe — recurrent ssm/hybrid
+    # state doesn't page, and the audio demo would need frontend_emb),
+    # e.g. the deepseek-style MLA config (paged split-operand MLA
+    # decode end to end):
+    PYTHONPATH=src python examples/serve_batch.py --stream \
+        --model deepseek-v3-671b
 """
 import sys
 
@@ -18,13 +24,24 @@ from repro.configs import get_config, reduced
 from repro.engine import DecodeEngine, EngineConfig, Request, Scheduler
 
 
+def _model_arg(default="qwen1.5-0.5b"):
+    if "--model" in sys.argv:
+        i = sys.argv.index("--model") + 1
+        if i >= len(sys.argv) or sys.argv[i].startswith("--"):
+            sys.exit("usage: serve_batch.py [--stream] [--model ARCH]")
+        return sys.argv[i]
+    return default
+
+
 def stream_demo():
     """Continuous batching on the paged engine: staggered request
     arrival and retirement over 2 slots and a shared page pool —
     request 2 is only admitted once a short request retires and frees
     its slot + pages, and the surviving request keeps decoding without
-    being re-prefilled."""
-    cfg = reduced(get_config("qwen1.5-0.5b"))
+    being re-prefilled.  Decode steps run with bucketed block tables
+    (the default), so short-table phases of the stream stage fewer
+    pages."""
+    cfg = reduced(get_config(_model_arg()))
     engine = DecodeEngine(cfg, EngineConfig(
         batch=2,                            # slots, not requests
         max_len=48, paged=True, page_size=8,
@@ -51,9 +68,11 @@ def stream_demo():
     # one prefill per request: survivors were never re-prefilled when
     # slots turned over around them
     assert sched.stats["prefills"] == 3
+    widths = dict(sorted(sched.stats["table_widths"].items()))
     print(f"[stream] {cfg.name}: 3 staggered requests over 2 slots, "
           f"{sched.stats['steps']} steps, peak pages "
-          f"{sched.stats['peak_pages']}/{engine.n_pages}")
+          f"{sched.stats['peak_pages']}/{engine.n_pages}, table-width "
+          f"buckets {widths} (max_pages {engine.max_pages})")
     for r in reqs:
         print(f"    {r.rid}: {len(r.tokens)} prompt -> {out[r.rid]}")
     print("stream example OK")
@@ -65,7 +84,7 @@ if "--stream" in sys.argv:
 
 B, P, G = 4, 32, 16
 
-cfg = reduced(get_config("qwen1.5-0.5b"))
+cfg = reduced(get_config(_model_arg()))
 engine = DecodeEngine(cfg, EngineConfig(
     batch=B, max_len=P + G,
     mesh_shape=(jax.device_count(), 1),   # (data, model)

@@ -1,0 +1,119 @@
+"""Diff two BENCH_kernels.json artifacts and flag perf regressions.
+
+    PYTHONPATH=src python scripts/bench_diff.py OLD.json NEW.json \
+        [--threshold 0.10] [--fail]
+
+Rows are matched by (op, shape, note, k) — the note disambiguates
+variants sharing an op/shape cell (e.g. the ``mla_split`` vs
+``mla_concat`` rows), with embedded measurements digit-stripped so a
+re-run's jitter doesn't orphan the match, and ``k`` numbers rows whose
+stripped key still collides (e.g. block-size sweeps whose notes differ
+only in numbers), pairing them by emission order.  A matched row whose
+``us`` grew by more than ``--threshold`` (default 10%) is flagged as a
+regression; ``--fail`` turns flags into a nonzero exit for CI.
+Unmatched rows (ops added/removed between the two artifacts) are
+listed but never flagged.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from typing import Dict, List, Tuple
+
+
+def _row_key(row: dict) -> Tuple[str, str, str]:
+    """(op, shape, digit-stripped note): stable across re-runs whose
+    notes embed measured values (collective bytes, ratios)."""
+    note = re.sub(r"[\d.]+", "#", str(row.get("note") or ""))
+    return (str(row.get("op")), str(row.get("shape")), note)
+
+
+def _index(rows: List[dict]) -> Dict[Tuple[str, str, str, int], dict]:
+    """Key every row; rows whose stripped key collides (block-size
+    sweeps: notes differ only in numbers) get an occurrence index, so
+    they pair by emission order instead of all-but-the-first being
+    silently dropped."""
+    out: Dict[Tuple[str, str, str, int], dict] = {}
+    seen: Dict[Tuple[str, str, str], int] = {}
+    for row in rows:
+        base = _row_key(row)
+        k = seen.get(base, 0)
+        seen[base] = k + 1
+        out[(*base, k)] = row
+    return out
+
+
+def diff(old_rows: List[dict], new_rows: List[dict],
+         threshold: float = 0.10) -> dict:
+    """Returns {'regressions': [...], 'improvements': [...],
+    'only_old': [...], 'only_new': [...]} — each entry carrying the
+    matched key and the old/new ``us``."""
+    old = _index(old_rows)
+    new = _index(new_rows)
+    regressions, improvements = [], []
+    for key, n in new.items():
+        o = old.get(key)
+        if o is None:
+            continue
+        us_old, us_new = o.get("us"), n.get("us")
+        if not us_old or not us_new:          # None or 0: untimed row
+            continue
+        ratio = us_new / us_old
+        entry = {"op": key[0], "shape": key[1], "note": n.get("note"),
+                 "us_old": us_old, "us_new": us_new,
+                 "ratio": round(ratio, 3)}
+        if ratio > 1.0 + threshold:
+            regressions.append(entry)
+        elif ratio < 1.0 - threshold:
+            improvements.append(entry)
+    regressions.sort(key=lambda e: -e["ratio"])
+    improvements.sort(key=lambda e: e["ratio"])
+    return {
+        "regressions": regressions,
+        "improvements": improvements,
+        "only_old": sorted(k[:2] for k in old.keys() - new.keys()),
+        "only_new": sorted(k[:2] for k in new.keys() - old.keys()),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Diff two BENCH_kernels.json files; flag >threshold "
+                    "latency regressions on matching op/shape/note rows.")
+    ap.add_argument("old", help="baseline BENCH_kernels.json")
+    ap.add_argument("new", help="candidate BENCH_kernels.json")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="relative us growth that counts as a "
+                         "regression (default 0.10 = 10%%)")
+    ap.add_argument("--fail", action="store_true",
+                    help="exit 1 when regressions are flagged (CI)")
+    args = ap.parse_args(argv)
+
+    with open(args.old) as f:
+        old_rows = json.load(f)
+    with open(args.new) as f:
+        new_rows = json.load(f)
+    result = diff(old_rows, new_rows, args.threshold)
+
+    for entry in result["regressions"]:
+        print(f"REGRESSION {entry['op']},{entry['shape']}: "
+              f"{entry['us_old']} -> {entry['us_new']} us "
+              f"({entry['ratio']}x)  [{entry['note']}]")
+    for entry in result["improvements"]:
+        print(f"improved   {entry['op']},{entry['shape']}: "
+              f"{entry['us_old']} -> {entry['us_new']} us "
+              f"({entry['ratio']}x)")
+    for op, shape in result["only_old"]:
+        print(f"removed    {op},{shape}")
+    for op, shape in result["only_new"]:
+        print(f"added      {op},{shape}")
+    n_reg = len(result["regressions"])
+    print(f"# {n_reg} regression(s), {len(result['improvements'])} "
+          f"improvement(s) at threshold {args.threshold:.0%}")
+    return 1 if (n_reg and args.fail) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,12 +16,16 @@ cross the wire:
 from the single-shard side.)  Collective bytes per token are
 O(B * H * (Dh + 2)) — independent of context length.
 
-Per shard the partial comes from the ``decode_partial`` op of the
-kernel-dispatch registry (``repro.kernels.dispatch``): backend 'xla'
-is the einsum reference, 'pallas' the VWR flash-decode kernel staging
-the local slab in wide (bkv x Dh) VMEM blocks, 'auto' the measured
-winner.  GQA, absorbed MLA (via ``mla.mla_absorbed_mqa``'s KV=1 view)
-and encoder cross-attention all decode through this one surface.
+Per shard the partial comes from the kernel-dispatch registry
+(``repro.kernels.dispatch``): backend 'xla' is the einsum reference,
+'pallas' the VWR flash-decode kernel staging the local slab in wide
+(bkv x Dh) VMEM blocks, 'auto' the measured winner.  GQA and encoder
+cross-attention decode through ``decode_partial`` /
+``decode_partial_paged``; absorbed MLA decodes through the
+split-operand ``decode_partial_mla`` / ``decode_partial_mla_paged``
+ops (latent + rope caches as separate operands — no k_cat/v_cat
+copies, no rope zero-pad in the value stream), all sharing the one
+pmax/psum statistics combine.
 
 The mesh is an **explicit argument** everywhere here; ``decode_attend``
 falls back to the ambient ``with mesh:`` context only through the
@@ -115,6 +119,100 @@ def sharded_flash_decode(mesh, q, cache_k, cache_v, cur_len, *,
               jnp.asarray(cur_len, jnp.int32).reshape(()))
 
 
+def sharded_mla_flash_decode(mesh, q_abs, q_rope, cache_ckv,
+                             cache_krope, cur_len, *, scale: float,
+                             backend: str = "xla",
+                             data_axis: str = "data",
+                             model_axis: str = "model"):
+    """Split-operand absorbed-MLA decode with BOTH latent caches
+    sequence-sharded over ``model_axis`` and the batch over
+    ``data_axis``.
+
+    q_abs: (B, H, r) fp32 (pre-folded through wk_b); q_rope: (B, H,
+    rope); cache_ckv: (B, T, r); cache_krope: (B, T, rope); cur_len:
+    scalar global valid count.  Each shard computes the unnormalized
+    partial against its slab through the ``decode_partial_mla``
+    registry op — latent and rope operands stay separate all the way
+    into the kernel, so no shard ever materializes k_cat/v_cat copies
+    — and the same pmax/psum statistics combine as
+    ``sharded_flash_decode`` stitches the softmax.  Returns the
+    normalized (B, H, r) latent context."""
+    backend = D.cached_backend("decode_partial_mla", backend,
+                               (q_abs, q_rope, cache_ckv, cache_krope,
+                                cur_len), {"scale": scale})
+    B, H, r = q_abs.shape
+    T = cache_ckv.shape[1]
+    msize = mesh.shape.get(model_axis, 1) if model_axis else 1
+    if model_axis not in mesh.axis_names or T % msize:
+        return local_mla_decode_attend(q_abs, q_rope, cache_ckv,
+                                       cache_krope, cur_len,
+                                       scale=scale, backend=backend)
+    n_local = T // msize
+    dsize = mesh.shape.get(data_axis, 1)
+    dp = (data_axis if data_axis in mesh.axis_names
+          and B % max(dsize, 1) == 0 else None)
+
+    def shard_fn(qa, qr, ckv, kr, cur):
+        pos0 = jax.lax.axis_index(model_axis) * n_local
+        o_t, m, l = D.dispatch("decode_partial_mla", backend, qa, qr,
+                               ckv, kr, cur, pos0, scale=scale,
+                               tune=False)
+        m_star = jax.lax.pmax(m, model_axis)
+        scl = jnp.exp(m - m_star)                         # (B, H)
+        o = jax.lax.psum(o_t * scl[..., None], model_axis)
+        l = jax.lax.psum(l * scl, model_axis)
+        return _normalize(o, l, qa.dtype)
+
+    fn = shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(PS(dp, None, None),
+                  PS(dp, None, None),
+                  PS(dp, model_axis, None),
+                  PS(dp, model_axis, None),
+                  PS()),
+        out_specs=PS(dp, None, None),
+        check_rep=False)
+    return fn(q_abs, q_rope, cache_ckv, cache_krope,
+              jnp.asarray(cur_len, jnp.int32).reshape(()))
+
+
+def local_mla_decode_attend(q_abs, q_rope, cache_ckv, cache_krope,
+                            cur_len, *, scale: float,
+                            backend="xla") -> jax.Array:
+    """Single-shard split-operand MLA decode attention (normalized
+    (B, H, r) latent context) through the dispatch registry."""
+    o_t, m, l = D.dispatch("decode_partial_mla", backend, q_abs, q_rope,
+                           cache_ckv, cache_krope, cur_len, scale=scale)
+    return _normalize(o_t, l, q_abs.dtype)
+
+
+def mla_decode_attend(q_abs, q_rope, cache_ckv, cache_krope, cur_len, *,
+                      scale: float, backend: str = "xla", mesh=None,
+                      seq_shard: bool = True) -> jax.Array:
+    """Mesh-aware split-operand MLA decode attention used by
+    ``models.lm``.
+
+    The MLA sibling of ``decode_attend``: routes to
+    ``sharded_mla_flash_decode`` when ``seq_shard`` and a mesh with a
+    'model' axis divides the cache evenly, else the local registry op.
+    The latent and rope caches ride as separate operands end to end —
+    the copy-free replacement for the concatenated
+    ``mla_absorbed_mqa`` + ``decode_attend`` route.
+    """
+    if seq_shard:
+        mesh = resolve_mesh(mesh, "dist.decode.mla_decode_attend")
+        T = cache_ckv.shape[1]
+        if (mesh is not None and "model" in mesh.axis_names
+                and T % mesh.shape["model"] == 0):
+            return sharded_mla_flash_decode(mesh, q_abs, q_rope,
+                                            cache_ckv, cache_krope,
+                                            cur_len, scale=scale,
+                                            backend=backend)
+    return local_mla_decode_attend(q_abs, q_rope, cache_ckv,
+                                   cache_krope, cur_len, scale=scale,
+                                   backend=backend)
+
+
 def _page_counts(lens, J, page_size):
     """(B,) valid-position counts -> (B, J) per-logical-page counts."""
     return jnp.clip(lens[:, None]
@@ -130,9 +228,14 @@ def local_paged_decode_attend(q, k_pool, v_pool, table, lens, *,
     table: (B, max_pages) int32; lens: (B,) int32 valid positions per
     slot (0 = inactive slot -> zero output)."""
     ps = k_pool.shape[1]
-    counts = _page_counts(lens, table.shape[1], ps)
+    J = table.shape[1]
+    counts = _page_counts(lens, J, ps)
+    # page_size/max_pages ride as static kwargs so the page geometry
+    # is an EXPLICIT part of the dispatch cache key (see the note at
+    # the registered impls in models/attention.py)
     o_t, m, l = D.dispatch("decode_partial_paged", backend, q, k_pool,
-                           v_pool, table, counts)
+                           v_pool, table, counts, page_size=ps,
+                           max_pages=J)
     return _normalize(o_t, l, q.dtype)
 
 
@@ -152,9 +255,16 @@ def sharded_paged_flash_decode(mesh, q, k_pool, v_pool, table, lens, *,
     allocator never needs to know the mesh).  Per-token collective
     bytes stay O(B * H * (Dh + 2)), independent of pool size.
     """
-    backend = D.cached_backend("decode_partial_paged", backend,
-                               (q, k_pool, v_pool, table, lens))
     n_pages, ps = k_pool.shape[0], k_pool.shape[1]
+    J = table.shape[1]
+    # cache lookup under the same signature the LOCAL measuring path
+    # writes — (B, J) counts, not (B,) lens — plus the page geometry
+    # statics, so a winner measured locally replays here and a winner
+    # from another (page_size, max_pages) does not
+    backend = D.cached_backend(
+        "decode_partial_paged", backend,
+        (q, k_pool, v_pool, table, _page_counts(lens, J, ps)),
+        {"page_size": ps, "max_pages": J})
     msize = mesh.shape.get(model_axis, 1) if model_axis else 1
     if model_axis not in mesh.axis_names or n_pages % msize:
         return local_paged_decode_attend(q, k_pool, v_pool, table, lens,
@@ -164,7 +274,6 @@ def sharded_paged_flash_decode(mesh, q, k_pool, v_pool, table, lens, *,
     dsize = mesh.shape.get(data_axis, 1)
     dp = (data_axis if data_axis in mesh.axis_names
           and B % max(dsize, 1) == 0 else None)
-    J = table.shape[1]
 
     def shard_fn(q, kp, vp, tbl, lens):
         p0 = jax.lax.axis_index(model_axis) * pp
@@ -172,7 +281,8 @@ def sharded_paged_flash_decode(mesh, q, k_pool, v_pool, table, lens, *,
         tloc = jnp.clip(tbl - p0, 0, pp - 1)
         counts = jnp.where(owned, _page_counts(lens, J, ps), 0)
         o_t, m, l = D.dispatch("decode_partial_paged", backend, q, kp,
-                               vp, tloc, counts, tune=False)
+                               vp, tloc, counts, page_size=ps,
+                               max_pages=J, tune=False)
         m_star = jax.lax.pmax(m, model_axis)
         scale = jnp.exp(m - m_star)
         o = jax.lax.psum(o_t * scale[..., None], model_axis)
@@ -211,6 +321,111 @@ def paged_decode_attend(q, k_pool, v_pool, table, lens, *,
                                               backend=backend)
     return local_paged_decode_attend(q, k_pool, v_pool, table, lens,
                                      backend=backend)
+
+
+def local_mla_paged_decode_attend(q_abs, q_rope, ckv_pool, krope_pool,
+                                  table, lens, *, scale: float,
+                                  backend="xla") -> jax.Array:
+    """Single-shard split-operand paged MLA decode attention
+    (normalized (B, H, r) latent context).
+
+    q_abs: (B, H, r) fp32; q_rope: (B, H, rope); ckv_pool: (n_pages,
+    page_size, r); krope_pool: (n_pages, page_size, rope); table:
+    (B, max_pages) int32; lens: (B,) int32 valid positions per slot."""
+    ps = ckv_pool.shape[1]
+    J = table.shape[1]
+    counts = _page_counts(lens, J, ps)
+    o_t, m, l = D.dispatch("decode_partial_mla_paged", backend, q_abs,
+                           q_rope, ckv_pool, krope_pool, table, counts,
+                           scale=scale, page_size=ps, max_pages=J)
+    return _normalize(o_t, l, q_abs.dtype)
+
+
+def sharded_mla_paged_flash_decode(mesh, q_abs, q_rope, ckv_pool,
+                                   krope_pool, table, lens, *,
+                                   scale: float, backend: str = "xla",
+                                   data_axis: str = "data",
+                                   model_axis: str = "model"):
+    """Split-operand paged MLA decode with BOTH latent pools sharded
+    over ``model_axis`` (shard s owns pages [s*pp, (s+1)*pp)) and the
+    slot batch over ``data_axis``.
+
+    Same ownership-masked-counts construction as
+    ``sharded_paged_flash_decode`` — block tables are replicated, each
+    shard zeroes the counts of foreign pages and the pmax/psum
+    statistics combine stitches the slots — so page->shard placement
+    stays free, and no shard ever builds a pool-wide k_cat/v_cat copy.
+    """
+    n_pages, ps = ckv_pool.shape[0], ckv_pool.shape[1]
+    J = table.shape[1]
+    backend = D.cached_backend(
+        "decode_partial_mla_paged", backend,
+        (q_abs, q_rope, ckv_pool, krope_pool, table,
+         _page_counts(lens, J, ps)),
+        {"scale": scale, "page_size": ps, "max_pages": J})
+    msize = mesh.shape.get(model_axis, 1) if model_axis else 1
+    if model_axis not in mesh.axis_names or n_pages % msize:
+        return local_mla_paged_decode_attend(q_abs, q_rope, ckv_pool,
+                                             krope_pool, table, lens,
+                                             scale=scale,
+                                             backend=backend)
+    pp = n_pages // msize
+    B = q_abs.shape[0]
+    dsize = mesh.shape.get(data_axis, 1)
+    dp = (data_axis if data_axis in mesh.axis_names
+          and B % max(dsize, 1) == 0 else None)
+
+    def shard_fn(qa, qr, ckv, kr, tbl, lens):
+        p0 = jax.lax.axis_index(model_axis) * pp
+        owned = (tbl >= p0) & (tbl < p0 + pp)
+        tloc = jnp.clip(tbl - p0, 0, pp - 1)
+        counts = jnp.where(owned, _page_counts(lens, J, ps), 0)
+        o_t, m, l = D.dispatch("decode_partial_mla_paged", backend, qa,
+                               qr, ckv, kr, tloc, counts, scale=scale,
+                               page_size=ps, max_pages=J, tune=False)
+        m_star = jax.lax.pmax(m, model_axis)
+        scl = jnp.exp(m - m_star)
+        o = jax.lax.psum(o_t * scl[..., None], model_axis)
+        l = jax.lax.psum(l * scl, model_axis)
+        return _normalize(o, l, qa.dtype)
+
+    fn = shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(PS(dp, None, None),
+                  PS(dp, None, None),
+                  PS(model_axis, None, None),
+                  PS(model_axis, None, None),
+                  PS(dp, None),
+                  PS(dp)),
+        out_specs=PS(dp, None, None),
+        check_rep=False)
+    return fn(q_abs, q_rope, ckv_pool, krope_pool,
+              table.astype(jnp.int32), jnp.asarray(lens, jnp.int32))
+
+
+def mla_paged_decode_attend(q_abs, q_rope, ckv_pool, krope_pool, table,
+                            lens, *, scale: float, backend: str = "xla",
+                            mesh=None, seq_shard: bool = True
+                            ) -> jax.Array:
+    """Mesh-aware split-operand paged MLA decode attention used by
+    ``models.lm``.
+
+    Routes to ``sharded_mla_paged_flash_decode`` when ``seq_shard`` and
+    a mesh with a 'model' axis divides the pool evenly, else the local
+    registry op — the copy-free replacement for concatenating the two
+    pools into a KV=1 view of ``paged_decode_attend``.
+    """
+    if seq_shard:
+        mesh = resolve_mesh(mesh, "dist.decode.mla_paged_decode_attend")
+        n_pages = ckv_pool.shape[0]
+        if (mesh is not None and "model" in mesh.axis_names
+                and n_pages % mesh.shape["model"] == 0):
+            return sharded_mla_paged_flash_decode(
+                mesh, q_abs, q_rope, ckv_pool, krope_pool, table, lens,
+                scale=scale, backend=backend)
+    return local_mla_paged_decode_attend(q_abs, q_rope, ckv_pool,
+                                         krope_pool, table, lens,
+                                         scale=scale, backend=backend)
 
 
 def decode_attend(q, cache_k, cache_v, cur_len, *,

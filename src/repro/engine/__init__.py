@@ -9,8 +9,10 @@ run request-level continuous batching on top of it.
 """
 from repro.engine.cache import pad_cache_from_prefill
 from repro.engine.engine import DecodeEngine, EngineConfig
-from repro.engine.paged_cache import PageAllocator, PagePoolExhausted
+from repro.engine.paged_cache import (PageAllocator, PagePoolExhausted,
+                                      bucket_table_width)
 from repro.engine.scheduler import Request, Scheduler
 
 __all__ = ["DecodeEngine", "EngineConfig", "pad_cache_from_prefill",
-           "PageAllocator", "PagePoolExhausted", "Request", "Scheduler"]
+           "PageAllocator", "PagePoolExhausted", "Request", "Scheduler",
+           "bucket_table_width"]

@@ -207,8 +207,13 @@ class DecodeEngine:
 
         Dense cache: ``cur_len`` is a scalar (every slot at the same
         position).  Paged (ecfg.paged): ``cur_len`` is a per-slot (B,)
-        int32 vector and ``block_table`` (B, max_pages) int32 is
-        required.  Returns (logits (B, vocab_padded) fp32, new cache).
+        int32 vector and ``block_table`` (B, W) int32 is required,
+        with W <= max_pages covering every slot's live pages — the
+        scheduler passes the power-of-two width bucket of the longest
+        active slot (``paged_cache.bucket_table_width``), so a step
+        stages only live pages; the jitted step compiles once per
+        distinct W (at most log2(max_pages)+1 shapes).  Returns
+        (logits (B, vocab_padded) fp32, new cache).
         """
         if self.ecfg.paged:
             if block_table is None:

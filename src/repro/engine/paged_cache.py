@@ -47,6 +47,27 @@ def max_pages(max_len: int, page_size: int) -> int:
     return -(-max_len // page_size)
 
 
+def bucket_table_width(live_pages: int, max_pages: int) -> int:
+    """Block-table width bucket covering ``live_pages`` columns.
+
+    Fixed-width ``(B, max_pages)`` tables keep the jitted decode step
+    at one shape, but every step then stages (or at least masks)
+    ``max_pages`` pages per slot even when the longest slot only owns
+    a handful — dead table columns are the table-side analogue of the
+    dense cache's dead bytes.  Bucketing rounds the live width up to
+    the next power of two (capped at ``max_pages``): the step is
+    compiled once per bucket — at most log2(max_pages)+1 shapes over a
+    stream's lifetime — and a step stages at most the bucket width of
+    pages per slot instead of ``max_pages``.
+    """
+    if live_pages >= max_pages:
+        return max_pages
+    w = 1
+    while w < max(live_pages, 1):
+        w *= 2
+    return min(w, max_pages)
+
+
 def paged_cache_spec(cfg, n_pages: int, page_size: int,
                      batch_slots: int, enc_len: int = 0):
     """ShapeDtypeStruct tree for the paged decode cache.

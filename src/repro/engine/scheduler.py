@@ -47,7 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.engine.paged_cache import (PageAllocator, PagePoolExhausted,
-                                      write_prefill)
+                                      bucket_table_width, write_prefill)
 
 
 @dataclasses.dataclass
@@ -80,9 +80,19 @@ class Scheduler:
     slot); it defaults to the engine's decoder ``max_len``, which is
     usually too SHORT for speech — encoder frame counts routinely
     exceed the decoder token budget, so audio streams should size it
-    to the longest expected ``frontend_emb``."""
+    to the longest expected ``frontend_emb``.
 
-    def __init__(self, engine, enc_len: Optional[int] = None):
+    ``bucket_tables`` (default on) slices the block table each step to
+    the power-of-two width bucket covering the longest active slot's
+    live page count (``paged_cache.bucket_table_width``), so a step
+    stages only live pages instead of ``max_pages`` columns; the
+    jitted step compiles once per bucket (at most log2(max_pages)+1
+    shapes).  Admission / growth / retirement semantics and the token
+    streams are identical either way — only the staged table width
+    changes."""
+
+    def __init__(self, engine, enc_len: Optional[int] = None,
+                 bucket_tables: bool = True):
         if not engine.ecfg.paged:
             raise ValueError(
                 "Scheduler needs a paged engine: EngineConfig("
@@ -100,10 +110,12 @@ class Scheduler:
         self.cache = engine.init_paged_cache(enc_len=enc_len)
         self.enc_budget = (self.cache["cross_k"].shape[2]
                            if self.cfg.family == "audio" else 0)
+        self.bucket_tables = bucket_tables
         self.pending: deque = deque()   # Request | preempted _Slot
         self.finished: Dict[Any, np.ndarray] = {}
         self.stats = {"prefills": 0, "admitted": 0, "retired": 0,
-                      "steps": 0, "peak_pages": 0, "preempted": 0}
+                      "steps": 0, "peak_pages": 0, "preempted": 0,
+                      "table_widths": {}}   # width -> steps at it
         self._order = 0
         # jitted prefill->pages scatter with the pool DONATED (where
         # the backend supports donation): the eager .at[].set would
@@ -294,9 +306,19 @@ class Scheduler:
         self._grow_pages()
         if self.n_active == 0:      # growth preempted everything
             return
+        # table-width bucketing: stage only live pages.  After
+        # _grow_pages every active slot owns the page its next write
+        # lands in, so the max live page count bounds every per-slot
+        # index the step takes into the table row.
+        W = self.table.shape[1]
+        if self.bucket_tables:
+            live = max(len(s.pages) for s in self.slots if s is not None)
+            W = bucket_table_width(live, self.table.shape[1])
+        self.stats["table_widths"][W] = \
+            self.stats["table_widths"].get(W, 0) + 1
         dbatch = {"token": jnp.asarray(self.tokens),
                   "cur_len": jnp.asarray(self.lens),
-                  "block_table": jnp.asarray(self.table),
+                  "block_table": jnp.asarray(self.table[:, :W]),
                   "cache": self.cache}
         if self.cfg.family == "audio":
             dbatch["enc_lens"] = jnp.asarray(self.enc_lens)

@@ -23,6 +23,8 @@ from repro.kernels import autotune
 from repro.kernels.vwr_attention import vwr_attention_p
 from repro.kernels.vwr_conv2d import vwr_conv2d_p
 from repro.kernels.vwr_decode import (vwr_flash_decode_p,
+                                      vwr_mla_flash_decode_p,
+                                      vwr_mla_paged_flash_decode_p,
                                       vwr_paged_flash_decode_p)
 from repro.kernels.vwr_depthwise import vwr_depthwise_p
 from repro.kernels.vwr_matmul import vwr_matmul_p, vwr_swiglu_p
@@ -405,6 +407,107 @@ def vwr_paged_flash_decode(q, k_pool, v_pool, table, counts, *,
     interpret = _auto_interpret(interpret)
     return _vwr_paged_flash_decode_jit(q, k_pool, v_pool, table, counts,
                                        interpret=interpret)
+
+
+# ======================================================================
+# split-operand MLA flash decode (latent + rope caches as separate
+# operands; values taken from the latent block — no concat copies)
+# ======================================================================
+
+@functools.partial(jax.jit, static_argnames=("scale", "bkv", "interpret"))
+def _vwr_mla_flash_decode_jit(q_abs, q_rope, c_kv, k_rope, lens, *,
+                              scale, bkv, interpret):
+    T = c_kv.shape[1]
+    bkv_ = min(bkv, T)
+    ckv = _pad_dim(c_kv, 1, bkv_)
+    kr = _pad_dim(k_rope, 1, bkv_)
+    return vwr_mla_flash_decode_p(q_abs, q_rope, ckv, kr, lens,
+                                  scale=scale, bkv=bkv_, t_valid=T,
+                                  interpret=interpret)
+
+
+def vwr_mla_flash_decode(q_abs, q_rope, c_kv, k_rope, cur_len, pos0=0, *,
+                         scale, bkv=None, interpret=None):
+    """Unnormalized split-operand absorbed-MLA flash-decode partials.
+
+    q_abs: (B, H, r) nope queries pre-folded through wk_b; q_rope:
+    (B, H, rope); c_kv: (B, T, r) latent cache (shard); k_rope: (B, T,
+    rope) rope-key cache; ``scale`` the absorbed 1/sqrt(nope+rope).
+    The caches stay SEPARATE all the way into the kernel's BlockSpecs —
+    staged cache bytes per token are (r + rope) features/position
+    instead of the concatenated view's 2*(r + rope) (k_cat + zero-
+    padded v_cat copies).  Returns fp32 (o_tilde (B, H, r), m (B, H),
+    l (B, H)), the ``dist.decode`` combine contract.  ``bkv``
+    unspecified resolves via the autotuner."""
+    interpret = _auto_interpret(interpret)
+    B, H, r = q_abs.shape
+    T, rope = c_kv.shape[1], q_rope.shape[2]
+    if bkv is None:
+        bkv = _mla_decode_blocks(B, T, H, r, rope, str(c_kv.dtype),
+                                 interpret)[0]
+    lens = jnp.stack([jnp.asarray(cur_len, jnp.int32).reshape(()),
+                      jnp.asarray(pos0, jnp.int32).reshape(())]
+                     ).reshape(1, 2)
+    return _vwr_mla_flash_decode_jit(q_abs, q_rope, c_kv, k_rope, lens,
+                                     scale=scale, bkv=bkv,
+                                     interpret=interpret)
+
+
+def _mla_decode_blocks(B, T, H, r, rope, dtype, interpret):
+    backend = _backend_tag(interpret)
+
+    def runner(cand):
+        bkv, = cand
+        qa = jnp.ones((B, H, r), jnp.float32)
+        qr = jnp.ones((B, H, rope), jnp.float32)
+        ckv = jnp.ones((B, T, r), jnp.dtype(dtype))
+        kr = jnp.ones((B, T, rope), jnp.dtype(dtype))
+        lens = jnp.asarray([[T, 0]], jnp.int32)
+
+        def run():
+            jax.block_until_ready(_vwr_mla_flash_decode_jit(
+                qa, qr, ckv, kr, lens, scale=1.0, bkv=bkv,
+                interpret=interpret))
+        return run
+
+    # candidates/prior: the decode cost model with the staged feature
+    # width r + rope (one latent + one rope block per grid step) and a
+    # single shared KV head (the absorbed-MQA view)
+    return autotune.get_blocks(
+        "decode_mla", (B, T, H, r, rope), dtype, backend,
+        candidates=autotune.decode_candidates(T, r + rope, dtype),
+        prior=lambda c: autotune.decode_prior(B, T, H, 1, r + rope,
+                                              dtype, c),
+        runner=runner if autotune.enabled() else None)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def _vwr_mla_paged_flash_decode_jit(q_abs, q_rope, ckv_pool, krope_pool,
+                                    table, counts, *, scale, interpret):
+    n_pages = ckv_pool.shape[0]
+    tbl = jnp.clip(table, 0, n_pages - 1).astype(jnp.int32)
+    return vwr_mla_paged_flash_decode_p(
+        q_abs, q_rope, ckv_pool, krope_pool, tbl,
+        counts.astype(jnp.int32), scale=scale, interpret=interpret)
+
+
+def vwr_mla_paged_flash_decode(q_abs, q_rope, ckv_pool, krope_pool,
+                               table, counts, *, scale, interpret=None):
+    """Unnormalized split-operand absorbed-MLA partials over paged
+    latent pools.
+
+    q_abs: (B, H, r); q_rope: (B, H, rope); ckv_pool: (n_pages,
+    page_size, r); krope_pool: (n_pages, page_size, rope); table,
+    counts: (B, max_pages) int32 (count 0 masks a page completely).
+    The pools stay separate into the kernel — no pool-wide k_cat/v_cat
+    copies.  Page size is the transaction width (the engine owns it),
+    so there is no block autotuning; 'auto' dispatch still measures
+    this wrapper against the XLA gather reference per shape/geometry.
+    Returns fp32 (o_tilde (B, H, r), m (B, H), l (B, H))."""
+    interpret = _auto_interpret(interpret)
+    return _vwr_mla_paged_flash_decode_jit(
+        q_abs, q_rope, ckv_pool, krope_pool, table, counts, scale=scale,
+        interpret=interpret)
 
 
 def _decode_blocks(B, T, H, KV, D, dtype, interpret):

@@ -117,6 +117,213 @@ def _paged_decode_kernel(tbl_ref, cnt_ref, q_ref, k_ref, v_ref,
         l_ref[0] = ls_ref[:, 0]
 
 
+def _mla_decode_kernel(qa_ref, qr_ref, ckv_ref, kr_ref, lens_ref,
+                       ot_ref, m_ref, l_ref, acc_ref, ms_ref, ls_ref,
+                       *, scale, bkv, t_valid, n_kv):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        ms_ref[...] = jnp.full_like(ms_ref, NEG_INF)
+        ls_ref[...] = jnp.zeros_like(ls_ref)
+
+    cur = lens_ref[0, 0]
+    pos0 = lens_ref[0, 1]
+    qa = qa_ref[0].astype(jnp.float32) * scale          # (H, r)
+    qr = qr_ref[0].astype(jnp.float32) * scale          # (H, rope)
+    ckv = ckv_ref[0].astype(jnp.float32)                # (bkv, r)
+    kr = kr_ref[0].astype(jnp.float32)                  # (bkv, rope)
+    # split-operand score: the latent block carries BOTH the key's nope
+    # part (absorbed) and the values, the rope block only its 64-ish
+    # rope features — no k_cat/v_cat concat copies, no value zero-pad
+    s = jax.lax.dot_general(qa, ckv, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s + jax.lax.dot_general(qr, kr, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    idx = j * bkv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = (idx < t_valid) & (pos0 + idx < cur)
+    s = jnp.where(valid, s, NEG_INF)
+    m_prev = ms_ref[:, 0]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))         # (H,)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where((m_new > NEG_INF / 2)[:, None], p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    ls_ref[:, 0] = ls_ref[:, 0] * corr + p.sum(axis=-1)
+    pv = jnp.dot(p, ckv, preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+    ms_ref[:, 0] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _store():
+        ot_ref[0] = acc_ref[...]
+        m_ref[0] = ms_ref[:, 0]
+        l_ref[0] = ls_ref[:, 0]
+
+
+def vwr_mla_flash_decode_p(q_abs: jax.Array, q_rope: jax.Array,
+                           c_kv: jax.Array, k_rope: jax.Array,
+                           lens: jax.Array, *, scale: float, bkv: int,
+                           t_valid: int, interpret: bool = False):
+    """Split-operand absorbed-MLA flash decode (the MQA KV=1 problem).
+
+    The latent and rope-key caches ride in as SEPARATE BlockSpec
+    operands: each grid step stages one (bkv x r) latent block and one
+    (bkv x rope) rope block, computes ``s = q_abs.c_kv + q_rope.k_rope``
+    and takes values directly from the latent block — so the staged
+    cache bytes per token are exactly ``r + rope`` features/position,
+    vs the concatenated-MQA view's ``2*(r + rope)`` (one k_cat copy +
+    one zero-padded v_cat copy of the cache, rebuilt every step).
+
+    q_abs: (B, H, r) nope queries folded through wk_b; q_rope: (B, H,
+    rope); c_kv: (B, Tp, r); k_rope: (B, Tp, rope), Tp padded to a bkv
+    multiple; lens: (1, 2) int32 [cur_len, pos0]; ``scale`` the
+    absorbed-MLA 1/sqrt(nope+rope).  Returns fp32 (o_tilde (B, H, r),
+    m (B, H), l (B, H)) — the same unnormalized combine contract as
+    ``vwr_flash_decode_p``.
+    """
+    B, H, r = q_abs.shape
+    rope = q_rope.shape[2]
+    Tp = c_kv.shape[1]
+    assert q_rope.shape == (B, H, rope)
+    assert c_kv.shape == (B, Tp, r) and k_rope.shape == (B, Tp, rope)
+    assert Tp % bkv == 0, (Tp, bkv)
+    n_kv = Tp // bkv
+    kernel = functools.partial(_mla_decode_kernel, scale=scale, bkv=bkv,
+                               t_valid=t_valid, n_kv=n_kv)
+    f32 = jnp.float32
+    return pl.pallas_call(
+        kernel,
+        grid=(B, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, H, r), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, H, rope), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, bkv, r), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, rope), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, 2), lambda b, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, H, r), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, H), lambda b, j: (b, 0)),
+            pl.BlockSpec((1, H), lambda b, j: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, r), f32),
+            jax.ShapeDtypeStruct((B, H), f32),
+            jax.ShapeDtypeStruct((B, H), f32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((H, r), f32),
+            pltpu.VMEM((H, 1), f32),
+            pltpu.VMEM((H, 1), f32),
+        ],
+        compiler_params=tpu_compiler_params("parallel", "arbitrary"),
+        interpret=interpret,
+    )(q_abs, q_rope, c_kv, k_rope, lens)
+
+
+def _mla_paged_decode_kernel(tbl_ref, cnt_ref, qa_ref, qr_ref, ckv_ref,
+                             kr_ref, ot_ref, m_ref, l_ref, acc_ref,
+                             ms_ref, ls_ref, *, scale, n_logical):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        ms_ref[...] = jnp.full_like(ms_ref, NEG_INF)
+        ls_ref[...] = jnp.zeros_like(ls_ref)
+
+    count = cnt_ref[b, j]                               # tokens valid here
+    qa = qa_ref[0].astype(jnp.float32) * scale          # (H, r)
+    qr = qr_ref[0].astype(jnp.float32) * scale          # (H, rope)
+    ckv = ckv_ref[0].astype(jnp.float32)                # (ps, r)
+    kr = kr_ref[0].astype(jnp.float32)                  # (ps, rope)
+    s = jax.lax.dot_general(qa, ckv, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s + jax.lax.dot_general(qr, kr, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    idx = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(idx < count, s, NEG_INF)
+    m_prev = ms_ref[:, 0]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))         # (H,)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where((m_new > NEG_INF / 2)[:, None], p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    ls_ref[:, 0] = ls_ref[:, 0] * corr + p.sum(axis=-1)
+    pv = jnp.dot(p, ckv, preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+    ms_ref[:, 0] = m_new
+
+    @pl.when(j == n_logical - 1)
+    def _store():
+        ot_ref[0] = acc_ref[...]
+        m_ref[0] = ms_ref[:, 0]
+        l_ref[0] = ls_ref[:, 0]
+
+
+def vwr_mla_paged_flash_decode_p(q_abs: jax.Array, q_rope: jax.Array,
+                                 ckv_pool: jax.Array,
+                                 krope_pool: jax.Array,
+                                 table: jax.Array, counts: jax.Array, *,
+                                 scale: float, interpret: bool = False):
+    """Split-operand absorbed-MLA flash decode over paged latent pools.
+
+    The paged sibling of ``vwr_mla_flash_decode_p``: the block table
+    rides in as a scalar-prefetch operand and each (slot, logical-page)
+    grid step stages ONE physical latent page (page_size x r) plus its
+    rope page (page_size x rope) — the concat-MQA view instead rebuilt
+    k_cat/v_cat copies of the whole POOL every decode step.
+
+    q_abs: (B, H, r); q_rope: (B, H, rope); ckv_pool: (n_pages,
+    page_size, r); krope_pool: (n_pages, page_size, rope); table,
+    counts: (B, max_pages) int32, table pre-clamped to [0, n_pages).
+    Returns fp32 (o_tilde (B, H, r), m (B, H), l (B, H)).
+    """
+    B, H, r = q_abs.shape
+    rope = q_rope.shape[2]
+    n_pages, ps, _ = ckv_pool.shape
+    assert krope_pool.shape == (n_pages, ps, rope)
+    Bt, J = table.shape
+    assert Bt == B and counts.shape == (B, J), (table.shape, B)
+    kernel = functools.partial(_mla_paged_decode_kernel, scale=scale,
+                               n_logical=J)
+    f32 = jnp.float32
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # table, counts
+        grid=(B, J),
+        in_specs=[
+            pl.BlockSpec((1, H, r), lambda b, j, tbl, cnt: (b, 0, 0)),
+            pl.BlockSpec((1, H, rope), lambda b, j, tbl, cnt: (b, 0, 0)),
+            pl.BlockSpec((1, ps, r),
+                         lambda b, j, tbl, cnt: (tbl[b, j], 0, 0)),
+            pl.BlockSpec((1, ps, rope),
+                         lambda b, j, tbl, cnt: (tbl[b, j], 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, H, r), lambda b, j, tbl, cnt: (b, 0, 0)),
+            pl.BlockSpec((1, H), lambda b, j, tbl, cnt: (b, 0)),
+            pl.BlockSpec((1, H), lambda b, j, tbl, cnt: (b, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((H, r), f32),
+            pltpu.VMEM((H, 1), f32),
+            pltpu.VMEM((H, 1), f32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, r), f32),
+            jax.ShapeDtypeStruct((B, H), f32),
+            jax.ShapeDtypeStruct((B, H), f32),
+        ],
+        compiler_params=tpu_compiler_params("parallel", "arbitrary"),
+        interpret=interpret,
+    )(table, counts, q_abs, q_rope, ckv_pool, krope_pool)
+
+
 def vwr_paged_flash_decode_p(q: jax.Array, k_pool: jax.Array,
                              v_pool: jax.Array, table: jax.Array,
                              counts: jax.Array, *,

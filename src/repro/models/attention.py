@@ -366,14 +366,23 @@ def paged_flash_decode_partial(
     return (o_t.reshape(B, H, Dh), m.reshape(B, H), l.reshape(B, H))
 
 
+# page_size/max_pages ride as STATIC kwargs folded into the dispatch
+# cache key (dispatch._arg_signature).  Today they duplicate the
+# pool/table dims already keyed via the operand shapes; carrying them
+# explicitly pins the geometry even for a future caller that reshapes
+# or pads operands before dispatching, and makes the persisted cache
+# entries self-describing.
+
 @D.register("decode_partial_paged", "xla")
 def _decode_partial_paged_xla(q, k_pool, v_pool, table, counts, *,
+                              page_size=None, max_pages=None,
                               tune=True):
     return paged_flash_decode_partial(q, k_pool, v_pool, table, counts)
 
 
 @D.register("decode_partial_paged", "pallas")
 def _decode_partial_paged_pallas(q, k_pool, v_pool, table, counts, *,
+                                 page_size=None, max_pages=None,
                                  tune=True):
     from repro.kernels import ops
     return ops.vwr_paged_flash_decode(q, k_pool, v_pool, table, counts)

@@ -686,21 +686,27 @@ def _decode_gqa(cfg, lp, h, ck, cv, cur_len, mesh=None):
 def _decode_mla(cfg, lp, h, cckv, ckr, cur_len, mesh=None):
     """MLA absorbed decode. cckv: (B,T,r); ckr: (B,T,rope).
 
-    The absorbed form is recast as an MQA flash-decode problem
-    (``MLA.mla_absorbed_mqa``: latent+rope caches concatenated into one
-    shared KV head), so it takes the SAME ``_decode_attend`` path as
-    GQA — VWR flash-decode kernel, 'auto' dispatch, and sequence-
-    sharded distributed FlashDecoding all included."""
+    Split-operand path: q_nope is folded through wk_b
+    (``MLA.mla_absorbed_queries``) and the latent + rope caches ride
+    as SEPARATE operands through ``dist.decode.mla_decode_attend`` —
+    the ``decode_partial_mla`` registry op locally (VWR split-operand
+    flash-decode kernel, 'auto' dispatch) and the same pmax/psum
+    combine sequence-sharded.  No per-step k_cat/v_cat cache copies,
+    no rope zero-pad in the value stream: staged cache bytes per token
+    drop from 2*(r+rope) to r+rope features/position."""
+    from repro.dist import decode as DD
     h3 = h[:, None, :]
     pos = jnp.asarray(cur_len)[None]
     q_nope, q_rope = MLA.mla_queries(lp, h3, pos, cfg)
     c_kv, k_rope = MLA.mla_latent(lp, h3, pos, cfg)
     cckv = jax.lax.dynamic_update_slice(cckv, c_kv, (0, cur_len, 0))
     ckr = jax.lax.dynamic_update_slice(ckr, k_rope, (0, cur_len, 0))
-    q_cat, k_cat, v_cat, r = MLA.mla_absorbed_mqa(
-        lp, q_nope[:, 0], q_rope[:, 0], cckv, ckr, cfg)
-    o_cat = _decode_attend(cfg, q_cat, k_cat, v_cat, cur_len + 1, mesh)
-    o = o_cat[..., :r]
+    q_abs, q_rope_f, scale = MLA.mla_absorbed_queries(
+        lp, q_nope[:, 0], q_rope[:, 0], cfg)
+    o = DD.mla_decode_attend(q_abs, q_rope_f, cckv, ckr, cur_len + 1,
+                             scale=scale, backend=cfg.kernel_impl,
+                             mesh=mesh,
+                             seq_shard=(cfg.decode_shard == "seq"))
     delta = MLA.mla_decode_finish(lp, o.astype(jnp.float32), cfg)
     return delta.astype(h.dtype), cckv, ckr
 
@@ -768,9 +774,14 @@ def _decode_mla_paged(cfg, lp, h, ckv_pool, krope_pool, table, lens,
                       mesh=None):
     """MLA absorbed decode against paged latent pools: ckv_pool
     (n_pages, ps, r); krope_pool (n_pages, ps, rope).
-    ``MLA.mla_absorbed_mqa`` concatenates the two pools into one
-    KV=1 pool view, so the same ``decode_partial_paged`` op serves
-    MLA."""
+
+    Split-operand path: the two pools ride SEPARATELY through
+    ``dist.decode.mla_paged_decode_attend`` — the
+    ``decode_partial_mla_paged`` registry op stages only the block
+    table's pages (scalar-prefetch on the pallas backend), where the
+    concat view used to copy the whole POOL into k_cat/v_cat every
+    step."""
+    from repro.dist import decode as DD
     n_pages, ps = ckv_pool.shape[0], ckv_pool.shape[1]
     h3 = h[:, None, :]
     pos = lens[:, None]
@@ -781,10 +792,13 @@ def _decode_mla_paged(cfg, lp, h, ckv_pool, krope_pool, table, lens,
         c_kv[:, 0].astype(ckv_pool.dtype), mode="drop")
     krope_pool = krope_pool.at[pages, offs].set(
         k_rope[:, 0].astype(krope_pool.dtype), mode="drop")
-    q_cat, k_cat, v_cat, r = MLA.mla_absorbed_mqa(
-        lp, q_nope[:, 0], q_rope[:, 0], ckv_pool, krope_pool, cfg)
-    o_cat = _paged_attend(cfg, q_cat, k_cat, v_cat, table, n_valid, mesh)
-    o = o_cat[..., :r]
+    q_abs, q_rope_f, scale = MLA.mla_absorbed_queries(
+        lp, q_nope[:, 0], q_rope[:, 0], cfg)
+    o = DD.mla_paged_decode_attend(q_abs, q_rope_f, ckv_pool,
+                                   krope_pool, table, n_valid,
+                                   scale=scale, backend=cfg.kernel_impl,
+                                   mesh=mesh,
+                                   seq_shard=(cfg.decode_shard == "seq"))
     delta = MLA.mla_decode_finish(lp, o.astype(jnp.float32), cfg)
     return delta.astype(h.dtype), ckv_pool, krope_pool
 

@@ -20,6 +20,7 @@ from jax.sharding import PartitionSpec as PS
 
 from repro.common.hints import shard_hint
 from repro.common.module import ParamDef
+from repro.kernels import dispatch as D
 from repro.models.attention import NEG_INF, blockwise_attn
 from repro.models.layers import apply_rope, rmsnorm, rmsnorm_spec
 
@@ -109,18 +110,37 @@ def v_pad(v, d):
 
 # ---------------- absorbed decode ----------------
 
-def mla_decode_partial(
-    p, q_nope, q_rope, cache_ckv, cache_krope, kv_positions, cur_len, cfg
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Absorbed-form partial decode vs a (possibly sharded) latent cache.
+def mla_absorbed_queries(p, q_nope, q_rope, cfg
+                         ) -> Tuple[jax.Array, jax.Array, float]:
+    """Fold q_nope through wk_b: the split-operand decode queries.
 
-    q_nope: (B,H,nope); q_rope: (B,H,rope)
-    cache_ckv: (B,T,r); cache_krope: (B,T,rope)
-    Returns (o_tilde (B,H,r), m (B,H), l (B,H)) — combined via pmax/psum.
-    """
+    q_nope: (B,H,nope); q_rope: (B,H,rope).  Returns (q_abs (B,H,r)
+    fp32, q_rope fp32, scale) with scale the absorbed-MLA
+    1/sqrt(nope+rope) — the query triple every ``decode_partial_mla``
+    backend consumes.  No cache-side concat is involved: scores are
+    ``(q_abs . c_kv + q_rope . k_rope) * scale`` and values come
+    straight from the latent cache."""
+    m = cfg.mla
     q_abs = jnp.einsum("bhk,rhk->bhr", q_nope.astype(jnp.float32),
                        p["wk_b"].astype(jnp.float32))
-    scale = 1.0 / ((cfg.mla.nope_head_dim + cfg.mla.rope_head_dim) ** 0.5)
+    scale = 1.0 / ((m.nope_head_dim + m.rope_head_dim) ** 0.5)
+    return q_abs, q_rope.astype(jnp.float32), scale
+
+
+def mla_flash_decode_partial(
+    q_abs, q_rope, cache_ckv, cache_krope, kv_positions, cur_len, *,
+    scale: float,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Split-operand absorbed-form partial decode (XLA reference).
+
+    q_abs: (B,H,r) fp32 (pre-folded through wk_b — see
+    ``mla_absorbed_queries``); q_rope: (B,H,rope); cache_ckv: (B,T,r);
+    cache_krope: (B,T,rope).  The latent cache carries both the nope
+    part of the keys and the values, so the cache is read ONCE with no
+    k_cat/v_cat copies and no rope zero-pad in the value stream.
+    Returns fp32 (o_tilde (B,H,r), m (B,H), l (B,H)) — the
+    ``dist.decode`` pmax/psum combine contract.
+    """
     s = jnp.einsum("bhr,btr->bht", q_abs, cache_ckv.astype(jnp.float32))
     s = s + jnp.einsum("bhk,btk->bht", q_rope.astype(jnp.float32),
                        cache_krope.astype(jnp.float32))
@@ -135,6 +155,112 @@ def mla_decode_partial(
     return o_t, m, l
 
 
+def mla_paged_flash_decode_partial(
+    q_abs, q_rope, ckv_pool, krope_pool, block_table, page_counts, *,
+    scale: float,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Split-operand paged partial decode (XLA gather reference).
+
+    q_abs: (B,H,r) fp32; q_rope: (B,H,rope); ckv_pool: (n_pages, ps,
+    r); krope_pool: (n_pages, ps, rope); block_table / page_counts:
+    (B, max_pages) int32 (count 0 masks a page completely — length
+    overrun, unallocated entry, or a page owned by another shard).
+    Gathers ONLY the tables' pages of the two pools — the concat-MQA
+    view instead copied the whole pool into k_cat/v_cat every step.
+    Returns fp32 (o_tilde (B,H,r), m (B,H), l (B,H)).
+    """
+    B, H, r = q_abs.shape
+    n_pages, ps, _ = ckv_pool.shape
+    J = block_table.shape[1]
+    tbl = jnp.clip(block_table, 0, n_pages - 1)
+    ckv = ckv_pool[tbl].reshape(B, J * ps, r)
+    kr = krope_pool[tbl].reshape(B, J * ps, krope_pool.shape[2])
+    valid = (jnp.arange(ps)[None, None, :]
+             < page_counts[..., None]).reshape(B, J * ps)
+    s = jnp.einsum("bhr,btr->bht", q_abs, ckv.astype(jnp.float32))
+    s = s + jnp.einsum("bhk,btk->bht", q_rope.astype(jnp.float32),
+                       kr.astype(jnp.float32))
+    s = s * scale
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    m = s.max(axis=-1)
+    ptab = jnp.exp(s - m[..., None])
+    ptab = jnp.where((m > NEG_INF / 2)[..., None], ptab, 0.0)
+    l = ptab.sum(axis=-1)
+    o_t = jnp.einsum("bht,btr->bhr", ptab, ckv.astype(jnp.float32))
+    return o_t, m, l
+
+
+def mla_decode_partial(
+    p, q_nope, q_rope, cache_ckv, cache_krope, kv_positions, cur_len, cfg
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Absorbed-form partial decode vs a (possibly sharded) latent cache.
+
+    q_nope: (B,H,nope); q_rope: (B,H,rope)
+    cache_ckv: (B,T,r); cache_krope: (B,T,rope)
+    Returns (o_tilde (B,H,r), m (B,H), l (B,H)) — combined via pmax/psum.
+    This is the ``decode_partial_mla`` registry op's reference
+    formulation with the wk_b fold applied — no longer a private path.
+    """
+    q_abs, q_rope, scale = mla_absorbed_queries(p, q_nope, q_rope, cfg)
+    return mla_flash_decode_partial(q_abs, q_rope, cache_ckv,
+                                    cache_krope, kv_positions, cur_len,
+                                    scale=scale)
+
+
+# Registered split-operand decode contract (dist.decode combines the
+# partials across sequence shards): (q_abs (B,H,r) fp32, q_rope
+# (B,H,rope), c_kv/k_rope caches, cur_len) -> fp32 (o_tilde, m, l).
+
+@D.register("decode_partial_mla", "xla")
+def _decode_partial_mla_xla(q_abs, q_rope, c_kv, k_rope, cur_len,
+                            pos0=0, *, scale, tune=True):
+    T = c_kv.shape[1]
+    return mla_flash_decode_partial(q_abs, q_rope, c_kv, k_rope,
+                                    pos0 + jnp.arange(T), cur_len,
+                                    scale=scale)
+
+
+@D.register("decode_partial_mla", "pallas")
+def _decode_partial_mla_pallas(q_abs, q_rope, c_kv, k_rope, cur_len,
+                               pos0=0, *, scale, tune=True):
+    from repro.kernels import autotune, ops
+    if tune:
+        return ops.vwr_mla_flash_decode(q_abs, q_rope, c_kv, k_rope,
+                                        cur_len, pos0=pos0, scale=scale)
+    # tune=False (shard_map tracing): block size from the cost-model
+    # prior only — the measuring tuner must not fire inside shard_map
+    T, r = c_kv.shape[1], c_kv.shape[2]
+    rope = k_rope.shape[2]
+    dtype = str(c_kv.dtype)
+    cands = autotune.decode_candidates(T, r + rope, dtype)
+    bkv = min(cands, key=lambda c: autotune.decode_prior(
+        q_abs.shape[0], T, q_abs.shape[1], 1, r + rope, dtype, c))[0]
+    return ops.vwr_mla_flash_decode(q_abs, q_rope, c_kv, k_rope,
+                                    cur_len, pos0=pos0, scale=scale,
+                                    bkv=bkv)
+
+
+@D.register("decode_partial_mla_paged", "xla")
+def _decode_partial_mla_paged_xla(q_abs, q_rope, ckv_pool, krope_pool,
+                                  table, counts, *, scale,
+                                  page_size=None, max_pages=None,
+                                  tune=True):
+    return mla_paged_flash_decode_partial(q_abs, q_rope, ckv_pool,
+                                          krope_pool, table, counts,
+                                          scale=scale)
+
+
+@D.register("decode_partial_mla_paged", "pallas")
+def _decode_partial_mla_paged_pallas(q_abs, q_rope, ckv_pool,
+                                     krope_pool, table, counts, *,
+                                     scale, page_size=None,
+                                     max_pages=None, tune=True):
+    from repro.kernels import ops
+    return ops.vwr_mla_paged_flash_decode(q_abs, q_rope, ckv_pool,
+                                          krope_pool, table, counts,
+                                          scale=scale)
+
+
 def mla_absorbed_mqa(p, q_nope, q_rope, cache_ckv, cache_krope, cfg):
     """Absorbed MLA decode as an MQA flash-decode problem.
 
@@ -146,17 +272,20 @@ def mla_absorbed_mqa(p, q_nope, q_rope, cache_ckv, cache_krope, cfg):
         s   = [q_abs, q_rope] . [c_kv, k_rope]   (one shared KV head)
         o~  = p . [c_kv, 0]                       (values = latent part)
 
-    so MLA decode runs the very same ``decode_partial`` registry op —
-    XLA reference or VWR flash-decode kernel — and the very same
-    ``dist.decode`` sequence-sharded combine as GQA, instead of a
-    private einsum path.  The price of the uniform surface: the value
-    stream is zero-padded by rope_head_dim (64/576 ≈ 11% for V3), and
-    the two concats *materialize* k_cat/v_cat copies of the cache each
-    step (the concat operands feeding pallas_call/shard_map are not
-    fusion-eliminated), so per-token cache bytes are a small multiple
-    of the in-place einsum read.  A flash-decode kernel variant taking
-    the latent and rope caches as separate operands would remove both
-    costs (ROADMAP).
+    so MLA decode *can* run the very same ``decode_partial`` registry
+    op and ``dist.decode`` combine as GQA.  The price of the uniform
+    surface: the value stream is zero-padded by rope_head_dim (64/576
+    ≈ 11% for V3), and the two concats *materialize* k_cat/v_cat
+    copies of the cache each step (the concat operands feeding
+    pallas_call/shard_map are not fusion-eliminated), so per-token
+    cache bytes are 2*(r+rope) features/position instead of r+rope.
+
+    The production decode path therefore no longer uses this view: the
+    split-operand ``decode_partial_mla`` / ``decode_partial_mla_paged``
+    ops take the latent and rope caches as SEPARATE operands and stage
+    only live bytes.  This concatenated view is kept as the equivalence
+    reference — the split-vs-concat bit-exactness tests and the
+    ``mla_concat`` benchmark rows are built on it.
 
     q_nope: (B,H,nope); q_rope: (B,H,rope); cache_ckv: (B,T,r);
     cache_krope: (B,T,rope).  Returns (q_cat (B,H,r+rope) f32 —
@@ -174,6 +303,28 @@ def mla_absorbed_mqa(p, q_nope, q_rope, cache_ckv, cache_krope, cfg):
     k_cat = jnp.concatenate([cache_ckv, cache_krope], axis=-1)[:, :, None]
     v_cat = jnp.concatenate([cache_ckv, jnp.zeros_like(cache_krope)],
                             axis=-1)[:, :, None]
+    return q_cat, k_cat, v_cat, r
+
+
+def mla_concat_view(q_abs, q_rope, c_kv, k_rope, scale: float):
+    """Concatenated k_cat/v_cat view of the SPLIT decode operands —
+    equivalence reference only (tests, ``mla_concat`` benchmark rows).
+
+    q_abs: (B,H,r) fp32; q_rope: (B,H,rope); c_kv / k_rope: the latent
+    and rope caches with trailing feature dims — dense ``(B,T,...)``
+    and paged ``(n_pages, ps, ...)`` layouts both work.  Returns
+    (q_cat, k_cat, v_cat, r): q_cat is pre-scaled by
+    ``scale * sqrt(Dc)`` so the plain decode ops' 1/sqrt(Dc) nets to
+    the absorbed-MLA ``scale``; k_cat/v_cat grow a KV=1 head axis and
+    v_cat zero-pads the rope features.  Every site pinning
+    split-vs-concat equivalence must build the concat side HERE so the
+    baselines cannot drift apart."""
+    r = c_kv.shape[-1]
+    Dc = r + k_rope.shape[-1]
+    q_cat = jnp.concatenate([q_abs, q_rope], -1) * (scale * Dc ** 0.5)
+    k_cat = jnp.concatenate([c_kv, k_rope], -1)[..., None, :]
+    v_cat = jnp.concatenate([c_kv, jnp.zeros_like(k_rope)],
+                            -1)[..., None, :]
     return q_cat, k_cat, v_cat, r
 
 

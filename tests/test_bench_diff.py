@@ -1,0 +1,83 @@
+"""scripts/bench_diff.py: row matching + regression flagging."""
+import json
+import os
+import subprocess
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "scripts"))
+import bench_diff  # noqa: E402
+
+
+def _row(op, shape, us, note="n 42"):
+    return {"op": op, "shape": shape, "us": us, "note": note}
+
+
+def test_diff_flags_only_over_threshold_regressions():
+    old = [_row("matmul", "256x256x256", 100.0),
+           _row("decode", "4x2048", 50.0),
+           _row("mla_decode", "4x2048", 30.0, note="mla_split 99 B"),
+           _row("mla_decode", "4x2048", 80.0, note="mla_concat 11 B"),
+           _row("gone", "1x1", 5.0)]
+    new = [_row("matmul", "256x256x256", 115.0),      # +15%: flagged
+           _row("decode", "4x2048", 54.0),            # +8%: fine
+           # same (op, shape), disambiguated by digit-stripped note
+           _row("mla_decode", "4x2048", 31.0, note="mla_split 77 B"),
+           _row("mla_decode", "4x2048", 60.0, note="mla_concat 22 B"),
+           _row("added", "2x2", 7.0)]
+    res = bench_diff.diff(old, new, threshold=0.10)
+    assert [(e["op"], e["ratio"]) for e in res["regressions"]] == \
+        [("matmul", 1.15)]
+    assert [e["op"] for e in res["improvements"]] == ["mla_decode"]
+    assert res["only_old"] == [("gone", "1x1")]
+    assert res["only_new"] == [("added", "2x2")]
+
+
+def test_diff_pairs_colliding_keys_by_order():
+    """Rows whose digit-stripped notes collide (block-size sweeps) are
+    paired by emission order — a regression in the SECOND such row
+    must still be flagged, not silently dropped."""
+    old = [_row("vwr_matmul", "256x256x256", 100.0, note="b64x64x64"),
+           _row("vwr_matmul", "256x256x256", 100.0, note="b128x128x64"),
+           _row("vwr_matmul", "256x256x256", 100.0, note="b256x64x64")]
+    new = [_row("vwr_matmul", "256x256x256", 100.0, note="b64x64x64"),
+           _row("vwr_matmul", "256x256x256", 310.0, note="b128x128x64"),
+           _row("vwr_matmul", "256x256x256", 100.0, note="b256x64x64")]
+    res = bench_diff.diff(old, new, threshold=0.10)
+    assert [(e["note"], e["ratio"]) for e in res["regressions"]] == \
+        [("b128x128x64", 3.1)]
+    assert not res["only_old"] and not res["only_new"]
+
+
+def test_diff_ignores_untimed_rows():
+    old = [_row("engine", "a", None), _row("x", "s", 0)]
+    new = [_row("engine", "a", 99.0), _row("x", "s", 99.0)]
+    res = bench_diff.diff(old, new)
+    assert not res["regressions"] and not res["improvements"]
+
+
+def test_cli_self_diff_is_clean(tmp_path):
+    """A file diffed against itself reports nothing and exits 0 even
+    with --fail — the CI invariant."""
+    rows = [_row("matmul", "256x256x256", 100.0)]
+    p = tmp_path / "bench.json"
+    p.write_text(json.dumps(rows))
+    script = os.path.join(os.path.dirname(__file__), "..", "scripts",
+                          "bench_diff.py")
+    r = subprocess.run([sys.executable, script, str(p), str(p),
+                        "--fail"], capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "0 regression(s)" in r.stdout
+
+
+def test_cli_fail_flag_exits_nonzero(tmp_path):
+    old = tmp_path / "old.json"
+    new = tmp_path / "new.json"
+    old.write_text(json.dumps([_row("matmul", "s", 100.0)]))
+    new.write_text(json.dumps([_row("matmul", "s", 200.0)]))
+    script = os.path.join(os.path.dirname(__file__), "..", "scripts",
+                          "bench_diff.py")
+    r = subprocess.run([sys.executable, script, str(old), str(new),
+                        "--fail"], capture_output=True, text=True)
+    assert r.returncode == 1
+    assert "REGRESSION" in r.stdout

@@ -362,6 +362,80 @@ def test_serve_sharded_mla_decode_matches_local():
     """)
 
 
+def test_sharded_mla_split_matches_concat_view():
+    """Sequence-sharded split-operand MLA decode
+    (``sharded_mla_flash_decode``: latent + rope caches sharded as
+    separate operands, pmax/psum combine) matches the concatenated
+    k_cat/v_cat route through ``sharded_flash_decode`` numerically,
+    and a seq-sharded deepseek-style engine decodes token-for-token
+    like the same engine driven through the concat view — the
+    decode_shard='seq' leg of the split-vs-concat bit-exactness pins."""
+    _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.dist.decode import (sharded_flash_decode,
+                                   sharded_mla_flash_decode)
+    from repro.kernels import dispatch as D
+    from repro.models import mla as MLA
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    key = jax.random.PRNGKey(0)
+    B, H, r, rope, T = 2, 4, 16, 8, 64
+    ks = jax.random.split(key, 4)
+    q_abs = jax.random.normal(ks[0], (B, H, r))
+    q_rope = jax.random.normal(ks[1], (B, H, rope))
+    ckv = jax.random.normal(ks[2], (B, T, r))
+    krope = jax.random.normal(ks[3], (B, T, rope))
+    scale = 1.0 / (24 ** 0.5)
+    cur = jnp.int32(50)
+    for backend in ("xla", "pallas"):
+        got = sharded_mla_flash_decode(mesh, q_abs, q_rope, ckv, krope,
+                                       cur, scale=scale,
+                                       backend=backend)
+        q_cat, k_cat, v_cat, _ = MLA.mla_concat_view(q_abs, q_rope,
+                                                     ckv, krope, scale)
+        want = sharded_flash_decode(mesh, q_cat, k_cat, v_cat, cur,
+                                    backend=backend)[..., :r]
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5,
+                                   err_msg=backend)
+
+    # engine level: seq-sharded deepseek-style generation, split path
+    # vs the concat view re-registered over the split op
+    from repro.configs import get_config, reduced
+    from repro.engine import DecodeEngine, EngineConfig
+
+    cfg = reduced(get_config("deepseek-v3-671b"))
+    B, P, G = 2, 16, 8
+    eng = DecodeEngine(cfg, EngineConfig(batch=B, max_len=P + G,
+                                         mesh_shape=(2, 4),
+                                         decode_shard="seq"))
+    toks = jax.random.randint(key, (B, P), 0, cfg.vocab)
+    got, _ = eng.generate({"tokens": toks}, gen=G)
+
+    def concat_partial(q_abs, q_rope, c_kv, k_rope, cur_len, pos0=0, *,
+                       scale, tune=True):
+        q_cat, k_cat, v_cat, r = MLA.mla_concat_view(q_abs, q_rope,
+                                                     c_kv, k_rope,
+                                                     scale)
+        o_t, m, l = D.dispatch("decode_partial", "xla", q_cat, k_cat,
+                               v_cat, cur_len, pos0)
+        return o_t[..., :r], m, l
+
+    saved = dict(D._REGISTRY["decode_partial_mla"])
+    D.register("decode_partial_mla", "xla")(concat_partial)
+    try:
+        eng_c = DecodeEngine(cfg, EngineConfig(batch=B, max_len=P + G,
+                                               mesh_shape=(2, 4),
+                                               decode_shard="seq"),
+                             params=eng.params)
+        want, _ = eng_c.generate({"tokens": toks}, gen=G)
+    finally:
+        D._REGISTRY["decode_partial_mla"] = saved
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    print("ok")
+    """)
+
+
 def test_engine_sharded_decode_no_ambient_mesh():
     """DecodeEngine on a (2,4) mesh with a sequence-sharded cache:
     generation runs end to end with the mesh passed explicitly, and the
