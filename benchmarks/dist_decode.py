@@ -349,6 +349,53 @@ rows.append({
              "us_ref = dense engine step"),
     "collective_bytes": coll_p,
 })
+# ---- scheduler pick: one fused (3,B) transfer vs per-slot syncs ------
+# The fault-tolerant scheduler computes every slot's token choice
+# (greedy argmax, seeded categorical, isfinite guard) in one jitted
+# call and crosses the device boundary as a single (3, B) int32 stack;
+# the naive loop pays 3 separate device->host round-trips per slot.
+import numpy as np
+from repro.engine.scheduler import Scheduler
+
+B_, V = 8, 4096
+lg = jax.random.normal(key, (B_, V))
+seeds = jnp.arange(B_, dtype=jnp.int32)
+steps = jnp.full((B_,), 3, jnp.int32)
+temps = jnp.full((B_,), 0.7, jnp.float32)
+pick = jax.jit(Scheduler._pick)
+
+
+def batched():
+    return np.asarray(pick(lg, seeds, steps, temps))
+
+
+def per_slot():
+    out = []
+    for b in range(B_):
+        k = jax.random.fold_in(jax.random.PRNGKey(b), 3)
+        out.append(int(jnp.argmax(lg[b])))
+        out.append(int(jax.random.categorical(k, lg[b] / 0.7)))
+        out.append(bool(jnp.all(jnp.isfinite(lg[b]))))
+    return out
+
+
+fused = batched()
+loop = per_slot()
+assert [int(x) for x in fused[0]] == loop[0::3]      # greedy agrees
+assert [int(x) for x in fused[1]] == loop[1::3]      # sampled agrees
+t_fused = timed(batched)
+t_loop = timed(per_slot)
+rows.append({
+    "op": "sched_pick", "shape": f"{B_}x{V}",
+    "us": round(t_fused, 1), "us_ref": round(t_loop, 1),
+    "flops": None, "staged_bytes": 3 * B_ * 4,
+    "arith_intensity": None,
+    "note": (f"batched pick: 1 fused (3,{B_}) int32 transfer/step vs "
+             f"{3 * B_} per-slot device syncs (us_ref = per-slot "
+             "loop); sampled/greedy streams bit-identical"),
+    "collective_bytes": None,
+})
+
 print("JSON:" + json.dumps(rows))
 """
 
@@ -388,7 +435,8 @@ def dist_decode_bench(json_path="BENCH_kernels.json"):
                                            "engine_decode_paged",
                                            "mla_decode",
                                            "mla_decode_paged",
-                                           "paged_decode_bucketed")]
+                                           "paged_decode_bucketed",
+                                           "sched_pick")]
         existing.extend(rows)
         with open(json_path, "w") as f:
             json.dump(existing, f, indent=1)

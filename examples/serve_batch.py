@@ -7,6 +7,11 @@ prefill/decode steps; generation is three calls.
     PYTHONPATH=src python examples/serve_batch.py            # batch decode
     PYTHONPATH=src python examples/serve_batch.py --stream   # continuous
                                                              # batching
+    PYTHONPATH=src python examples/serve_batch.py --stream --inject
+                                          # + chaos leg: injected NaN /
+                                          # transient fault / pool
+                                          # pressure; survivors must be
+                                          # bit-identical
     # any paged-family text arch (dense/vlm/moe — recurrent ssm/hybrid
     # state doesn't page, and the audio demo would need frontend_emb),
     # e.g. the deepseek-style MLA config (paged split-operand MLA
@@ -78,8 +83,66 @@ def stream_demo():
     print("stream example OK")
 
 
+def inject_demo():
+    """Chaos leg: the same staggered stream, but with a NaN-poisoned
+    slot, a transient decode exception, and artificial page-pool
+    pressure injected (``engine.faults``).  The stream still completes:
+    only the poisoned request ends FAILED (keeping its pre-fault token
+    prefix), the transient fault heals through one bounded retry, and
+    every surviving stream is bit-identical to the fault-free run."""
+    from repro.engine import RequestStatus, faults
+
+    cfg = reduced(get_config(_model_arg()))
+    engine = DecodeEngine(cfg, EngineConfig(
+        batch=2, max_len=48, paged=True, page_size=8,
+        mesh_shape=(1, 1), kernel_impl="xla",
+    ))
+    rng = np.random.default_rng(0)
+    specs = [(24, 4), (16, 12), (8, 6)]
+    prompts = [rng.integers(2, cfg.vocab, (p,)).astype(np.int32)
+               for p, _ in specs]
+
+    def run(with_faults):
+        sched = Scheduler(engine)
+        release = None
+        if with_faults:
+            faults.inject(sched, decode_faults=[
+                faults.NonFiniteLogits(step=1, slot=0),
+                faults.TransientError(step=4)])
+            release = faults.hold_pages(sched, 1)
+        for i, (_, g) in enumerate(specs):
+            sched.submit(Request(rid=f"req{i}", tokens=prompts[i],
+                                 gen=g))
+        out = sched.run()
+        if release is not None:
+            release()
+        return sched, out
+
+    _, clean = run(False)
+    sched, out = run(True)
+    assert set(out) == set(clean)
+    # the poisoned slot held req0: it fails with its pre-fault prefix
+    assert out["req0"].status is RequestStatus.FAILED
+    assert "non-finite" in out["req0"].error
+    assert np.array_equal(out["req0"],
+                          np.asarray(clean["req0"])[:len(out["req0"])])
+    # the transient fault healed through one bounded retry, and the
+    # survivors' streams never diverged
+    assert sched.stats["step_retries"] == 1
+    for rid in ("req1", "req2"):
+        assert out[rid].ok
+        assert np.array_equal(out[rid], clean[rid])
+    assert sched.allocator.free_pages == engine.n_pages
+    print(f"[inject] {cfg.name}: req0 FAILED at the injected NaN "
+          f"(kept {len(out['req0'])} pre-fault tokens), 1 step retry, "
+          "survivors bit-identical to the fault-free stream")
+    print("inject example OK")
+
+
 if "--stream" in sys.argv:
     stream_demo()
+    if "--inject" in sys.argv:
+        inject_demo()
     sys.exit(0)
 
 B, P, G = 4, 32, 16

@@ -5,14 +5,19 @@ PartitionSpecs and the jitted step functions; ``pad_cache_from_prefill``
 is the prefill->decode cache handoff it (and ``launch.serve``) uses.
 With ``EngineConfig(paged=True)`` the cache is a paged page pool +
 block tables (``engine.paged_cache``) and ``Scheduler`` / ``Request``
-run request-level continuous batching on top of it.
+run request-level continuous batching on top of it — every request
+walks the ``RequestStatus`` lifecycle and terminates as a
+``RequestResult`` (tokens + status/error), with deterministic fault
+injectors in ``engine.faults``.
 """
 from repro.engine.cache import pad_cache_from_prefill
 from repro.engine.engine import DecodeEngine, EngineConfig
 from repro.engine.paged_cache import (PageAllocator, PagePoolExhausted,
                                       bucket_table_width)
-from repro.engine.scheduler import Request, Scheduler
+from repro.engine.scheduler import (Request, RequestResult, RequestStatus,
+                                    Scheduler)
 
 __all__ = ["DecodeEngine", "EngineConfig", "pad_cache_from_prefill",
-           "PageAllocator", "PagePoolExhausted", "Request", "Scheduler",
+           "PageAllocator", "PagePoolExhausted", "Request",
+           "RequestResult", "RequestStatus", "Scheduler",
            "bucket_table_width"]

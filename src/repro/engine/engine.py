@@ -248,8 +248,15 @@ class DecodeEngine:
 
     def generate(self, batch: Dict[str, Any], gen: int,
                  temperature: float = 0.0, seed: int = 0,
+                 check_finite: bool = False,
                  ) -> Tuple[jax.Array, Dict[str, float]]:
         """Prefill + ``gen`` greedy (or sampled) decode steps.
+
+        ``check_finite=True`` validates every step's logits and raises
+        ``engine.faults.NonFiniteLogitsError`` on NaN/inf instead of
+        silently emitting a corrupt stream (it costs one host sync per
+        step; the scheduler's batched guard is the serving-path
+        equivalent).
 
         Returns (tokens (B, gen) int32, stats with prefill/decode wall
         times and tok/s)."""
@@ -290,6 +297,10 @@ class DecodeEngine:
         for i in range(gen - 1):
             logits, cache = self.decode_step(
                 tok, prefill_tokens + i, cache, block_table=block_table)
+            if check_finite and not bool(jnp.all(jnp.isfinite(logits))):
+                from repro.engine.faults import NonFiniteLogitsError
+                raise NonFiniteLogitsError(
+                    f"non-finite logits at decode step {i}")
             tok = pick(logits, i)
             out.append(tok)
         jax.block_until_ready(tok)

@@ -1,0 +1,167 @@
+"""Deterministic fault injection for the paged serving path.
+
+At serving scale faults are the steady state: a flaky interconnect
+throws mid-step, a numerically cursed request drives logits to NaN, a
+co-tenant eats the page pool, a degraded host turns every step into a
+straggler.  The scheduler's fault handling (quarantine, bounded retry,
+preemption watchdog, straggler flagging — see ``engine.scheduler``) is
+only trustworthy if those faults can be reproduced *deterministically*
+in tests, so this module injects them on a fixed schedule keyed by the
+step-function call index:
+
+  * ``NonFiniteLogits(step, slot)``  — the wrapped decode/prefill call
+    number ``step`` returns logits with ``slot``'s row set to NaN/inf
+    (the scheduler's isfinite guard must quarantine exactly that slot);
+  * ``TransientError(step, count)``  — calls [step, step+count) raise
+    ``InjectedFault`` *before* touching the device (the scheduler's
+    bounded retry re-invokes; the call index advances, so a transient
+    fault heals and a persistent one — large ``count`` — exhausts the
+    retry budget and surfaces);
+  * ``SlowStep(step, delay_s)``      — call ``step`` sleeps first (the
+    StragglerMonitor must flag it);
+  * ``hold_pages(sched, n)``         — artificial pool pressure: n
+    pages vanish from the allocator until the returned ``release()``
+    is called (admission serializes / growth preempts — graceful
+    degradation instead of a dead stream).
+
+``inject(sched, decode_faults=..., prefill_faults=...)`` wraps the
+scheduler's engine in a delegating proxy, so the engine object itself
+(possibly shared with other schedulers) is never mutated.
+``random_plan(seed, ...)`` draws a reproducible chaos schedule for
+soak-style runs — same seed, same faults.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class InjectedFault(RuntimeError):
+    """The exception ``TransientError`` injections raise."""
+
+
+class NonFiniteLogitsError(RuntimeError):
+    """Raised by ``DecodeEngine.generate(check_finite=True)`` when a
+    decode step produces NaN/inf logits."""
+
+
+@dataclasses.dataclass
+class NonFiniteLogits:
+    """Corrupt one slot's logits at wrapped-call index ``step``."""
+    step: int
+    slot: int = 0
+    value: float = float("nan")
+
+
+@dataclasses.dataclass
+class TransientError:
+    """Raise ``InjectedFault`` on wrapped-call indices
+    [step, step + count) — count=1 is a transient blip a single retry
+    heals; a large count models a persistent fault."""
+    step: int
+    count: int = 1
+    message: str = "injected transient fault"
+
+
+@dataclasses.dataclass
+class SlowStep:
+    """Sleep ``delay_s`` before wrapped-call index ``step`` (straggler)."""
+    step: int
+    delay_s: float = 0.25
+
+
+Fault = object   # NonFiniteLogits | TransientError | SlowStep
+
+
+class FaultyStepFn:
+    """Wraps a jitted step function with a deterministic fault schedule
+    keyed by call index (``.calls``).  Note retries advance the call
+    index: attempt k+1 of a step is call index k+1, which is exactly
+    how a transient fault heals on retry."""
+
+    def __init__(self, fn: Callable, faults: Sequence[Fault] = ()):
+        self.fn = fn
+        self.faults = list(faults)
+        self.calls = 0
+        self.injected = 0
+
+    def __call__(self, params, batch):
+        k = self.calls
+        self.calls += 1
+        for f in self.faults:
+            if isinstance(f, SlowStep) and f.step == k:
+                self.injected += 1
+                time.sleep(f.delay_s)
+            elif isinstance(f, TransientError) \
+                    and f.step <= k < f.step + f.count:
+                self.injected += 1
+                raise InjectedFault(f"{f.message} (call {k})")
+        out = self.fn(params, batch)
+        logits, cache = out
+        for f in self.faults:
+            if isinstance(f, NonFiniteLogits) and f.step == k:
+                self.injected += 1
+                logits = jnp.asarray(logits).at[f.slot].set(f.value)
+        return logits, cache
+
+
+class FaultyEngine:
+    """Delegating engine proxy with fault-wrapped step functions: the
+    underlying (possibly shared) engine is never mutated."""
+
+    def __init__(self, eng, decode_faults: Sequence[Fault] = (),
+                 prefill_faults: Sequence[Fault] = ()):
+        self._eng = eng
+        self.decode_fn = FaultyStepFn(eng.decode_fn, decode_faults)
+        self.prefill_fn = FaultyStepFn(eng.prefill_fn, prefill_faults)
+
+    def __getattr__(self, name):
+        return getattr(self._eng, name)
+
+
+def inject(sched, decode_faults: Sequence[Fault] = (),
+           prefill_faults: Sequence[Fault] = ()) -> FaultyEngine:
+    """Point ``sched`` at a fault-wrapped proxy of its engine and
+    return the proxy (``proxy.decode_fn.injected`` counts fired
+    faults)."""
+    sched.eng = FaultyEngine(sched.eng, decode_faults, prefill_faults)
+    return sched.eng
+
+
+def hold_pages(sched_or_allocator, n: int) -> Callable[[], None]:
+    """Artificial pool pressure: allocate ``n`` pages out of the
+    scheduler's pool so real requests see a smaller pool.  Returns a
+    ``release()`` callable (idempotent) that gives them back."""
+    alloc = getattr(sched_or_allocator, "allocator", sched_or_allocator)
+    pages = alloc.alloc(n)
+    released = [False]
+
+    def release() -> None:
+        if not released[0]:
+            released[0] = True
+            alloc.free(pages)
+    return release
+
+
+def random_plan(seed: int, n_steps: int, slots: int = 1,
+                p_nonfinite: float = 0.02, p_transient: float = 0.02,
+                p_slow: float = 0.0, slow_delay_s: float = 0.25,
+                ) -> List[Fault]:
+    """A reproducible chaos schedule: per step, independently draw each
+    fault kind with the given probabilities (same seed -> same plan)."""
+    rng = np.random.default_rng(seed)
+    plan: List[Fault] = []
+    for k in range(n_steps):
+        if rng.random() < p_nonfinite:
+            plan.append(NonFiniteLogits(
+                step=k, slot=int(rng.integers(slots)),
+                value=float(rng.choice([np.nan, np.inf, -np.inf]))))
+        if rng.random() < p_transient:
+            plan.append(TransientError(step=k))
+        if p_slow and rng.random() < p_slow:
+            plan.append(SlowStep(step=k, delay_s=slow_delay_s))
+    return plan

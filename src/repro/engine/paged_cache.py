@@ -207,11 +207,18 @@ class PagePoolExhausted(RuntimeError):
 
 class PageAllocator:
     """Free-list over physical page ids [0, n_pages).  Pure host state:
-    the device only ever sees the resulting block tables."""
+    the device only ever sees the resulting block tables.
+
+    Every handed-out page is tracked in an owned set, so ``free`` can
+    reject a double free and a page it never handed out as *different*
+    faults, and ``check()`` can assert the pool invariant
+    (owned ∪ free == all pages, owned ∩ free == ∅) at any point — the
+    chaos / property tests call it after every scheduler transition."""
 
     def __init__(self, n_pages: int):
         self.n_pages = int(n_pages)
         self._free: List[int] = list(range(self.n_pages - 1, -1, -1))
+        self._owned: set = set()
 
     @property
     def free_pages(self) -> int:
@@ -229,12 +236,40 @@ class PageAllocator:
                 f"(evict a request or raise n_pages / EngineConfig."
                 f"page_size)")
         out = [self._free.pop() for _ in range(n)]
+        self._owned.update(out)
         return out
 
     def free(self, pages: Sequence[int]) -> None:
+        seen: set = set()
         for p in pages:
             if not 0 <= p < self.n_pages:
                 raise ValueError(f"freeing invalid page id {p}")
-            if p in self._free:
-                raise ValueError(f"double free of page {p}")
+            if p in seen:
+                raise ValueError(f"double free of page {p} within one "
+                                 "free() call")
+            if p not in self._owned:
+                raise ValueError(
+                    f"double free of page {p}: not currently handed "
+                    "out (already freed, or never allocated)")
+            seen.add(p)
+        for p in pages:
+            self._owned.discard(p)
         self._free.extend(pages)
+
+    def check(self) -> bool:
+        """Validate the pool invariant; raises ``ValueError`` on any
+        violation, returns True otherwise."""
+        free = set(self._free)
+        if len(free) != len(self._free):
+            raise ValueError("free list contains duplicate page ids")
+        overlap = free & self._owned
+        if overlap:
+            raise ValueError(f"pages both free and owned: "
+                             f"{sorted(overlap)}")
+        universe = free | self._owned
+        if universe != set(range(self.n_pages)):
+            raise ValueError(
+                f"page leak: owned ∪ free covers {len(universe)} of "
+                f"{self.n_pages} pages "
+                f"(missing {sorted(set(range(self.n_pages)) - universe)})")
+        return True

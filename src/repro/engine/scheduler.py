@@ -25,6 +25,32 @@ paged decode step as a *slot machine* instead:
            the next pending request is admitted on the following
            ``admit()`` — short requests stop paying for long ones.
 
+Request lifecycle (fault tolerance).  Every request walks a status
+machine::
+
+    PENDING -> RUNNING -> FINISHED
+       |          |-> PREEMPTED -> (RUNNING again)
+       |          |-> FAILED      (non-finite logits, prefill fault)
+       |          |-> TIMED_OUT   (deadline_s / max_steps)
+       |          `-> CANCELLED   (cancel(rid) mid-flight)
+       |-> REJECTED               (over budget, pool can never fit it)
+       |-> CANCELLED / TIMED_OUT  (while still queued)
+
+and every terminal state lands in ``finished`` as a ``RequestResult``
+— an int32 token array (so existing callers index/compare it exactly
+as before) carrying ``status`` / ``error`` / ``latency_s``.  Faults
+are contained per-request: a malformed request is REJECTED instead of
+raising away the stream, a slot whose logits go NaN/inf is
+quarantined (FAILED) while the other slots' token streams stay
+bit-identical, a transient step exception is retried with bounded
+backoff (``runtime.resilience.RetryPolicy``), and a slot preempted
+more than ``max_preemptions`` times is *parked* — kept out of
+admission until the pool quiets down — instead of thrashing the
+admit→preempt loop.  ``runtime.resilience.StragglerMonitor`` /
+``Heartbeat`` can ride the step loop for slow-step flagging and
+external hang detection.  Deterministic fault injectors for all of
+this live in ``engine.faults``.
+
 Token streams are bit-identical to a solo ``engine.generate`` run of
 the same request (first token = argmax of the prefill logits; sampled
 step i uses ``fold_in(PRNGKey(seed), i)``), which the paged-vs-dense
@@ -39,6 +65,8 @@ of the current step.
 from __future__ import annotations
 
 import dataclasses
+import enum
+import time
 from collections import deque
 from typing import Any, Dict, List, Optional
 
@@ -48,19 +76,91 @@ import numpy as np
 
 from repro.engine.paged_cache import (PageAllocator, PagePoolExhausted,
                                       bucket_table_width, write_prefill)
+from repro.runtime.resilience import (Heartbeat, RetryPolicy,
+                                      StragglerMonitor, call_with_retries,
+                                      percentiles)
+
+
+class RequestStatus(str, enum.Enum):
+    """Request lifecycle states (terminal: FINISHED / REJECTED /
+    FAILED / CANCELLED / TIMED_OUT)."""
+    PENDING = "PENDING"
+    RUNNING = "RUNNING"
+    PREEMPTED = "PREEMPTED"
+    FINISHED = "FINISHED"
+    REJECTED = "REJECTED"
+    FAILED = "FAILED"
+    CANCELLED = "CANCELLED"
+    TIMED_OUT = "TIMED_OUT"
+
+
+TERMINAL_STATES = frozenset({
+    RequestStatus.FINISHED, RequestStatus.REJECTED, RequestStatus.FAILED,
+    RequestStatus.CANCELLED, RequestStatus.TIMED_OUT})
+
+
+class RequestResult(np.ndarray):
+    """The tokens of a terminal request, plus how it ended.
+
+    An int32 ndarray view, so every pre-lifecycle caller keeps working
+    (``len(result)``, ``result[:k]``, ``assert_array_equal``), with
+    ``status`` (RequestStatus), ``error`` (reason string for
+    non-FINISHED terminals) and ``latency_s`` (submit -> terminal wall
+    time) riding along."""
+
+    def __new__(cls, tokens, status: RequestStatus,
+                error: Optional[str] = None,
+                latency_s: Optional[float] = None):
+        obj = np.asarray(tokens, np.int32).view(cls)
+        obj.status = status
+        obj.error = error
+        obj.latency_s = latency_s
+        return obj
+
+    def __array_finalize__(self, obj):
+        if obj is None:
+            return
+        self.status = getattr(obj, "status", None)
+        self.error = getattr(obj, "error", None)
+        self.latency_s = getattr(obj, "latency_s", None)
+
+    @property
+    def tokens(self) -> np.ndarray:
+        return np.asarray(self)
+
+    @property
+    def ok(self) -> bool:
+        return self.status is RequestStatus.FINISHED
+
+    def __repr__(self):
+        st = getattr(self, "status", None)
+        err = getattr(self, "error", None)
+        return (f"RequestResult({np.asarray(self).tolist()}, "
+                f"status={getattr(st, 'value', st)}"
+                + (f", error={err!r}" if err else "") + ")")
 
 
 @dataclasses.dataclass
 class Request:
     """One generation request.  ``tokens`` is the (P,) int32 prompt;
     ``gen`` counts generated tokens (prefill argmax included);
-    ``frontend_emb`` feeds the vlm/audio modality frontends."""
+    ``frontend_emb`` feeds the vlm/audio modality frontends.
+
+    ``deadline_s`` (wall seconds from ``submit()``) and ``max_steps``
+    (decode steps) bound the request; crossing either ends it
+    TIMED_OUT with the tokens generated so far.  ``status`` / ``error``
+    are scheduler-owned lifecycle fields."""
     rid: Any
     tokens: np.ndarray
     gen: int
     temperature: float = 0.0
     seed: int = 0
     frontend_emb: Optional[np.ndarray] = None
+    deadline_s: Optional[float] = None
+    max_steps: Optional[int] = None
+    status: RequestStatus = RequestStatus.PENDING
+    error: Optional[str] = None
+    submit_t: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -71,6 +171,7 @@ class _Slot:
     out: List[int]                  # generated tokens so far
     steps: int = 0                  # decode steps taken (RNG fold_in)
     order: int = 0                  # admission sequence (LIFO preempt)
+    preempts: int = 0               # times evicted (livelock watchdog)
 
 
 class Scheduler:
@@ -89,10 +190,31 @@ class Scheduler:
     jitted step compiles once per bucket (at most log2(max_pages)+1
     shapes).  Admission / growth / retirement semantics and the token
     streams are identical either way — only the staged table width
-    changes."""
+    changes.
+
+    Fault-tolerance knobs:
+
+    ``retry``            RetryPolicy for transient prefill/decode step
+                         exceptions (bounded, linear backoff; the last
+                         exception re-raises once spent).
+    ``max_preemptions``  a slot evicted more than this many times is
+                         parked (kept out of admission until the pool
+                         quiets) instead of thrashing admit→preempt.
+    ``guard_nonfinite``  batched isfinite guard on the step logits:
+                         a slot producing NaN/inf is quarantined
+                         (FAILED) alone; survivors are untouched.
+    ``straggler`` / ``heartbeat``  optional
+                         ``runtime.resilience`` monitors wired into
+                         every ``step()``.
+    """
 
     def __init__(self, engine, enc_len: Optional[int] = None,
-                 bucket_tables: bool = True):
+                 bucket_tables: bool = True,
+                 retry: Optional[RetryPolicy] = None,
+                 max_preemptions: int = 3,
+                 guard_nonfinite: bool = True,
+                 straggler: Optional[StragglerMonitor] = None,
+                 heartbeat: Optional[Heartbeat] = None):
         if not engine.ecfg.paged:
             raise ValueError(
                 "Scheduler needs a paged engine: EngineConfig("
@@ -111,11 +233,22 @@ class Scheduler:
         self.enc_budget = (self.cache["cross_k"].shape[2]
                            if self.cfg.family == "audio" else 0)
         self.bucket_tables = bucket_tables
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.max_preemptions = max_preemptions
+        self.guard_nonfinite = guard_nonfinite
+        self.straggler = straggler
+        self.heartbeat = heartbeat
         self.pending: deque = deque()   # Request | preempted _Slot
-        self.finished: Dict[Any, np.ndarray] = {}
+        self.parked: deque = deque()    # watchdog-parked _Slots
+        self.finished: Dict[Any, RequestResult] = {}
         self.stats = {"prefills": 0, "admitted": 0, "retired": 0,
                       "steps": 0, "peak_pages": 0, "preempted": 0,
-                      "table_widths": {}}   # width -> steps at it
+                      "table_widths": {},   # width -> steps at it
+                      "rejected": 0, "failed": 0, "cancelled": 0,
+                      "timed_out": 0, "step_retries": 0,
+                      "prefill_retries": 0, "parked": 0,
+                      "straggler_flags": 0}
+        self._latencies: List[float] = []
         self._order = 0
         # jitted prefill->pages scatter with the pool DONATED (where
         # the backend supports donation): the eager .at[].set would
@@ -126,6 +259,25 @@ class Scheduler:
                 enc_caches_slots=slots),
             donate_argnums=(() if jax.default_backend() == "cpu"
                             else (0,)))
+        # one jitted pick for the whole batch: greedy argmax, per-slot
+        # fold_in-keyed categorical, and the isfinite guard, packed
+        # into a single (3, B) int32 array -> ONE device->host transfer
+        # per step (the per-slot categorical used to sync once per
+        # sampled slot)
+        self._pick_fn = jax.jit(self._pick)
+
+    @staticmethod
+    def _pick(logits, seeds, steps, temps):
+        keys = jax.vmap(lambda s, i: jax.random.fold_in(
+            jax.random.PRNGKey(s), i))(seeds, steps)
+        safe_t = jnp.where(temps > 0, temps, 1.0)
+        sampled = jax.vmap(lambda k, l, t: jax.random.categorical(
+            k, l / t))(keys, logits, safe_t)
+        greedy = jnp.argmax(logits, -1)
+        finite = jnp.all(jnp.isfinite(logits), -1)
+        return jnp.stack([greedy.astype(jnp.int32),
+                          sampled.astype(jnp.int32),
+                          finite.astype(jnp.int32)])
 
     # ------------------------------------------------------------------
 
@@ -134,7 +286,106 @@ class Scheduler:
         return sum(s is not None for s in self.slots)
 
     def submit(self, req: Request) -> None:
+        req.status = RequestStatus.PENDING
+        req.submit_t = time.monotonic()
         self.pending.append(req)
+
+    def results(self) -> Dict[Any, RequestResult]:
+        return dict(self.finished)
+
+    def latency_percentiles(self, qs=(50, 90, 99)) -> Dict[str, float]:
+        """Submit -> terminal wall-latency percentiles over every
+        terminal request so far."""
+        return percentiles(self._latencies, qs)
+
+    # ------------------------------------------------------------------
+    # terminal transitions
+    # ------------------------------------------------------------------
+
+    def _terminal(self, req: Request, tokens, status: RequestStatus,
+                  error: Optional[str] = None) -> RequestResult:
+        lat = (time.monotonic() - req.submit_t
+               if req.submit_t is not None else None)
+        req.status = status
+        req.error = error
+        res = RequestResult(np.asarray(list(tokens), np.int32), status,
+                            error=error, latency_s=lat)
+        self.finished[req.rid] = res
+        if lat is not None:
+            self._latencies.append(lat)
+        key = {RequestStatus.FINISHED: "retired",
+               RequestStatus.REJECTED: "rejected",
+               RequestStatus.FAILED: "failed",
+               RequestStatus.CANCELLED: "cancelled",
+               RequestStatus.TIMED_OUT: "timed_out"}[status]
+        self.stats[key] += 1
+        return res
+
+    def _evict(self, slot_id: int) -> _Slot:
+        """Free a slot's pages + batch-row state (no terminal record)."""
+        slot = self.slots[slot_id]
+        if slot.pages:
+            self.allocator.free(slot.pages)
+            slot.pages = []
+        self.slots[slot_id] = None
+        self.lens[slot_id] = 0
+        self.tokens[slot_id] = 0
+        self.enc_lens[slot_id] = 0
+        return slot
+
+    def _retire(self, slot_id: int) -> None:
+        slot = self._evict(slot_id)
+        self._terminal(slot.req, slot.out, RequestStatus.FINISHED)
+
+    def _fail_slot(self, slot_id: int, reason: str) -> None:
+        slot = self._evict(slot_id)
+        self._terminal(slot.req, slot.out, RequestStatus.FAILED, reason)
+
+    def _preempt(self, slot_id: int) -> None:
+        """Evict an active slot back to the FRONT of the pending queue
+        (vLLM-style recompute preemption): its pages free immediately
+        and its prompt + generated prefix is teacher-forced back in at
+        re-admission, so no tokens are lost — only the prefix compute
+        is redone.  A slot past ``max_preemptions`` is parked instead:
+        re-admitting it just feeds the same thrash, so it waits out the
+        pool pressure (re-admitted when nothing else is runnable)."""
+        slot = self._evict(slot_id)
+        slot.preempts += 1
+        slot.req.status = RequestStatus.PREEMPTED
+        if slot.preempts > self.max_preemptions:
+            self.parked.append(slot)
+            self.stats["parked"] += 1
+        else:
+            self.pending.appendleft(slot)
+        self.stats["preempted"] += 1
+
+    def cancel(self, rid: Any) -> bool:
+        """Cancel a request wherever it is: mid-flight (slot + pages
+        freed immediately, partial tokens attached), pending, or
+        parked.  Returns False if ``rid`` is unknown or already
+        terminal."""
+        for slot_id, slot in enumerate(self.slots):
+            if slot is not None and slot.req.rid == rid:
+                slot = self._evict(slot_id)
+                self._terminal(slot.req, slot.out,
+                               RequestStatus.CANCELLED,
+                               "cancelled mid-flight")
+                return True
+        for q, where in ((self.pending, "pending"),
+                         (self.parked, "parked")):
+            for item in list(q):
+                req = item.req if isinstance(item, _Slot) else item
+                if req.rid == rid:
+                    q.remove(item)
+                    toks = item.out if isinstance(item, _Slot) else []
+                    self._terminal(req, toks, RequestStatus.CANCELLED,
+                                   f"cancelled while {where}")
+                    return True
+        return False
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
 
     def _prefill_positions(self, req: Request) -> int:
         P = len(req.tokens)
@@ -150,12 +401,42 @@ class Scheduler:
         last = positions + 1 if more_writes else positions
         return -(-last // self.page_size)
 
+    def _deadline_expired(self, req: Request) -> bool:
+        return (req.deadline_s is not None
+                and req.submit_t is not None
+                and time.monotonic() - req.submit_t > req.deadline_s)
+
+    def _validate(self, req: Request) -> Optional[str]:
+        """Admission-blocking fault in ``req``, or None if admissible."""
+        P = self._prefill_positions(req)
+        if P + req.gen - 1 > self.eng.ecfg.max_len:
+            return (f"prompt {P} + gen {req.gen} exceeds engine "
+                    f"max_len {self.eng.ecfg.max_len}")
+        if (self.cfg.family == "audio"
+                and req.frontend_emb is not None
+                and req.frontend_emb.shape[0] > self.enc_budget):
+            return (f"{req.frontend_emb.shape[0]} encoder frames "
+                    f"exceed the cross-cache budget {self.enc_budget} "
+                    "— construct the Scheduler with enc_len >= the "
+                    "longest expected frontend_emb")
+        return None
+
     def admit(self) -> int:
         """Admit pending requests (or preempted slots) into free slots
         while pages allow.  Returns the number admitted (0 = no free
         slot, nothing pending, or the pool is momentarily too full —
         retiring slots frees pages, so admission retries on the next
-        call)."""
+        call).
+
+        Malformed requests (over-budget prompt, encoder frames beyond
+        the cross-cache budget, a single request larger than the whole
+        pool) are REJECTED individually — the stream keeps serving —
+        and a request whose deadline lapsed while queued ends
+        TIMED_OUT here instead of wasting a prefill."""
+        if (self.n_active == 0 and not self.pending and self.parked):
+            # nothing else runnable: the parked slots get their turn
+            while self.parked:
+                self.pending.append(self.parked.popleft())
         admitted = 0
         while self.pending:
             try:
@@ -164,39 +445,46 @@ class Scheduler:
                 break
             item = self.pending[0]
             req = item.req if isinstance(item, _Slot) else item
+            partial = item.out if isinstance(item, _Slot) else []
+            if self._deadline_expired(req):
+                self.pending.popleft()
+                self._terminal(req, partial, RequestStatus.TIMED_OUT,
+                               f"deadline_s={req.deadline_s} lapsed "
+                               "while queued")
+                continue
+            fault = self._validate(req)
+            if fault is not None:
+                self.pending.popleft()
+                self._terminal(req, partial, RequestStatus.REJECTED,
+                               fault)
+                continue
             P = self._prefill_positions(req)
-            if P + req.gen - 1 > self.eng.ecfg.max_len:
-                raise ValueError(
-                    f"request {req.rid!r}: prompt {P} + gen {req.gen} "
-                    f"exceeds engine max_len {self.eng.ecfg.max_len}")
-            if (self.cfg.family == "audio"
-                    and req.frontend_emb is not None
-                    and req.frontend_emb.shape[0] > self.enc_budget):
-                raise ValueError(
-                    f"request {req.rid!r}: {req.frontend_emb.shape[0]} "
-                    f"encoder frames exceed the cross-cache budget "
-                    f"{self.enc_budget} — construct the Scheduler with "
-                    "enc_len >= the longest expected frontend_emb")
             done = len(item.out) if isinstance(item, _Slot) else 1
             positions = P + (len(item.out) - 1
                              if isinstance(item, _Slot) else 0)
             need = self._pages_needed(positions, done < req.gen)
             if need > self.allocator.n_pages:
-                raise PagePoolExhausted(
-                    f"request {req.rid!r} needs {need} pages but the "
-                    f"pool only has {self.allocator.n_pages} in total "
-                    "— raise EngineConfig.n_pages or page_size")
+                self.pending.popleft()
+                self._terminal(
+                    req, partial, RequestStatus.REJECTED,
+                    f"needs {need} pages but the pool only has "
+                    f"{self.allocator.n_pages} in total — raise "
+                    "EngineConfig.n_pages or page_size")
+                continue
             if need > self.allocator.free_pages:
                 break               # wait for a retirement
             self.pending.popleft()
-            self._admit_into(slot_id, item, self.allocator.alloc(need))
-            admitted += 1
+            if self._admit_into(slot_id, item,
+                                self.allocator.alloc(need)):
+                admitted += 1
         return admitted
 
-    def _admit_into(self, slot_id: int, item, pages: List[int]) -> None:
+    def _admit_into(self, slot_id: int, item, pages: List[int]) -> bool:
         """Prefill ``item`` (a fresh Request, or a preempted _Slot whose
         prompt + generated prefix is teacher-forced back in) into the
-        allocated pages of ``slot_id``."""
+        allocated pages of ``slot_id``.  A prefill that keeps failing
+        past the retry budget FAILs the request (pages returned) rather
+        than the stream.  Returns True if the slot went active."""
         resumed = isinstance(item, _Slot)
         req = item.req if resumed else item
         tokens = np.asarray(req.tokens, np.int32)
@@ -209,7 +497,21 @@ class Scheduler:
         batch = {"tokens": jnp.asarray(tokens)[None]}
         if req.frontend_emb is not None:
             batch["frontend_emb"] = jnp.asarray(req.frontend_emb)[None]
-        logits, caches = self.eng.prefill_fn(self.eng.params, batch)
+
+        def _count_retry(attempt, exc):
+            self.stats["prefill_retries"] += 1
+
+        try:
+            logits, caches = call_with_retries(
+                self.eng.prefill_fn, self.eng.params, batch,
+                policy=self.retry, on_retry=_count_retry)
+        except Exception as e:                      # noqa: BLE001
+            self.allocator.free(pages)
+            self._terminal(req, item.out if resumed else [],
+                           RequestStatus.FAILED,
+                           f"prefill failed after "
+                           f"{self.retry.max_retries} retries: {e}")
+            return False
         self.stats["prefills"] += 1
         row = np.zeros((1, self.table.shape[1]), np.int32)
         row[0, :len(pages)] = pages
@@ -220,7 +522,8 @@ class Scheduler:
             slot = _Slot(req=req, length=self._prefill_positions(req)
                          + len(item.out) - 1,
                          pages=list(pages), out=list(item.out),
-                         steps=item.steps, order=self._order)
+                         steps=item.steps, order=self._order,
+                         preempts=item.preempts)
             tok = item.out[-1]
         else:
             # engine convention: the first generated token is the
@@ -231,6 +534,7 @@ class Scheduler:
                          pages=list(pages), out=[tok],
                          order=self._order)
         self._order += 1
+        req.status = RequestStatus.RUNNING
         self.slots[slot_id] = slot
         self.table[slot_id] = row[0]
         self.lens[slot_id] = slot.length
@@ -243,32 +547,11 @@ class Scheduler:
                                        self.allocator.used_pages)
         if len(slot.out) >= req.gen:
             self._retire(slot_id)   # gen=1: the prefill already ends it
+        return True
 
-    def _retire(self, slot_id: int) -> None:
-        slot = self.slots[slot_id]
-        self.finished[slot.req.rid] = np.asarray(slot.out, np.int32)
-        self.allocator.free(slot.pages)
-        self.slots[slot_id] = None
-        self.lens[slot_id] = 0
-        self.tokens[slot_id] = 0
-        self.enc_lens[slot_id] = 0
-        self.stats["retired"] += 1
-
-    def _preempt(self, slot_id: int) -> None:
-        """Evict an active slot back to the FRONT of the pending queue
-        (vLLM-style recompute preemption): its pages free immediately
-        and its prompt + generated prefix is teacher-forced back in at
-        re-admission, so no tokens are lost — only the prefix compute
-        is redone."""
-        slot = self.slots[slot_id]
-        self.allocator.free(slot.pages)
-        slot.pages = []
-        self.pending.appendleft(slot)
-        self.slots[slot_id] = None
-        self.lens[slot_id] = 0
-        self.tokens[slot_id] = 0
-        self.enc_lens[slot_id] = 0
-        self.stats["preempted"] += 1
+    # ------------------------------------------------------------------
+    # stepping
+    # ------------------------------------------------------------------
 
     def _grow_pages(self) -> None:
         """A slot whose next write position opens a new page gets one
@@ -299,13 +582,51 @@ class Scheduler:
             self.stats["peak_pages"] = max(
                 self.stats["peak_pages"], self.allocator.used_pages)
 
+    def _expire_deadlines(self) -> None:
+        for slot_id, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            req = slot.req
+            if (req.max_steps is not None
+                    and slot.steps >= req.max_steps):
+                slot = self._evict(slot_id)
+                self._terminal(slot.req, slot.out,
+                               RequestStatus.TIMED_OUT,
+                               f"max_steps={req.max_steps} reached")
+            elif self._deadline_expired(req):
+                slot = self._evict(slot_id)
+                self._terminal(slot.req, slot.out,
+                               RequestStatus.TIMED_OUT,
+                               f"deadline_s={req.deadline_s} lapsed")
+
+    def _run_decode(self, dbatch):
+        def _count_retry(attempt, exc):
+            self.stats["step_retries"] += 1
+        # the jitted step is functional (the new cache is returned, the
+        # old one untouched), so re-running it after a transient fault
+        # is safe — nothing was mutated
+        return call_with_retries(self.eng.decode_fn, self.eng.params,
+                                 dbatch, policy=self.retry,
+                                 on_retry=_count_retry)
+
     def step(self) -> None:
-        """One decode step for every active slot, then retirement."""
+        """One decode step for every active slot, then retirement.
+
+        Fault handling per step: deadlines expire first (TIMED_OUT with
+        partial tokens), a transient decode exception is retried up to
+        ``retry.max_retries`` times, and — with ``guard_nonfinite`` —
+        any slot whose logits contain NaN/inf is quarantined (FAILED)
+        alone while every other slot's stream is untouched."""
+        if self.n_active == 0:
+            return
+        self._expire_deadlines()
         if self.n_active == 0:
             return
         self._grow_pages()
         if self.n_active == 0:      # growth preempted everything
             return
+        if self.straggler is not None:
+            self.straggler.start_step()
         # table-width bucketing: stage only live pages.  After
         # _grow_pages every active slot owns the page its next write
         # lands in, so the max live page count bounds every per-slot
@@ -322,22 +643,37 @@ class Scheduler:
                   "cache": self.cache}
         if self.cfg.family == "audio":
             dbatch["enc_lens"] = jnp.asarray(self.enc_lens)
-        logits, self.cache = self.eng.decode_fn(self.eng.params, dbatch)
+        logits, self.cache = self._run_decode(dbatch)
         self.stats["steps"] += 1
-        # one batched argmax + one device->host transfer for the whole
-        # step; only sampled (temperature > 0) slots pay a per-slot
-        # categorical on top
-        greedy = np.asarray(jnp.argmax(logits, -1))
+        # one jitted pick (batched argmax + per-slot fold_in keys +
+        # batched categorical + isfinite guard) and ONE device->host
+        # transfer for the whole step
+        B = len(self.slots)
+        seeds = np.zeros((B,), np.int32)
+        steps = np.zeros((B,), np.int32)
+        temps = np.zeros((B,), np.float32)
         for slot_id, slot in enumerate(self.slots):
             if slot is None:
                 continue
-            if slot.req.temperature > 0:
-                key = jax.random.fold_in(
-                    jax.random.PRNGKey(slot.req.seed), slot.steps)
-                tok = int(jax.random.categorical(
-                    key, logits[slot_id] / slot.req.temperature))
-            else:
-                tok = int(greedy[slot_id])
+            seeds[slot_id] = slot.req.seed
+            steps[slot_id] = slot.steps
+            temps[slot_id] = slot.req.temperature
+        picked = np.asarray(self._pick_fn(
+            logits, jnp.asarray(seeds), jnp.asarray(steps),
+            jnp.asarray(temps)))
+        greedy, sampled, finite = picked[0], picked[1], picked[2]
+        for slot_id, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            if self.guard_nonfinite and not finite[slot_id]:
+                # quarantine ONLY this slot: its pages free, its
+                # partial stream is attached, survivors untouched
+                self._fail_slot(
+                    slot_id,
+                    f"non-finite logits at decode step {slot.steps}")
+                continue
+            tok = int(sampled[slot_id] if slot.req.temperature > 0
+                      else greedy[slot_id])
             slot.steps += 1
             slot.length += 1
             slot.out.append(tok)
@@ -345,22 +681,42 @@ class Scheduler:
             self.tokens[slot_id] = tok
             if len(slot.out) >= slot.req.gen:
                 self._retire(slot_id)
+        if self.straggler is not None:
+            if self.straggler.end_step() is not None:
+                self.stats["straggler_flags"] += 1
+        if self.heartbeat is not None:
+            self.heartbeat.beat(self.stats["steps"], extra={
+                "active": self.n_active,
+                "pending": len(self.pending),
+                "finished": len(self.finished),
+                "failed": self.stats["failed"],
+                "retries": self.stats["step_retries"]})
 
-    def run(self) -> Dict[Any, np.ndarray]:
-        """Drain the pending queue: admit / step until everything
-        retires.  Raises ``PagePoolExhausted`` if the stream deadlocks
-        (pending work, no active slots, and still not enough pages)."""
-        while self.pending or self.n_active:
+    def run(self) -> Dict[Any, RequestResult]:
+        """Drain the pending queue: admit / step until every request is
+        terminal.  A stream deadlock (pending work, no active slot, and
+        still not enough pages) REJECTS the blocking request and keeps
+        going — already-finished results are never lost; everything the
+        scheduler ever saw comes back with a status."""
+        while self.pending or self.parked or self.n_active:
             self.admit()
             if self.n_active == 0:
-                if self.pending:
-                    raise PagePoolExhausted(
-                        f"page pool exhausted: {len(self.pending)} "
-                        f"pending request(s) cannot be admitted with "
-                        f"{self.allocator.free_pages} free page(s) of "
-                        f"{self.allocator.n_pages} and no active "
-                        "request left to retire — raise "
-                        "EngineConfig.n_pages")
-                break
+                if not (self.pending or self.parked):
+                    break
+                if not self.pending:
+                    # only parked work left: admit() unparks on the
+                    # next call now that nothing is runnable
+                    continue
+                # deadlock: nothing active to retire, head unadmittable
+                item = self.pending.popleft()
+                req = item.req if isinstance(item, _Slot) else item
+                toks = item.out if isinstance(item, _Slot) else []
+                self._terminal(
+                    req, toks, RequestStatus.REJECTED,
+                    f"page pool exhausted: cannot admit with "
+                    f"{self.allocator.free_pages} free page(s) of "
+                    f"{self.allocator.n_pages} and no active request "
+                    "left to retire — raise EngineConfig.n_pages")
+                continue
             self.step()
         return dict(self.finished)

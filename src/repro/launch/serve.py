@@ -63,6 +63,19 @@ def build_parser() -> argparse.ArgumentParser:
                          "staggered requests of varying lengths "
                          "through the scheduler (implies --paged; "
                          "--batch is the slot count)")
+    ap.add_argument("--inject", action="store_true",
+                    help="with --stream: run a deterministic chaos "
+                         "schedule (engine.faults) through the stream "
+                         "— NaN logits, a transient step exception, "
+                         "pool pressure and a slow step — and report "
+                         "the lifecycle counters (the stream must "
+                         "still complete)")
+    ap.add_argument("--inject-seed", type=int, default=0,
+                    help="seed for the injected chaos schedule")
+    ap.add_argument("--heartbeat", default=None, metavar="PATH",
+                    help="with --stream: touch PATH each decode step "
+                         "(runtime.resilience.Heartbeat) so an "
+                         "external supervisor can detect a hang")
     return ap
 
 
@@ -93,15 +106,34 @@ def _serve_stream(engine, args):
     lengths continuously batched through ``engine.Scheduler`` — short
     requests retire and free pages mid-stream while long ones keep
     decoding, and freed slots admit pending requests without touching
-    (or re-prefilling) the survivors."""
+    (or re-prefilling) the survivors.
+
+    With ``--inject`` a deterministic chaos schedule rides along (NaN
+    logits in one slot, a transient decode exception, a slow step, and
+    artificial page-pool pressure plus one mid-flight cancel): the
+    stream must still complete, with only the poisoned request FAILED
+    and every fault accounted for in the lifecycle counters."""
     import time
 
     from repro.engine import Request, Scheduler
+    from repro.runtime.resilience import Heartbeat, StragglerMonitor
 
     cfg = engine.cfg
     rng = np.random.default_rng(0)
     n, P, G = args.stream, args.prompt_len, args.gen
-    sched = Scheduler(engine)
+    straggler = StragglerMonitor(window=32, threshold=4.0, warmup=3)
+    heartbeat = (Heartbeat(args.heartbeat, interval_s=0.0)
+                 if args.heartbeat else None)
+    sched = Scheduler(engine, straggler=straggler, heartbeat=heartbeat)
+    release = None
+    if args.inject:
+        from repro.engine import faults
+        s0 = args.inject_seed
+        plan = [faults.NonFiniteLogits(step=3 + s0 % 3, slot=0),
+                faults.TransientError(step=6 + s0 % 3),
+                faults.SlowStep(step=9 + s0 % 3, delay_s=0.05)]
+        faults.inject(sched, decode_faults=plan)
+        release = faults.hold_pages(sched, max(1, engine.n_pages // 8))
     # varying lengths: prompts in [P/2, P], gens in [G/2, G]
     reqs = [Request(rid=i,
                     tokens=rng.integers(
@@ -120,10 +152,20 @@ def _serve_stream(engine, args):
             if at <= step:
                 sched.submit(reqs[i])
         arrivals = {i: a for i, a in arrivals.items() if a > step}
+        if args.inject and step == 5 and n > 1:
+            sched.cancel(1)  # arrived at step 2 — a mid-flight cancel
+        if release is not None and step == 8:
+            release()
+            release = None
         sched.admit()
         if sched.n_active:
             sched.step()
         step += 1
+        if not sched.n_active and not sched.pending and not arrivals:
+            # everything terminal (parked requests drain via run())
+            sched.run()
+    if release is not None:
+        release()
     dt = time.time() - t0
     toks = sum(len(v) for v in sched.finished.values())
     print(f"[serve] {cfg.name} request-stream: {n} requests, "
@@ -132,9 +174,28 @@ def _serve_stream(engine, args):
           f"{engine.n_pages} (page_size {engine.page_size}); "
           f"prefills {sched.stats['prefills']} (one per request — "
           "survivors never re-prefill)")
+    st = sched.stats
+    lat = sched.latency_percentiles()
+    print(f"[serve] lifecycle: finished "
+          f"{sum(1 for v in sched.finished.values() if v.ok)}, "
+          f"failed {st['failed']}, cancelled {st['cancelled']}, "
+          f"timed_out {st['timed_out']}, rejected {st['rejected']}; "
+          f"retries: step {st['step_retries']} / prefill "
+          f"{st['prefill_retries']}; preempted {st['preempted']}, "
+          f"parked {st['parked']}, straggler flags "
+          f"{st['straggler_flags']}")
+    if lat:
+        print(f"[serve] request latency: p50 {lat['p50']:.3f}s "
+              f"p90 {lat['p90']:.3f}s p99 {lat['p99']:.3f}s")
+    if args.inject:
+        bad = {i: v for i, v in sched.finished.items() if not v.ok}
+        for i, v in sorted(bad.items()):
+            print(f"    req {i} {v.status.value}: {v.error}")
+        assert len(sched.finished) == n, "injected stream lost results"
     for i in range(min(n, 3)):
+        res = sched.finished[i]
         print(f"    req {i} ({len(reqs[i].tokens)} prompt -> "
-              f"{reqs[i].gen} gen):", sched.finished[i][:12])
+              f"{reqs[i].gen} gen, {res.status.value}):", res[:12])
     return sched.finished
 
 

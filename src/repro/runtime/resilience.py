@@ -9,6 +9,11 @@ On a 1000+-node cluster the failure modes this layer covers:
   * crash                      -> run_with_restarts resumes from the
     latest complete checkpoint (data pipeline is stateless-resumable,
     see data/pipeline.py).
+
+The serving scheduler (``engine.scheduler``) reuses the same pieces at
+request granularity: StragglerMonitor + Heartbeat ride the decode loop,
+``RetryPolicy``/``call_with_retries`` bound the transient-step retry,
+and ``percentiles`` summarizes per-request latency.
 """
 from __future__ import annotations
 
@@ -17,7 +22,7 @@ import os
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Deque, List, Optional
+from typing import Callable, Deque, Dict, List, Optional, Sequence
 
 
 class StragglerMonitor:
@@ -71,6 +76,55 @@ class Heartbeat:
         with open(tmp, "w") as f:
             json.dump({"step": step, "time": now, **(extra or {})}, f)
         os.replace(tmp, self.path)
+
+
+@dataclass
+class RetryPolicy:
+    """Bounded retry with linear backoff for one *call* (a decode or
+    prefill step), as opposed to ``RestartPolicy`` which governs whole
+    process restarts.  ``max_retries=0`` disables retrying."""
+    max_retries: int = 2
+    backoff_s: float = 0.05
+
+
+def call_with_retries(fn: Callable, *args,
+                      policy: Optional[RetryPolicy] = None,
+                      on_retry: Optional[Callable[[int, Exception],
+                                                  None]] = None):
+    """Call ``fn(*args)``; on exception retry up to
+    ``policy.max_retries`` times, sleeping ``backoff_s * attempt``
+    between attempts (``on_retry(attempt, exc)`` fires before each
+    retry).  Re-raises the last exception once the budget is spent —
+    persistent faults are not request-level and must surface."""
+    policy = policy or RetryPolicy()
+    last: Optional[Exception] = None
+    for attempt in range(policy.max_retries + 1):
+        if attempt:
+            if on_retry is not None:
+                on_retry(attempt, last)
+            time.sleep(policy.backoff_s * attempt)
+        try:
+            return fn(*args)
+        except KeyboardInterrupt:
+            raise
+        except Exception as e:                      # noqa: BLE001
+            last = e
+    raise last
+
+
+def percentiles(samples: Sequence[float],
+                qs: Sequence[float] = (50, 90, 99)) -> Dict[str, float]:
+    """{'p50': ..., 'p90': ..., 'p99': ...} by linear interpolation
+    over sorted ``samples`` (empty input -> {})."""
+    xs = sorted(samples)
+    if not xs:
+        return {}
+    out = {}
+    for q in qs:
+        pos = (len(xs) - 1) * (q / 100.0)
+        lo, hi = int(pos), min(int(pos) + 1, len(xs) - 1)
+        out[f"p{q:g}"] = xs[lo] + (xs[hi] - xs[lo]) * (pos - lo)
+    return out
 
 
 @dataclass

@@ -1,7 +1,7 @@
 """Paged KV cache + continuous batching tests: paged-vs-dense engine
 equivalence (GQA / absorbed-MLA / cross-attention), scheduler slot
-reuse and page-pool exhaustion, the page allocator, and the sampled-
-decode RNG fold_in regression."""
+reuse and per-request rejection of never-admittable requests, the
+page allocator, and the sampled-decode RNG fold_in regression."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,7 +9,8 @@ import pytest
 
 from repro.common.config import MLAConfig, ModelConfig, MoEConfig
 from repro.engine import (DecodeEngine, EngineConfig, PageAllocator,
-                          PagePoolExhausted, Request, Scheduler)
+                          PagePoolExhausted, Request, RequestStatus,
+                          Scheduler)
 from repro.engine import paged_cache as PC
 
 KEY = jax.random.PRNGKey(0)
@@ -148,17 +149,38 @@ def test_scheduler_slot_reuse_and_no_reprefill(rng):
                                       err_msg=f"request {r.rid}")
 
 
-def test_scheduler_page_pool_exhaustion_raises(rng):
+def test_scheduler_rejects_unadmittable_without_losing_results(rng):
+    """Regression: a request larger than the whole pool used to raise
+    ``PagePoolExhausted`` out of ``run()``, LOSING every already-
+    finished result.  It is now REJECTED individually (with a reason)
+    and the stream keeps serving: the good request's tokens survive."""
     cfg = _cfg()
-    # pool smaller than a single prompt's page need: admit can never
-    # succeed and must say so instead of waiting forever
     eng = DecodeEngine(cfg, EngineConfig(batch=1, max_len=16,
                                          paged=True, page_size=4,
                                          n_pages=2))
     sched = Scheduler(eng)
-    sched.submit(Request(rid=0, tokens=np.zeros(12, np.int32), gen=2))
-    with pytest.raises(PagePoolExhausted, match="pool"):
-        sched.run()
+    good = Request(rid="good", tokens=rng.integers(
+        0, cfg.vocab, (4,)).astype(np.int32), gen=3)
+    sched.submit(good)
+    # pool smaller than this prompt's page need: admit can never succeed
+    sched.submit(Request(rid="huge", tokens=np.zeros(12, np.int32),
+                         gen=2))
+    out = sched.run()                   # does NOT raise
+    assert set(out) == {"good", "huge"}
+    assert out["good"].status is RequestStatus.FINISHED
+    assert len(out["good"]) == 3
+    assert out["huge"].status is RequestStatus.REJECTED
+    assert "pool" in out["huge"].error
+    assert len(out["huge"]) == 0
+    assert sched.stats["rejected"] == 1
+    assert sched.allocator.free_pages == eng.n_pages
+    sched.allocator.check()
+    # the solo stream still matches
+    solo = DecodeEngine(cfg, EngineConfig(batch=1, max_len=16),
+                        params=eng.params)
+    want, _ = solo.generate({"tokens": jnp.asarray(good.tokens)[None]},
+                            gen=3)
+    np.testing.assert_array_equal(out["good"], np.asarray(want[0]))
 
 
 def test_scheduler_waits_for_pages_then_admits(rng):
@@ -275,8 +297,9 @@ def test_scheduler_audio_encoder_longer_than_decoder_budget(rng):
 
     over = Scheduler(eng, enc_len=8)
     over.submit(reqs[0])
-    with pytest.raises(ValueError, match="encoder frames exceed"):
-        over.run()
+    res = over.run()[reqs[0].rid]       # rejected, not raised
+    assert res.status is RequestStatus.REJECTED
+    assert "encoder frames exceed" in res.error
 
 
 def test_page_allocator_invariants():

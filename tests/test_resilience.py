@@ -1,0 +1,435 @@
+"""Fault-tolerant serving tests: request lifecycle (reject / cancel /
+deadline / quarantine / park), deterministic fault injection
+(``engine.faults``) against the paged scheduler, allocator invariants
+under random op sequences (hypothesis), and the resilience-runtime
+wiring (retry policy, straggler monitor, heartbeat, latency
+percentiles).
+
+The load-bearing property, pinned under EVERY injected fault: the
+stream completes, unaffected requests finish with token streams
+bit-identical to a fault-free run, and affected requests end in a
+terminal status with a reason."""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import ModelConfig
+from repro.engine import (DecodeEngine, EngineConfig, Request,
+                          RequestResult, RequestStatus, Scheduler)
+from repro.engine import faults as F
+from repro.engine.paged_cache import PageAllocator, PagePoolExhausted
+from repro.runtime.resilience import (Heartbeat, RetryPolicy,
+                                      StragglerMonitor, call_with_retries,
+                                      percentiles)
+
+P, G = 8, 6
+
+
+def _cfg(**kw):
+    base = dict(name="t", family="dense", n_layers=2, d_model=64,
+                n_heads=4, n_kv_heads=2, d_head=16, d_ff=128, vocab=256,
+                dtype="float32", remat="none", attn_block_q=32,
+                attn_block_kv=32)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def eng():
+    return DecodeEngine(_cfg(), EngineConfig(batch=2, max_len=16,
+                                             paged=True, page_size=4,
+                                             n_pages=8))
+
+
+def _reqs(cfg, gens=(G, G, 4), **kw):
+    rng = np.random.default_rng(7)
+    return [Request(rid=i, tokens=rng.integers(
+                2, cfg.vocab, (P,)).astype(np.int32), gen=g, **kw)
+            for i, g in enumerate(gens)]
+
+
+def _run(eng, reqs, **sched_kw):
+    sched = Scheduler(eng, **sched_kw)
+    for r in reqs:
+        sched.submit(r)
+    return sched.run(), sched
+
+
+@pytest.fixture(scope="module")
+def baseline(eng):
+    """Fault-free streams for the standard 3-request set (pinned
+    bit-identical against solo generate by tests/test_paged.py)."""
+    out, _ = _run(eng, _reqs(eng.cfg))
+    return {rid: np.asarray(res) for rid, res in out.items()}
+
+
+def _drained(sched, eng):
+    assert sched.allocator.free_pages == eng.n_pages
+    sched.allocator.check()
+
+
+# ------------------------------------------------- injected faults
+
+
+def test_nan_logits_quarantine_only_affected_slot(eng, baseline):
+    """A NaN logit row FAILs exactly the slot that produced it (partial
+    tokens + reason attached); every surviving stream is bit-identical
+    to the fault-free run."""
+    reqs = _reqs(eng.cfg)
+    sched = Scheduler(eng)
+    proxy = F.inject(sched,
+                     decode_faults=[F.NonFiniteLogits(step=2, slot=0)])
+    for r in reqs:
+        sched.submit(r)
+    out = sched.run()
+    assert proxy.decode_fn.injected == 1
+    # rid 0 sat in slot 0: failed at decode step 2 with the 3 tokens it
+    # had — a bit-identical PREFIX of its fault-free stream
+    assert out[0].status is RequestStatus.FAILED
+    assert "non-finite" in out[0].error
+    np.testing.assert_array_equal(out[0], baseline[0][:3])
+    assert sched.stats["failed"] == 1
+    # survivors bit-identical end to end (rid 2 reuses the freed slot)
+    for rid in (1, 2):
+        assert out[rid].status is RequestStatus.FINISHED
+        np.testing.assert_array_equal(out[rid], baseline[rid])
+    _drained(sched, eng)
+
+
+def test_inf_logits_also_quarantined(eng):
+    reqs = _reqs(eng.cfg, gens=(G,))
+    sched = Scheduler(eng)
+    F.inject(sched, decode_faults=[
+        F.NonFiniteLogits(step=1, slot=0, value=float("inf"))])
+    for r in reqs:
+        sched.submit(r)
+    out = sched.run()
+    assert out[0].status is RequestStatus.FAILED
+    _drained(sched, eng)
+
+
+def test_transient_step_exception_retried_bit_identical(eng, baseline):
+    """One injected step exception is retried (bounded, with backoff)
+    and the whole stream is bit-identical to the fault-free run."""
+    reqs = _reqs(eng.cfg)
+    sched = Scheduler(eng, retry=RetryPolicy(max_retries=2,
+                                             backoff_s=0.0))
+    F.inject(sched, decode_faults=[F.TransientError(step=1)])
+    for r in reqs:
+        sched.submit(r)
+    out = sched.run()
+    assert sched.stats["step_retries"] == 1
+    for rid, want in baseline.items():
+        assert out[rid].status is RequestStatus.FINISHED
+        np.testing.assert_array_equal(out[rid], want)
+    _drained(sched, eng)
+
+
+def test_persistent_step_fault_exhausts_retries(eng):
+    """A fault that survives the whole retry budget is NOT request-
+    level: it must surface to the caller, not be swallowed."""
+    reqs = _reqs(eng.cfg, gens=(G,))
+    sched = Scheduler(eng, retry=RetryPolicy(max_retries=2,
+                                             backoff_s=0.0))
+    F.inject(sched, decode_faults=[F.TransientError(step=1, count=50)])
+    for r in reqs:
+        sched.submit(r)
+    with pytest.raises(F.InjectedFault):
+        sched.run()
+    assert sched.stats["step_retries"] == 2
+
+
+def test_prefill_fault_fails_request_not_stream(eng, baseline):
+    """A persistent prefill fault FAILs that request alone (its pages
+    go back); the requests around it stream bit-identically."""
+    reqs = _reqs(eng.cfg)
+    sched = Scheduler(eng, retry=RetryPolicy(max_retries=2,
+                                             backoff_s=0.0))
+    # prefill call 0 = rid 0; calls 1..3 = rid 1's three attempts
+    F.inject(sched, prefill_faults=[F.TransientError(step=1, count=3)])
+    for r in reqs:
+        sched.submit(r)
+    out = sched.run()
+    assert out[1].status is RequestStatus.FAILED
+    assert "prefill failed" in out[1].error
+    assert len(out[1]) == 0
+    assert sched.stats["prefill_retries"] == 2
+    for rid in (0, 2):
+        assert out[rid].status is RequestStatus.FINISHED
+        np.testing.assert_array_equal(out[rid], baseline[rid])
+    _drained(sched, eng)
+
+
+def test_pool_pressure_serializes_and_completes(eng, baseline):
+    """Artificial pool pressure (half the pages held) degrades to
+    serialized admission — everything still completes bit-identically
+    and the held pages come back on release."""
+    reqs = _reqs(eng.cfg)
+    sched = Scheduler(eng)
+    release = F.hold_pages(sched, 4)
+    for r in reqs:
+        sched.submit(r)
+    out = sched.run()
+    for rid, want in baseline.items():
+        assert out[rid].status is RequestStatus.FINISHED
+        np.testing.assert_array_equal(out[rid], want)
+    # at most one request's pages fit beside the held 4
+    assert sched.stats["peak_pages"] <= 8
+    assert sched.allocator.free_pages == eng.n_pages - 4
+    release()
+    release()                           # idempotent
+    _drained(sched, eng)
+
+
+def test_over_budget_request_rejected_mid_stream(eng, baseline):
+    """An over-budget prompt mixed into a live stream is REJECTED alone
+    (used to raise ValueError out of admit(), killing every in-flight
+    request); the well-formed requests stream bit-identically."""
+    cfg = eng.cfg
+    reqs = _reqs(cfg)
+    rng = np.random.default_rng(3)
+    bad = Request(rid="bad", tokens=rng.integers(
+        2, cfg.vocab, (P,)).astype(np.int32), gen=64)  # >> max_len
+    order = [reqs[0], bad, reqs[1], reqs[2]]
+    out, sched = _run(eng, order)
+    assert out["bad"].status is RequestStatus.REJECTED
+    assert "exceeds engine max_len" in out["bad"].error
+    assert sched.stats["rejected"] == 1
+    for rid, want in baseline.items():
+        assert out[rid].status is RequestStatus.FINISHED
+        np.testing.assert_array_equal(out[rid], want)
+    _drained(sched, eng)
+
+
+# ------------------------------------------------- lifecycle
+
+
+def test_cancel_pending_and_mid_flight(eng, baseline):
+    reqs = _reqs(eng.cfg)
+    sched = Scheduler(eng)
+    for r in reqs:
+        sched.submit(r)
+    sched.admit()                       # rids 0, 1 take the slots
+    assert sched.cancel(2)              # still queued
+    assert sched.finished[2].status is RequestStatus.CANCELLED
+    assert "pending" in sched.finished[2].error
+    assert len(sched.finished[2]) == 0
+    sched.step()
+    sched.step()
+    assert sched.cancel(1)              # mid-flight: slot + pages free
+    res = sched.finished[1]
+    assert res.status is RequestStatus.CANCELLED
+    np.testing.assert_array_equal(res, baseline[1][:3])
+    assert not sched.cancel(1)          # already terminal
+    assert not sched.cancel("nope")     # unknown rid
+    out = sched.run()
+    assert out[0].status is RequestStatus.FINISHED
+    np.testing.assert_array_equal(out[0], baseline[0])
+    assert sched.stats["cancelled"] == 2
+    _drained(sched, eng)
+
+
+def test_deadline_while_queued_times_out_without_prefill(eng):
+    reqs = _reqs(eng.cfg, gens=(G,))
+    reqs[0].deadline_s = 1e-9
+    out, sched = _run(eng, reqs)
+    assert out[0].status is RequestStatus.TIMED_OUT
+    assert "while queued" in out[0].error
+    assert sched.stats["prefills"] == 0
+    _drained(sched, eng)
+
+
+def test_max_steps_bounds_a_request(eng, baseline):
+    """max_steps is the deterministic deadline: the request ends
+    TIMED_OUT with exactly prefill-token + max_steps tokens — a
+    bit-identical prefix — while its neighbor runs to completion."""
+    reqs = _reqs(eng.cfg, gens=(G, G))
+    reqs[0].max_steps = 2
+    out, sched = _run(eng, reqs)
+    assert out[0].status is RequestStatus.TIMED_OUT
+    assert "max_steps" in out[0].error
+    np.testing.assert_array_equal(out[0], baseline[0][:3])
+    assert out[1].status is RequestStatus.FINISHED
+    np.testing.assert_array_equal(out[1], baseline[1])
+    assert sched.stats["timed_out"] == 1
+    _drained(sched, eng)
+
+
+def test_wall_deadline_mid_flight(eng):
+    """A slow injected step blows through the wall deadline: the
+    request ends TIMED_OUT mid-flight with partial tokens."""
+    reqs = _reqs(eng.cfg, gens=(G,))
+    reqs[0].deadline_s = 0.15
+    sched = Scheduler(eng)
+    F.inject(sched, decode_faults=[F.SlowStep(step=1, delay_s=0.5)])
+    for r in reqs:
+        sched.submit(r)
+    out = sched.run()
+    assert out[0].status is RequestStatus.TIMED_OUT
+    assert len(out[0]) < G
+    _drained(sched, eng)
+
+
+def test_status_machine_and_result_surface(eng):
+    req = _reqs(eng.cfg, gens=(3,))[0]
+    assert req.status is RequestStatus.PENDING
+    sched = Scheduler(eng)
+    sched.submit(req)
+    sched.admit()
+    assert req.status is RequestStatus.RUNNING
+    out = sched.run()
+    assert req.status is RequestStatus.FINISHED
+    res = out[req.rid]
+    assert isinstance(res, RequestResult) and res.ok
+    assert res.error is None
+    assert res.latency_s is not None and res.latency_s >= 0
+    assert isinstance(res.tokens, np.ndarray)
+    assert "FINISHED" in repr(res)
+    # slicing keeps the metadata (ndarray-view semantics)
+    assert res[:2].status is RequestStatus.FINISHED
+    pcts = sched.latency_percentiles()
+    assert set(pcts) == {"p50", "p90", "p99"}
+
+
+def test_preemption_livelock_watchdog_parks(rng):
+    """The thrash scenario: two long requests over a pool that fits
+    only one.  With max_preemptions=0 the first eviction PARKS the
+    victim (no admit→preempt churn); it re-admits once the pool quiets
+    and both streams complete bit-identically to solo runs."""
+    cfg = _cfg()
+    p, g = 8, 16
+    eng = DecodeEngine(cfg, EngineConfig(batch=2, max_len=p + g,
+                                         paged=True, page_size=8,
+                                         n_pages=4))
+    reqs = [Request(rid=i, tokens=rng.integers(
+                0, cfg.vocab, (p,)).astype(np.int32), gen=g)
+            for i in range(2)]
+    out, sched = _run(eng, reqs, max_preemptions=0)
+    assert sched.stats["parked"] > 0
+    assert sched.stats["preempted"] > 0
+    solo = DecodeEngine(cfg, EngineConfig(batch=1, max_len=p + g),
+                        params=eng.params)
+    for r in reqs:
+        assert out[r.rid].status is RequestStatus.FINISHED
+        want, _ = solo.generate(
+            {"tokens": jnp.asarray(r.tokens)[None]}, gen=r.gen)
+        np.testing.assert_array_equal(out[r.rid], np.asarray(want[0]),
+                                      err_msg=f"request {r.rid}")
+    _drained(sched, eng)
+
+
+# ------------------------------------------------- monitors
+
+
+def test_straggler_flag_and_heartbeat(eng, tmp_path):
+    hb_path = str(tmp_path / "hb.json")
+    reqs = _reqs(eng.cfg, gens=(G, G))
+    sched = Scheduler(
+        eng,
+        straggler=StragglerMonitor(window=16, threshold=3.0, warmup=2),
+        heartbeat=Heartbeat(hb_path, interval_s=0.0))
+    F.inject(sched, decode_faults=[F.SlowStep(step=4, delay_s=0.75)])
+    for r in reqs:
+        sched.submit(r)
+    sched.run()
+    assert sched.stats["straggler_flags"] >= 1
+    with open(hb_path) as f:
+        beat = json.load(f)
+    assert beat["step"] == sched.stats["steps"]
+    assert {"active", "pending", "finished", "failed"} <= set(beat)
+
+
+def test_generate_check_finite(eng):
+    from repro.engine.faults import NonFiniteLogitsError
+    cfg = _cfg()
+    solo = DecodeEngine(cfg, EngineConfig(batch=1, max_len=12))
+    toks = np.arange(4, dtype=np.int32)[None]
+    out, _ = solo.generate({"tokens": toks}, gen=4, check_finite=True)
+    assert out.shape == (1, 4)          # finite logits: no-op
+    bad = F.FaultyStepFn(solo.decode_fn,
+                         [F.NonFiniteLogits(step=0, slot=0)])
+    solo.decode_fn = bad
+    with pytest.raises(NonFiniteLogitsError, match="non-finite"):
+        solo.generate({"tokens": toks}, gen=4, check_finite=True)
+
+
+def test_call_with_retries_and_percentiles():
+    calls = []
+
+    def flaky(x):
+        calls.append(x)
+        if len(calls) < 3:
+            raise RuntimeError("boom")
+        return x + 1
+
+    assert call_with_retries(
+        flaky, 1, policy=RetryPolicy(max_retries=3, backoff_s=0.0)) == 2
+    assert len(calls) == 3
+    with pytest.raises(RuntimeError, match="always"):
+        call_with_retries(
+            (lambda: (_ for _ in ()).throw(RuntimeError("always"))),
+            policy=RetryPolicy(max_retries=1, backoff_s=0.0))
+    assert percentiles([]) == {}
+    pct = percentiles(list(range(1, 101)))
+    assert pct["p50"] == pytest.approx(50.5)
+    assert pct["p99"] == pytest.approx(99.01)
+
+
+def test_random_plan_is_seed_deterministic():
+    a = F.random_plan(5, 64, slots=4, p_nonfinite=0.2, p_transient=0.2,
+                      p_slow=0.1)
+    b = F.random_plan(5, 64, slots=4, p_nonfinite=0.2, p_transient=0.2,
+                      p_slow=0.1)
+    assert len(a) > 0 and repr(a) == repr(b)
+    assert repr(a) != repr(F.random_plan(6, 64, slots=4,
+                                         p_nonfinite=0.2,
+                                         p_transient=0.2, p_slow=0.1))
+
+
+# ------------------------------------------------- allocator invariants
+
+
+def test_allocator_double_free_and_foreign_free():
+    al = PageAllocator(4)
+    got = al.alloc(2)
+    al.free([got[0]])
+    with pytest.raises(ValueError, match="double free"):
+        al.free([got[0]])               # already back in the pool
+    with pytest.raises(ValueError, match="double free"):
+        al.free([3])                    # never handed out
+    with pytest.raises(ValueError, match="within one"):
+        al.alloc(1)
+        pages = al.alloc(1)
+        al.free(pages + pages)
+    al.check()
+
+
+def test_allocator_invariants_seeded_sweep():
+    """No-hypothesis fallback for the property test in
+    tests/test_resilience_prop.py: seeded random alloc/free
+    interleavings hold the owned/free pool partition after every op."""
+    rng = np.random.default_rng(11)
+    for n_pages in (1, 3, 8, 13):
+        al = PageAllocator(n_pages)
+        owned = []
+        for _ in range(200):
+            k = int(rng.integers(0, 5))
+            if rng.random() < 0.5:
+                if k > al.free_pages:
+                    with pytest.raises(PagePoolExhausted):
+                        al.alloc(k)
+                else:
+                    owned.extend(al.alloc(k))
+            elif owned:
+                take = owned[:min(k, len(owned))]
+                owned = owned[len(take):]
+                if take:
+                    al.free(take)
+            al.check()
+            assert al.used_pages == len(owned)
+        if owned:
+            al.free(owned)
+        al.check()
+        assert al.free_pages == n_pages

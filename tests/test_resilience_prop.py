@@ -1,0 +1,143 @@
+"""Property tests (hypothesis) for the fault-tolerant serving layer:
+random alloc/free interleavings against the PageAllocator invariant,
+and random admit/step/cancel sequences driving the Scheduler's
+bookkeeping (growth, preemption, parking, rejection, retirement) on a
+model-free fake engine.  Token-level correctness under faults is
+pinned by tests/test_resilience.py on the real engine."""
+import types
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.engine import (EngineConfig, Request, RequestStatus,  # noqa: E402
+                          Scheduler)
+from repro.engine import paged_cache as PC  # noqa: E402
+from repro.engine.paged_cache import (PageAllocator,  # noqa: E402
+                                      PagePoolExhausted)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 12),
+       st.lists(st.tuples(st.booleans(), st.integers(0, 6)),
+                max_size=40))
+def test_allocator_invariants_under_random_ops(n_pages, ops):
+    """Random alloc/free interleavings: the owned/free partition of
+    the pool holds after every op, over-allocation always raises, and
+    the pool drains back to fully free."""
+    al = PageAllocator(n_pages)
+    owned = []
+    for is_alloc, k in ops:
+        if is_alloc:
+            if k > al.free_pages:
+                with pytest.raises(PagePoolExhausted):
+                    al.alloc(k)
+            else:
+                owned.extend(al.alloc(k))
+        elif owned:
+            take = owned[:min(k, len(owned))]
+            owned = owned[len(take):]
+            if take:
+                al.free(take)
+        al.check()
+        assert al.used_pages == len(owned)
+        assert len(set(owned)) == len(owned)
+    if owned:
+        al.free(owned)
+    al.check()
+    assert al.free_pages == n_pages
+
+
+class _FakeEngine:
+    """No-jax-model engine: real EngineConfig/paged-cache layout, but
+    prefill/decode return zeros — fast enough to drive the *scheduler's
+    bookkeeping* through hypothesis."""
+
+    def __init__(self, batch=2, max_len=16, page_size=4, n_pages=6):
+        self.cfg = types.SimpleNamespace(family="dense", mla=None,
+                                         frontend_tokens=0)
+        self.ecfg = EngineConfig(batch=batch, max_len=max_len,
+                                 paged=True, page_size=page_size,
+                                 n_pages=n_pages)
+        self.page_size = page_size
+        self.max_pages = PC.max_pages(max_len, page_size)
+        self.n_pages = n_pages
+        self.params = None
+        L, KV, Dh, V = 1, 1, 1, 8
+        self._pool = (L, n_pages, page_size, KV, Dh)
+        self._V = V
+
+    def init_paged_cache(self, enc_len=None):
+        return {"k": jnp.zeros(self._pool), "v": jnp.zeros(self._pool)}
+
+    def prefill_fn(self, params, batch):
+        S = batch["tokens"].shape[1]
+        kv = jnp.zeros((1, 1, S, 1, 1))
+        return jnp.zeros((1, self._V)), (kv, kv)
+
+    def decode_fn(self, params, dbatch):
+        B = dbatch["token"].shape[0]
+        return jnp.zeros((B, self._V)), dbatch["cache"]
+
+
+_OPS = st.lists(
+    st.one_of(
+        st.tuples(st.just("submit"), st.integers(1, 12),
+                  st.integers(1, 6)),
+        st.tuples(st.just("step"), st.just(0), st.just(0)),
+        st.tuples(st.just("admit"), st.just(0), st.just(0)),
+        st.tuples(st.just("cancel"), st.integers(0, 5), st.just(0))),
+    min_size=1, max_size=14)
+
+
+@settings(max_examples=10, deadline=None)
+@given(_OPS, st.integers(0, 2))
+def test_scheduler_invariants_under_random_sequences(ops, max_preempt):
+    """Drive random submit/admit/step/cancel interleavings (growth,
+    preemption, parking, rejection and retirement all fire from these)
+    and assert after every transition: the allocator partition holds,
+    active slots' pages are exactly the owned pages with no aliasing,
+    and the drained stream leaves a full pool with every request
+    terminal exactly once."""
+    eng = _FakeEngine()
+    sched = Scheduler(eng, max_preemptions=max_preempt)
+    rng = np.random.default_rng(0)
+    submitted = []
+
+    def invariants():
+        sched.allocator.check()
+        pages = [p for s in sched.slots if s is not None
+                 for p in s.pages]
+        assert len(set(pages)) == len(pages), "page aliased across slots"
+        assert len(pages) == sched.allocator.used_pages
+        for s in sched.slots:
+            if s is not None:
+                assert s.req.status is RequestStatus.RUNNING
+
+    for op, a, b in ops:
+        if op == "submit":
+            rid = len(submitted)
+            submitted.append(rid)
+            sched.submit(Request(
+                rid=rid,
+                tokens=rng.integers(0, 8, (a,)).astype(np.int32),
+                gen=b))
+        elif op == "step":
+            sched.step()
+        elif op == "admit":
+            sched.admit()
+        elif op == "cancel" and a < len(submitted):
+            sched.cancel(a)
+        invariants()
+    out = sched.run()
+    invariants()
+    assert sched.allocator.free_pages == eng.n_pages
+    assert set(out) == set(submitted)
+    for rid in submitted:
+        assert out[rid].status in {
+            RequestStatus.FINISHED, RequestStatus.REJECTED,
+            RequestStatus.CANCELLED, RequestStatus.TIMED_OUT,
+            RequestStatus.FAILED}
