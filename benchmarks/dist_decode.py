@@ -300,6 +300,94 @@ for B, T in ((4, 2048),):
         "collective_bytes": None,
     })
 
+# ---- quantized KV pages: int8 pools + fp32 per-page scale sidecars ---
+# Same live contents and page geometry as the paged rows above, stored
+# int8 with one fp32 scale per page (per KV head for GQA, per page for
+# the MLA latents).  The decode step stages ~half the bf16 pools'
+# bytes per token — the sidecar adds 4 B per (page, head) against a
+# page's page_size*Dh int8 payload — and the q8 ops dequantize inside
+# the staged block (scale hoisted out of the int8 dot).
+from repro.kernels.quant import quantize_int8
+
+for B, T in ((4, 2048), (4, 8192)):
+    T_live = T // 2
+    J = T_live // PS_PAGE
+    n_pages = B * J
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, Dh))
+    kp = jax.random.normal(ks[1], (n_pages, PS_PAGE, KV, Dh))
+    vp = jax.random.normal(ks[2], (n_pages, PS_PAGE, KV, Dh))
+    table = (jnp.arange(B, dtype=jnp.int32)[:, None] * J
+             + jnp.arange(J, dtype=jnp.int32)[None, :])
+    lens = jnp.full((B,), T_live, jnp.int32)
+    kq, ksc = quantize_int8(kp, axis=(1, 3))
+    vq, vsc = quantize_int8(vp, axis=(1, 3))
+    ksc, vsc = ksc.reshape(n_pages, KV), vsc.reshape(n_pages, KV)
+
+    bf16 = jax.jit(lambda q, kp, vp, tb, ln: local_paged_decode_attend(
+        q, kp, vp, tb, ln))
+    q8 = jax.jit(lambda q, kp, vp, ks_, vs_, tb, ln:
+                 local_paged_decode_attend(q, kp, vp, tb, ln,
+                                           k_scale=ks_, v_scale=vs_))
+    t_bf16 = timed(bf16, q, kp.astype(jnp.bfloat16),
+                   vp.astype(jnp.bfloat16), table, lens)
+    t_q8 = timed(q8, q, kq, vq, ksc, vsc, table, lens)
+    bf16_bytes = 2 * B * T_live * KV * Dh * 2
+    q8_bytes = 2 * B * T_live * KV * Dh + 2 * B * J * KV * 4
+    rows.append({
+        "op": "paged_decode_q8", "shape": f"{B}x{T}x{H}x{KV}x{Dh}",
+        "us": round(t_q8, 1), "us_ref": round(t_bf16, 1),
+        "flops": B * H * 2 * T_live * Dh * 2,
+        "staged_bytes": q8_bytes, "arith_intensity": None,
+        "note": (f"int8 pages + per-page-per-head fp32 scales: "
+                 f"{q8_bytes} staged cache B/token, "
+                 f"{bf16_bytes / q8_bytes:.2f}x fewer than bf16 "
+                 f"pools' {bf16_bytes} (us_ref = bf16 pools)"),
+        "collective_bytes": None,
+    })
+
+for B, T in ((4, 2048), (4, 8192)):
+    T_live = T // 2
+    J = T_live // PS_PAGE
+    n_pages = B * J
+    ks = jax.random.split(key, 4)
+    q_abs = jax.random.normal(ks[0], (B, H, R_LAT))
+    q_rope = jax.random.normal(ks[1], (B, H, ROPE))
+    ckv_pool = jax.random.normal(ks[2], (n_pages, PS_PAGE, R_LAT))
+    krope_pool = jax.random.normal(ks[3], (n_pages, PS_PAGE, ROPE))
+    table = (jnp.arange(B, dtype=jnp.int32)[:, None] * J
+             + jnp.arange(J, dtype=jnp.int32)[None, :])
+    lens = jnp.full((B,), T_live, jnp.int32)
+    cq, csc = quantize_int8(ckv_pool, axis=(1, 2))
+    rq, rsc = quantize_int8(krope_pool, axis=(1, 2))
+    csc, rsc = csc.reshape(n_pages), rsc.reshape(n_pages)
+
+    mbf16 = jax.jit(lambda qa, qr, ck, kr, tb, ln:
+                    local_mla_paged_decode_attend(
+                        qa, qr, ck, kr, tb, ln, scale=scale_mla))
+    mq8 = jax.jit(lambda qa, qr, ck, kr, cs, rs, tb, ln:
+                  local_mla_paged_decode_attend(
+                      qa, qr, ck, kr, tb, ln, scale=scale_mla,
+                      ckv_scale=cs, krope_scale=rs))
+    t_mbf16 = timed(mbf16, q_abs, q_rope,
+                    ckv_pool.astype(jnp.bfloat16),
+                    krope_pool.astype(jnp.bfloat16), table, lens)
+    t_mq8 = timed(mq8, q_abs, q_rope, cq, rq, csc, rsc, table, lens)
+    bf16_bytes = B * T_live * (R_LAT + ROPE) * 2
+    q8_bytes = B * T_live * (R_LAT + ROPE) + 2 * B * J * 4
+    shape = f"{B}x{T}x{H}x{R_LAT}+{ROPE}"
+    rows.append({
+        "op": "mla_decode_paged_q8", "shape": shape,
+        "us": round(t_mq8, 1), "us_ref": round(t_mbf16, 1),
+        "flops": B * H * 2 * T_live * (R_LAT + ROPE + R_LAT),
+        "staged_bytes": q8_bytes, "arith_intensity": None,
+        "note": (f"int8 latent pages + per-page fp32 scales "
+                 f"(split-operand): {q8_bytes} staged cache B/token, "
+                 f"{bf16_bytes / q8_bytes:.2f}x fewer than bf16 "
+                 f"pools' {bf16_bytes} (us_ref = bf16 pools)"),
+        "collective_bytes": None,
+    })
+
 # ---- full engine step: the production serve path ---------------------
 from repro.configs import get_config, reduced
 from repro.engine import DecodeEngine, EngineConfig
@@ -436,6 +524,8 @@ def dist_decode_bench(json_path="BENCH_kernels.json"):
                                            "mla_decode",
                                            "mla_decode_paged",
                                            "paged_decode_bucketed",
+                                           "paged_decode_q8",
+                                           "mla_decode_paged_q8",
                                            "sched_pick")]
         existing.extend(rows)
         with open(json_path, "w") as f:

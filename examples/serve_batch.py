@@ -38,6 +38,16 @@ def _model_arg(default="qwen1.5-0.5b"):
     return default
 
 
+def _kv_dtype_arg():
+    """--kv-dtype {bf16,int8}: page-pool storage for the demos."""
+    if "--kv-dtype" in sys.argv:
+        i = sys.argv.index("--kv-dtype") + 1
+        if i >= len(sys.argv) or sys.argv[i] not in ("bf16", "int8"):
+            sys.exit("usage: serve_batch.py [--kv-dtype {bf16,int8}]")
+        return sys.argv[i]
+    return "bf16"
+
+
 def stream_demo():
     """Continuous batching on the paged engine: staggered request
     arrival and retirement over 2 slots and a shared page pool —
@@ -47,10 +57,11 @@ def stream_demo():
     (the default), so short-table phases of the stream stage fewer
     pages."""
     cfg = reduced(get_config(_model_arg()))
+    kv_dtype = _kv_dtype_arg()
     engine = DecodeEngine(cfg, EngineConfig(
         batch=2,                            # slots, not requests
         max_len=48, paged=True, page_size=8,
-        mesh_shape=(1, 1), kernel_impl="xla",
+        mesh_shape=(1, 1), kernel_impl="xla", kv_dtype=kv_dtype,
     ))
     sched = Scheduler(engine)
     rng = np.random.default_rng(0)
@@ -96,6 +107,7 @@ def inject_demo():
     engine = DecodeEngine(cfg, EngineConfig(
         batch=2, max_len=48, paged=True, page_size=8,
         mesh_shape=(1, 1), kernel_impl="xla",
+        kv_dtype=_kv_dtype_arg(),
     ))
     rng = np.random.default_rng(0)
     specs = [(24, 4), (16, 12), (8, 6)]

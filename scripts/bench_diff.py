@@ -10,9 +10,12 @@ re-run's jitter doesn't orphan the match, and ``k`` numbers rows whose
 stripped key still collides (e.g. block-size sweeps whose notes differ
 only in numbers), pairing them by emission order.  A matched row whose
 ``us`` grew by more than ``--threshold`` (default 10%) is flagged as a
-regression; ``--fail`` turns flags into a nonzero exit for CI.
-Unmatched rows (ops added/removed between the two artifacts) are
-listed but never flagged.
+regression, and so is a matched row whose ``staged_bytes`` column
+(cache bytes staged per decode step — the quantized-KV benchmarks'
+headline) grew by more than the same threshold; ``--fail`` turns
+either kind of flag into a nonzero exit for CI.  Unmatched rows (ops
+added/removed between the two artifacts) are listed but never
+flagged.
 """
 from __future__ import annotations
 
@@ -48,31 +51,44 @@ def _index(rows: List[dict]) -> Dict[Tuple[str, str, str, int], dict]:
 def diff(old_rows: List[dict], new_rows: List[dict],
          threshold: float = 0.10) -> dict:
     """Returns {'regressions': [...], 'improvements': [...],
-    'only_old': [...], 'only_new': [...]} — each entry carrying the
-    matched key and the old/new ``us``."""
+    'byte_regressions': [...], 'only_old': [...], 'only_new': [...]}
+    — latency entries carry the matched key and the old/new ``us``,
+    byte entries the old/new ``staged_bytes``."""
     old = _index(old_rows)
     new = _index(new_rows)
-    regressions, improvements = [], []
+    regressions, improvements, byte_regressions = [], [], []
     for key, n in new.items():
         o = old.get(key)
         if o is None:
             continue
         us_old, us_new = o.get("us"), n.get("us")
-        if not us_old or not us_new:          # None or 0: untimed row
-            continue
-        ratio = us_new / us_old
-        entry = {"op": key[0], "shape": key[1], "note": n.get("note"),
-                 "us_old": us_old, "us_new": us_new,
-                 "ratio": round(ratio, 3)}
-        if ratio > 1.0 + threshold:
-            regressions.append(entry)
-        elif ratio < 1.0 - threshold:
-            improvements.append(entry)
+        if us_old and us_new:                 # None or 0: untimed row
+            ratio = us_new / us_old
+            entry = {"op": key[0], "shape": key[1],
+                     "note": n.get("note"),
+                     "us_old": us_old, "us_new": us_new,
+                     "ratio": round(ratio, 3)}
+            if ratio > 1.0 + threshold:
+                regressions.append(entry)
+            elif ratio < 1.0 - threshold:
+                improvements.append(entry)
+        b_old, b_new = o.get("staged_bytes"), n.get("staged_bytes")
+        if b_old and b_new:
+            bratio = b_new / b_old
+            if bratio > 1.0 + threshold:
+                byte_regressions.append(
+                    {"op": key[0], "shape": key[1],
+                     "note": n.get("note"),
+                     "staged_bytes_old": b_old,
+                     "staged_bytes_new": b_new,
+                     "ratio": round(bratio, 3)})
     regressions.sort(key=lambda e: -e["ratio"])
     improvements.sort(key=lambda e: e["ratio"])
+    byte_regressions.sort(key=lambda e: -e["ratio"])
     return {
         "regressions": regressions,
         "improvements": improvements,
+        "byte_regressions": byte_regressions,
         "only_old": sorted(k[:2] for k in old.keys() - new.keys()),
         "only_new": sorted(k[:2] for k in new.keys() - old.keys()),
     }
@@ -101,6 +117,11 @@ def main(argv=None) -> int:
         print(f"REGRESSION {entry['op']},{entry['shape']}: "
               f"{entry['us_old']} -> {entry['us_new']} us "
               f"({entry['ratio']}x)  [{entry['note']}]")
+    for entry in result["byte_regressions"]:
+        print(f"BYTES-REGRESSION {entry['op']},{entry['shape']}: "
+              f"{entry['staged_bytes_old']} -> "
+              f"{entry['staged_bytes_new']} staged bytes "
+              f"({entry['ratio']}x)  [{entry['note']}]")
     for entry in result["improvements"]:
         print(f"improved   {entry['op']},{entry['shape']}: "
               f"{entry['us_old']} -> {entry['us_new']} us "
@@ -109,9 +130,12 @@ def main(argv=None) -> int:
         print(f"removed    {op},{shape}")
     for op, shape in result["only_new"]:
         print(f"added      {op},{shape}")
-    n_reg = len(result["regressions"])
-    print(f"# {n_reg} regression(s), {len(result['improvements'])} "
-          f"improvement(s) at threshold {args.threshold:.0%}")
+    n_reg = len(result["regressions"]) + len(result["byte_regressions"])
+    print(f"# {n_reg} regression(s) "
+          f"({len(result['regressions'])} latency, "
+          f"{len(result['byte_regressions'])} staged-bytes), "
+          f"{len(result['improvements'])} improvement(s) "
+          f"at threshold {args.threshold:.0%}")
     return 1 if (n_reg and args.fail) else 0
 
 

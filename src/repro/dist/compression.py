@@ -21,14 +21,9 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-
-def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """Symmetric per-tensor int8: returns (q int8, scale fp32)."""
-    xf = x.astype(jnp.float32)
-    amax = jnp.max(jnp.abs(xf))
-    scale = jnp.maximum(amax, 1e-12) / 127.0
-    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
-    return q, scale
+# one int8 idiom in the repo: the wire payload here and the quantized
+# KV page pools (engine.paged_cache) share kernels.quant
+from repro.kernels.quant import quantize_int8  # noqa: F401  (re-export)
 
 
 def compressed_psum(x: jax.Array, err: jax.Array, axis_name: str,

@@ -49,16 +49,36 @@ def _normalize(o_t, l, dtype):
     return (o_t / jnp.maximum(l, 1e-30)[..., None]).astype(dtype)
 
 
+def _combine_partials(o_t, m, l, axis_name, dtype):
+    """pmax/psum statistics combine shared by every sharded decode
+    route (must run inside shard_map over ``axis_name``)."""
+    m_star = jax.lax.pmax(m, axis_name)
+    s = jnp.exp(m - m_star)                               # (B, H)
+    o = jax.lax.psum(o_t * s[..., None], axis_name)
+    l = jax.lax.psum(l * s, axis_name)
+    return _normalize(o, l, dtype)
+
+
 def local_decode_attend(q, cache_k, cache_v, cur_len, *,
+                        k_scale=None, v_scale=None,
                         backend="xla") -> jax.Array:
     """Single-shard decode attention (normalized) through the dispatch
-    registry."""
-    o_t, m, l = D.dispatch("decode_partial", backend, q, cache_k,
-                           cache_v, cur_len)
+    registry.
+
+    Passing ``k_scale``/``v_scale`` ((B, KV) fp32) selects the q8 op:
+    ``cache_k``/``cache_v`` are int8 and dequantize inside the kernel.
+    """
+    if k_scale is not None:
+        o_t, m, l = D.dispatch("decode_partial_q8", backend, q, cache_k,
+                               cache_v, k_scale, v_scale, cur_len)
+    else:
+        o_t, m, l = D.dispatch("decode_partial", backend, q, cache_k,
+                               cache_v, cur_len)
     return _normalize(o_t, l, q.dtype)
 
 
 def sharded_flash_decode(mesh, q, cache_k, cache_v, cur_len, *,
+                         k_scale=None, v_scale=None,
                          backend: str = "xla",
                          data_axis: str = "data",
                          model_axis: str = "model",
@@ -70,57 +90,64 @@ def sharded_flash_decode(mesh, q, cache_k, cache_v, cur_len, *,
     cur_len: scalar count of valid positions (global).  Returns the
     normalized (B, H, Dh) context, bitwise-equivalent (up to fp
     reassociation) to the single-shard path on the unsharded cache.
-    ``kernel_impl`` is a deprecated alias for ``backend``.
+    With ``k_scale``/``v_scale`` ((B, KV) fp32, replicated over the
+    model axis — one scale covers the whole sequence) the caches are
+    int8 and decode through the q8 op.  ``kernel_impl`` is a
+    deprecated alias for ``backend``.
     """
     if kernel_impl is not None:
         D.warn_kernel_impl_kwarg("dist.decode.sharded_flash_decode")
         backend = kernel_impl
+    q8 = k_scale is not None
+    op = "decode_partial_q8" if q8 else "decode_partial"
     # 'auto' resolves HERE, outside shard_map, by cache lookup only
     # (replaying a winner the local decode path measured for these
     # shapes, if any): the measuring dispatch tuner — like the block
     # tuner, hence tune=False below — must not run timed kernels
     # inside shard_map tracing
-    backend = D.cached_backend("decode_partial", backend,
-                               (q, cache_k, cache_v, cur_len))
+    sig = ((q, cache_k, cache_v, k_scale, v_scale, cur_len) if q8
+           else (q, cache_k, cache_v, cur_len))
+    backend = D.cached_backend(op, backend, sig)
     B, H, Dh = q.shape
     T = cache_k.shape[1]
     msize = mesh.shape.get(model_axis, 1) if model_axis else 1
     if model_axis not in mesh.axis_names or T % msize:
         # no model axis / ragged split: single-shard reference
         return local_decode_attend(q, cache_k, cache_v, cur_len,
+                                   k_scale=k_scale, v_scale=v_scale,
                                    backend=backend)
     n_local = T // msize
     dsize = mesh.shape.get(data_axis, 1)
     dp = (data_axis if data_axis in mesh.axis_names
           and B % max(dsize, 1) == 0 else None)
 
-    def shard_fn(q, k, v, cur):
+    def shard_fn(q, k, v, *rest):
+        cur = rest[-1]
         pos0 = jax.lax.axis_index(model_axis) * n_local
-        o_t, m, l = D.dispatch("decode_partial", backend, q, k, v, cur,
+        o_t, m, l = D.dispatch(op, backend, q, k, v, *rest[:-1], cur,
                                pos0, tune=False)
-        m_star = jax.lax.pmax(m, model_axis)
-        scale = jnp.exp(m - m_star)                       # (B, H)
-        o = jax.lax.psum(o_t * scale[..., None], model_axis)
-        l = jax.lax.psum(l * scale, model_axis)
-        return _normalize(o, l, q.dtype)
+        return _combine_partials(o_t, m, l, model_axis, q.dtype)
 
+    scale_specs = (PS(dp, None), PS(dp, None)) if q8 else ()
+    scale_args = (k_scale, v_scale) if q8 else ()
     fn = shard_map(
         shard_fn, mesh=mesh,
         in_specs=(PS(dp, None, None),
                   PS(dp, model_axis, None, None),
-                  PS(dp, model_axis, None, None),
-                  PS()),
+                  PS(dp, model_axis, None, None))
+                 + scale_specs + (PS(),),
         out_specs=PS(dp, None, None),
         # the psum/pmax combine replicates the output over the model
         # axis by construction, but check_rep has no rule for
         # pallas_call — disable the static check rather than the path
         check_rep=False)
-    return fn(q, cache_k, cache_v,
+    return fn(q, cache_k, cache_v, *scale_args,
               jnp.asarray(cur_len, jnp.int32).reshape(()))
 
 
 def sharded_mla_flash_decode(mesh, q_abs, q_rope, cache_ckv,
                              cache_krope, cur_len, *, scale: float,
+                             ckv_scale=None, krope_scale=None,
                              backend: str = "xla",
                              data_axis: str = "data",
                              model_axis: str = "model"):
@@ -135,59 +162,78 @@ def sharded_mla_flash_decode(mesh, q_abs, q_rope, cache_ckv,
     registry op — latent and rope operands stay separate all the way
     into the kernel, so no shard ever materializes k_cat/v_cat copies
     — and the same pmax/psum statistics combine as
-    ``sharded_flash_decode`` stitches the softmax.  Returns the
-    normalized (B, H, r) latent context."""
-    backend = D.cached_backend("decode_partial_mla", backend,
-                               (q_abs, q_rope, cache_ckv, cache_krope,
-                                cur_len), {"scale": scale})
+    ``sharded_flash_decode`` stitches the softmax.  With
+    ``ckv_scale``/``krope_scale`` ((B,) fp32, replicated over the
+    model axis) the caches are int8 q8.  Returns the normalized
+    (B, H, r) latent context."""
+    q8 = ckv_scale is not None
+    op = "decode_partial_mla_q8" if q8 else "decode_partial_mla"
+    sig = ((q_abs, q_rope, cache_ckv, cache_krope, ckv_scale,
+            krope_scale, cur_len) if q8
+           else (q_abs, q_rope, cache_ckv, cache_krope, cur_len))
+    backend = D.cached_backend(op, backend, sig, {"scale": scale})
     B, H, r = q_abs.shape
     T = cache_ckv.shape[1]
     msize = mesh.shape.get(model_axis, 1) if model_axis else 1
     if model_axis not in mesh.axis_names or T % msize:
         return local_mla_decode_attend(q_abs, q_rope, cache_ckv,
                                        cache_krope, cur_len,
-                                       scale=scale, backend=backend)
+                                       scale=scale,
+                                       ckv_scale=ckv_scale,
+                                       krope_scale=krope_scale,
+                                       backend=backend)
     n_local = T // msize
     dsize = mesh.shape.get(data_axis, 1)
     dp = (data_axis if data_axis in mesh.axis_names
           and B % max(dsize, 1) == 0 else None)
 
-    def shard_fn(qa, qr, ckv, kr, cur):
+    def shard_fn(qa, qr, ckv, kr, *rest):
+        cur = rest[-1]
         pos0 = jax.lax.axis_index(model_axis) * n_local
-        o_t, m, l = D.dispatch("decode_partial_mla", backend, qa, qr,
-                               ckv, kr, cur, pos0, scale=scale,
+        o_t, m, l = D.dispatch(op, backend, qa, qr, ckv, kr,
+                               *rest[:-1], cur, pos0, scale=scale,
                                tune=False)
-        m_star = jax.lax.pmax(m, model_axis)
-        scl = jnp.exp(m - m_star)                         # (B, H)
-        o = jax.lax.psum(o_t * scl[..., None], model_axis)
-        l = jax.lax.psum(l * scl, model_axis)
-        return _normalize(o, l, qa.dtype)
+        return _combine_partials(o_t, m, l, model_axis, qa.dtype)
 
+    scale_specs = (PS(dp), PS(dp)) if q8 else ()
+    scale_args = (ckv_scale, krope_scale) if q8 else ()
     fn = shard_map(
         shard_fn, mesh=mesh,
         in_specs=(PS(dp, None, None),
                   PS(dp, None, None),
                   PS(dp, model_axis, None),
-                  PS(dp, model_axis, None),
-                  PS()),
+                  PS(dp, model_axis, None))
+                 + scale_specs + (PS(),),
         out_specs=PS(dp, None, None),
         check_rep=False)
-    return fn(q_abs, q_rope, cache_ckv, cache_krope,
+    return fn(q_abs, q_rope, cache_ckv, cache_krope, *scale_args,
               jnp.asarray(cur_len, jnp.int32).reshape(()))
 
 
 def local_mla_decode_attend(q_abs, q_rope, cache_ckv, cache_krope,
                             cur_len, *, scale: float,
+                            ckv_scale=None, krope_scale=None,
                             backend="xla") -> jax.Array:
     """Single-shard split-operand MLA decode attention (normalized
-    (B, H, r) latent context) through the dispatch registry."""
-    o_t, m, l = D.dispatch("decode_partial_mla", backend, q_abs, q_rope,
-                           cache_ckv, cache_krope, cur_len, scale=scale)
+    (B, H, r) latent context) through the dispatch registry.
+
+    ``ckv_scale``/``krope_scale`` ((B,) fp32) select the q8 op over
+    int8 latent caches."""
+    if ckv_scale is not None:
+        o_t, m, l = D.dispatch("decode_partial_mla_q8", backend, q_abs,
+                               q_rope, cache_ckv, cache_krope,
+                               ckv_scale, krope_scale, cur_len,
+                               scale=scale)
+    else:
+        o_t, m, l = D.dispatch("decode_partial_mla", backend, q_abs,
+                               q_rope, cache_ckv, cache_krope, cur_len,
+                               scale=scale)
     return _normalize(o_t, l, q_abs.dtype)
 
 
 def mla_decode_attend(q_abs, q_rope, cache_ckv, cache_krope, cur_len, *,
-                      scale: float, backend: str = "xla", mesh=None,
+                      scale: float, ckv_scale=None, krope_scale=None,
+                      backend: str = "xla", mesh=None,
                       seq_shard: bool = True) -> jax.Array:
     """Mesh-aware split-operand MLA decode attention used by
     ``models.lm``.
@@ -207,9 +253,13 @@ def mla_decode_attend(q_abs, q_rope, cache_ckv, cache_krope, cur_len, *,
             return sharded_mla_flash_decode(mesh, q_abs, q_rope,
                                             cache_ckv, cache_krope,
                                             cur_len, scale=scale,
+                                            ckv_scale=ckv_scale,
+                                            krope_scale=krope_scale,
                                             backend=backend)
     return local_mla_decode_attend(q_abs, q_rope, cache_ckv,
                                    cache_krope, cur_len, scale=scale,
+                                   ckv_scale=ckv_scale,
+                                   krope_scale=krope_scale,
                                    backend=backend)
 
 
@@ -221,25 +271,34 @@ def _page_counts(lens, J, page_size):
 
 
 def local_paged_decode_attend(q, k_pool, v_pool, table, lens, *,
+                              k_scale=None, v_scale=None,
                               backend="xla") -> jax.Array:
     """Single-shard paged decode attention (normalized).
 
     q: (B, H, Dh); k_pool/v_pool: (n_pages, page_size, KV, Dh);
     table: (B, max_pages) int32; lens: (B,) int32 valid positions per
-    slot (0 = inactive slot -> zero output)."""
+    slot (0 = inactive slot -> zero output).  ``k_scale``/``v_scale``
+    ((n_pages, KV) fp32 per-page per-head sidecars) select the q8 op
+    over int8 pools."""
     ps = k_pool.shape[1]
     J = table.shape[1]
     counts = _page_counts(lens, J, ps)
     # page_size/max_pages ride as static kwargs so the page geometry
     # is an EXPLICIT part of the dispatch cache key (see the note at
     # the registered impls in models/attention.py)
-    o_t, m, l = D.dispatch("decode_partial_paged", backend, q, k_pool,
-                           v_pool, table, counts, page_size=ps,
-                           max_pages=J)
+    if k_scale is not None:
+        o_t, m, l = D.dispatch("decode_partial_paged_q8", backend, q,
+                               k_pool, v_pool, k_scale, v_scale, table,
+                               counts, page_size=ps, max_pages=J)
+    else:
+        o_t, m, l = D.dispatch("decode_partial_paged", backend, q,
+                               k_pool, v_pool, table, counts,
+                               page_size=ps, max_pages=J)
     return _normalize(o_t, l, q.dtype)
 
 
 def sharded_paged_flash_decode(mesh, q, k_pool, v_pool, table, lens, *,
+                               k_scale=None, v_scale=None,
                                backend: str = "xla",
                                data_axis: str = "data",
                                model_axis: str = "model"):
@@ -254,20 +313,29 @@ def sharded_paged_flash_decode(mesh, q, k_pool, v_pool, table, lens, *,
     the slots back together — so page->shard placement is free (the
     allocator never needs to know the mesh).  Per-token collective
     bytes stay O(B * H * (Dh + 2)), independent of pool size.
+
+    ``k_scale``/``v_scale`` ((n_pages, KV) fp32) select the q8 op over
+    int8 pools; the sidecars shard on their leading page dim exactly
+    like the pools, so each shard dequantizes its own pages locally.
     """
     n_pages, ps = k_pool.shape[0], k_pool.shape[1]
     J = table.shape[1]
+    q8 = k_scale is not None
+    op = "decode_partial_paged_q8" if q8 else "decode_partial_paged"
     # cache lookup under the same signature the LOCAL measuring path
     # writes — (B, J) counts, not (B,) lens — plus the page geometry
     # statics, so a winner measured locally replays here and a winner
     # from another (page_size, max_pages) does not
-    backend = D.cached_backend(
-        "decode_partial_paged", backend,
-        (q, k_pool, v_pool, table, _page_counts(lens, J, ps)),
-        {"page_size": ps, "max_pages": J})
+    counts_sig = _page_counts(lens, J, ps)
+    sig = ((q, k_pool, v_pool, k_scale, v_scale, table, counts_sig)
+           if q8 else (q, k_pool, v_pool, table, counts_sig))
+    backend = D.cached_backend(op, backend,
+                               sig, {"page_size": ps, "max_pages": J})
     msize = mesh.shape.get(model_axis, 1) if model_axis else 1
     if model_axis not in mesh.axis_names or n_pages % msize:
         return local_paged_decode_attend(q, k_pool, v_pool, table, lens,
+                                         k_scale=k_scale,
+                                         v_scale=v_scale,
                                          backend=backend)
     pp = n_pages // msize
     B = q.shape[0]
@@ -275,34 +343,34 @@ def sharded_paged_flash_decode(mesh, q, k_pool, v_pool, table, lens, *,
     dp = (data_axis if data_axis in mesh.axis_names
           and B % max(dsize, 1) == 0 else None)
 
-    def shard_fn(q, kp, vp, tbl, lens):
+    def shard_fn(q, kp, vp, *rest):
+        tbl, lens = rest[-2], rest[-1]
         p0 = jax.lax.axis_index(model_axis) * pp
         owned = (tbl >= p0) & (tbl < p0 + pp)
         tloc = jnp.clip(tbl - p0, 0, pp - 1)
         counts = jnp.where(owned, _page_counts(lens, J, ps), 0)
-        o_t, m, l = D.dispatch("decode_partial_paged", backend, q, kp,
-                               vp, tloc, counts, page_size=ps,
+        o_t, m, l = D.dispatch(op, backend, q, kp, vp, *rest[:-2],
+                               tloc, counts, page_size=ps,
                                max_pages=J, tune=False)
-        m_star = jax.lax.pmax(m, model_axis)
-        scale = jnp.exp(m - m_star)
-        o = jax.lax.psum(o_t * scale[..., None], model_axis)
-        l = jax.lax.psum(l * scale, model_axis)
-        return _normalize(o, l, q.dtype)
+        return _combine_partials(o_t, m, l, model_axis, q.dtype)
 
+    scale_specs = ((PS(model_axis, None), PS(model_axis, None))
+                   if q8 else ())
+    scale_args = (k_scale, v_scale) if q8 else ()
     fn = shard_map(
         shard_fn, mesh=mesh,
         in_specs=(PS(dp, None, None),
                   PS(model_axis, None, None, None),
-                  PS(model_axis, None, None, None),
-                  PS(dp, None),
-                  PS(dp)),
+                  PS(model_axis, None, None, None))
+                 + scale_specs + (PS(dp, None), PS(dp)),
         out_specs=PS(dp, None, None),
         check_rep=False)
-    return fn(q, k_pool, v_pool, table.astype(jnp.int32),
-              jnp.asarray(lens, jnp.int32))
+    return fn(q, k_pool, v_pool, *scale_args,
+              table.astype(jnp.int32), jnp.asarray(lens, jnp.int32))
 
 
 def paged_decode_attend(q, k_pool, v_pool, table, lens, *,
+                        k_scale=None, v_scale=None,
                         backend: str = "xla", mesh=None,
                         seq_shard: bool = True) -> jax.Array:
     """Mesh-aware paged decode attention used by ``models.lm``.
@@ -310,6 +378,7 @@ def paged_decode_attend(q, k_pool, v_pool, table, lens, *,
     The paged sibling of ``decode_attend``: routes to
     ``sharded_paged_flash_decode`` when ``seq_shard`` and a mesh with a
     'model' axis divides the pool evenly, else the local registry op.
+    ``k_scale``/``v_scale`` select the q8 (int8 pools) route.
     """
     if seq_shard:
         mesh = resolve_mesh(mesh, "dist.decode.paged_decode_attend")
@@ -318,32 +387,47 @@ def paged_decode_attend(q, k_pool, v_pool, table, lens, *,
                 and n_pages % mesh.shape["model"] == 0):
             return sharded_paged_flash_decode(mesh, q, k_pool, v_pool,
                                               table, lens,
+                                              k_scale=k_scale,
+                                              v_scale=v_scale,
                                               backend=backend)
     return local_paged_decode_attend(q, k_pool, v_pool, table, lens,
+                                     k_scale=k_scale, v_scale=v_scale,
                                      backend=backend)
 
 
 def local_mla_paged_decode_attend(q_abs, q_rope, ckv_pool, krope_pool,
                                   table, lens, *, scale: float,
+                                  ckv_scale=None, krope_scale=None,
                                   backend="xla") -> jax.Array:
     """Single-shard split-operand paged MLA decode attention
     (normalized (B, H, r) latent context).
 
     q_abs: (B, H, r) fp32; q_rope: (B, H, rope); ckv_pool: (n_pages,
     page_size, r); krope_pool: (n_pages, page_size, rope); table:
-    (B, max_pages) int32; lens: (B,) int32 valid positions per slot."""
+    (B, max_pages) int32; lens: (B,) int32 valid positions per slot.
+    ``ckv_scale``/``krope_scale`` ((n_pages,) fp32 per-page sidecars)
+    select the q8 op over int8 pools."""
     ps = ckv_pool.shape[1]
     J = table.shape[1]
     counts = _page_counts(lens, J, ps)
-    o_t, m, l = D.dispatch("decode_partial_mla_paged", backend, q_abs,
-                           q_rope, ckv_pool, krope_pool, table, counts,
-                           scale=scale, page_size=ps, max_pages=J)
+    if ckv_scale is not None:
+        o_t, m, l = D.dispatch("decode_partial_mla_paged_q8", backend,
+                               q_abs, q_rope, ckv_pool, krope_pool,
+                               ckv_scale, krope_scale, table, counts,
+                               scale=scale, page_size=ps, max_pages=J)
+    else:
+        o_t, m, l = D.dispatch("decode_partial_mla_paged", backend,
+                               q_abs, q_rope, ckv_pool, krope_pool,
+                               table, counts, scale=scale,
+                               page_size=ps, max_pages=J)
     return _normalize(o_t, l, q_abs.dtype)
 
 
 def sharded_mla_paged_flash_decode(mesh, q_abs, q_rope, ckv_pool,
                                    krope_pool, table, lens, *,
-                                   scale: float, backend: str = "xla",
+                                   scale: float, ckv_scale=None,
+                                   krope_scale=None,
+                                   backend: str = "xla",
                                    data_axis: str = "data",
                                    model_axis: str = "model"):
     """Split-operand paged MLA decode with BOTH latent pools sharded
@@ -355,19 +439,31 @@ def sharded_mla_paged_flash_decode(mesh, q_abs, q_rope, ckv_pool,
     shard zeroes the counts of foreign pages and the pmax/psum
     statistics combine stitches the slots — so page->shard placement
     stays free, and no shard ever builds a pool-wide k_cat/v_cat copy.
+
+    ``ckv_scale``/``krope_scale`` ((n_pages,) fp32) select the q8 op
+    over int8 pools; the sidecars shard on the page dim exactly like
+    the pools.
     """
     n_pages, ps = ckv_pool.shape[0], ckv_pool.shape[1]
     J = table.shape[1]
+    q8 = ckv_scale is not None
+    op = ("decode_partial_mla_paged_q8" if q8
+          else "decode_partial_mla_paged")
+    counts_sig = _page_counts(lens, J, ps)
+    sig = ((q_abs, q_rope, ckv_pool, krope_pool, ckv_scale,
+            krope_scale, table, counts_sig) if q8
+           else (q_abs, q_rope, ckv_pool, krope_pool, table,
+                 counts_sig))
     backend = D.cached_backend(
-        "decode_partial_mla_paged", backend,
-        (q_abs, q_rope, ckv_pool, krope_pool, table,
-         _page_counts(lens, J, ps)),
+        op, backend, sig,
         {"scale": scale, "page_size": ps, "max_pages": J})
     msize = mesh.shape.get(model_axis, 1) if model_axis else 1
     if model_axis not in mesh.axis_names or n_pages % msize:
         return local_mla_paged_decode_attend(q_abs, q_rope, ckv_pool,
                                              krope_pool, table, lens,
                                              scale=scale,
+                                             ckv_scale=ckv_scale,
+                                             krope_scale=krope_scale,
                                              backend=backend)
     pp = n_pages // msize
     B = q_abs.shape[0]
@@ -375,36 +471,35 @@ def sharded_mla_paged_flash_decode(mesh, q_abs, q_rope, ckv_pool,
     dp = (data_axis if data_axis in mesh.axis_names
           and B % max(dsize, 1) == 0 else None)
 
-    def shard_fn(qa, qr, ckv, kr, tbl, lens):
+    def shard_fn(qa, qr, ckv, kr, *rest):
+        tbl, lens = rest[-2], rest[-1]
         p0 = jax.lax.axis_index(model_axis) * pp
         owned = (tbl >= p0) & (tbl < p0 + pp)
         tloc = jnp.clip(tbl - p0, 0, pp - 1)
         counts = jnp.where(owned, _page_counts(lens, J, ps), 0)
-        o_t, m, l = D.dispatch("decode_partial_mla_paged", backend, qa,
-                               qr, ckv, kr, tloc, counts, scale=scale,
+        o_t, m, l = D.dispatch(op, backend, qa, qr, ckv, kr,
+                               *rest[:-2], tloc, counts, scale=scale,
                                page_size=ps, max_pages=J, tune=False)
-        m_star = jax.lax.pmax(m, model_axis)
-        scl = jnp.exp(m - m_star)
-        o = jax.lax.psum(o_t * scl[..., None], model_axis)
-        l = jax.lax.psum(l * scl, model_axis)
-        return _normalize(o, l, qa.dtype)
+        return _combine_partials(o_t, m, l, model_axis, qa.dtype)
 
+    scale_specs = (PS(model_axis), PS(model_axis)) if q8 else ()
+    scale_args = (ckv_scale, krope_scale) if q8 else ()
     fn = shard_map(
         shard_fn, mesh=mesh,
         in_specs=(PS(dp, None, None),
                   PS(dp, None, None),
                   PS(model_axis, None, None),
-                  PS(model_axis, None, None),
-                  PS(dp, None),
-                  PS(dp)),
+                  PS(model_axis, None, None))
+                 + scale_specs + (PS(dp, None), PS(dp)),
         out_specs=PS(dp, None, None),
         check_rep=False)
-    return fn(q_abs, q_rope, ckv_pool, krope_pool,
+    return fn(q_abs, q_rope, ckv_pool, krope_pool, *scale_args,
               table.astype(jnp.int32), jnp.asarray(lens, jnp.int32))
 
 
 def mla_paged_decode_attend(q_abs, q_rope, ckv_pool, krope_pool, table,
-                            lens, *, scale: float, backend: str = "xla",
+                            lens, *, scale: float, ckv_scale=None,
+                            krope_scale=None, backend: str = "xla",
                             mesh=None, seq_shard: bool = True
                             ) -> jax.Array:
     """Mesh-aware split-operand paged MLA decode attention used by
@@ -414,6 +509,7 @@ def mla_paged_decode_attend(q_abs, q_rope, ckv_pool, krope_pool, table,
     a mesh with a 'model' axis divides the pool evenly, else the local
     registry op — the copy-free replacement for concatenating the two
     pools into a KV=1 view of ``paged_decode_attend``.
+    ``ckv_scale``/``krope_scale`` select the q8 (int8 pools) route.
     """
     if seq_shard:
         mesh = resolve_mesh(mesh, "dist.decode.mla_paged_decode_attend")
@@ -422,13 +518,18 @@ def mla_paged_decode_attend(q_abs, q_rope, ckv_pool, krope_pool, table,
                 and n_pages % mesh.shape["model"] == 0):
             return sharded_mla_paged_flash_decode(
                 mesh, q_abs, q_rope, ckv_pool, krope_pool, table, lens,
-                scale=scale, backend=backend)
+                scale=scale, ckv_scale=ckv_scale,
+                krope_scale=krope_scale, backend=backend)
     return local_mla_paged_decode_attend(q_abs, q_rope, ckv_pool,
                                          krope_pool, table, lens,
-                                         scale=scale, backend=backend)
+                                         scale=scale,
+                                         ckv_scale=ckv_scale,
+                                         krope_scale=krope_scale,
+                                         backend=backend)
 
 
 def decode_attend(q, cache_k, cache_v, cur_len, *,
+                  k_scale=None, v_scale=None,
                   backend: str = "xla",
                   mesh=None, seq_shard: bool = True,
                   kernel_impl: Optional[str] = None) -> jax.Array:
@@ -451,6 +552,9 @@ def decode_attend(q, cache_k, cache_v, cur_len, *,
         if (mesh is not None and "model" in mesh.axis_names
                 and T % mesh.shape["model"] == 0):
             return sharded_flash_decode(mesh, q, cache_k, cache_v,
-                                        cur_len, backend=backend)
+                                        cur_len, k_scale=k_scale,
+                                        v_scale=v_scale,
+                                        backend=backend)
     return local_decode_attend(q, cache_k, cache_v, cur_len,
+                               k_scale=k_scale, v_scale=v_scale,
                                backend=backend)

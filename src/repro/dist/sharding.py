@@ -235,7 +235,8 @@ def cache_pspecs(cfg, mesh, batch: int, *, seq_shard: bool = False):
 
 def paged_cache_pspecs(cfg, mesh, batch_slots: int, *,
                        seq_shard: bool = False,
-                       n_pages: Optional[int] = None):
+                       n_pages: Optional[int] = None,
+                       quantized: bool = False):
     """PartitionSpec tree matching ``engine.paged_cache.paged_cache_spec``.
 
     Pool leaves are ``(L, n_pages, page_size, ...)``: with
@@ -245,7 +246,9 @@ def paged_cache_pspecs(cfg, mesh, batch_slots: int, *,
     combines the statistics), else the kv-head dim takes 'model' when
     divisible, mirroring the dense layout.  The audio cross cache stays
     slot-dense (batch over data, replicated over 'model': it is
-    attended locally per shard in paged mode).
+    attended locally per shard in paged mode).  With ``quantized=True``
+    the tree grows the int8 pools' fp32 scale-sidecar leaves, sharded
+    on the same page (and, for GQA, kv-head) dims as their pools.
     """
     from repro.engine import paged_cache as PC  # local import: no cycle
 
@@ -263,11 +266,21 @@ def paged_cache_pspecs(cfg, mesh, batch_slots: int, *,
 
     def gqa_pool():
         sh = PS(None, pageax, None, kvax, None)
-        return {"k": sh, "v": sh}
+        pool = {"k": sh, "v": sh}
+        if quantized:
+            ssh = PS(None, pageax, kvax)       # (L, n_pages, KV)
+            pool["k_scale"] = ssh
+            pool["v_scale"] = ssh
+        return pool
 
     def mla_pool():
         latent = PS(None, pageax, None, None)
-        return {"ckv": latent, "krope": latent}
+        pool = {"ckv": latent, "krope": latent}
+        if quantized:
+            ssh = PS(None, pageax)             # (L, n_pages)
+            pool["ckv_scale"] = ssh
+            pool["krope_scale"] = ssh
+        return pool
 
     fam = cfg.family
     if fam in ("dense", "vlm"):
@@ -285,7 +298,8 @@ def paged_cache_pspecs(cfg, mesh, batch_slots: int, *,
 
 def paged_decode_batch_pspecs(cfg, mesh, global_batch: int, *,
                               seq_shard: bool = False,
-                              n_pages: Optional[int] = None):
+                              n_pages: Optional[int] = None,
+                              quantized: bool = False):
     """PartitionSpec tree for a paged decode batch
     ({token, cur_len (B,), block_table, cache} [+ enc_lens for
     audio])."""
@@ -295,7 +309,8 @@ def paged_decode_batch_pspecs(cfg, mesh, global_batch: int, *,
         "block_table": _batched(mesh, 2, global_batch),
         "cache": paged_cache_pspecs(cfg, mesh, global_batch,
                                     seq_shard=seq_shard,
-                                    n_pages=n_pages),
+                                    n_pages=n_pages,
+                                    quantized=quantized),
     }
     if cfg.family == "audio":
         out["enc_lens"] = _batched(mesh, 1, global_batch)

@@ -139,7 +139,12 @@ def _pow2s(lo: int, hi: int, cap: int) -> Tuple[int, ...]:
 
 
 def _dtype_bytes(dtype: str) -> int:
-    return 2 if "16" in dtype else 4
+    # '16' first: 'bfloat16'/'float16' contain no '8'; int8/fp8 do
+    if "16" in dtype:
+        return 2
+    if "8" in dtype:
+        return 1
+    return 4
 
 
 # fixed staging-buffer capacity for the energy tie-break: widening the

@@ -159,27 +159,29 @@ def _decode_winner(entry, cands) -> "str | None":
 # ======================================================================
 
 def _arg_signature(args, kwargs):
-    """Flattened shapes of every array-typed argument, plus the first
-    array dtype with the non-array static args (activation name,
-    causal flag, ...) folded in — the cache key for a dispatch
-    decision.  Without the static part, ``mlp(..., 'gelu')`` and
-    ``mlp(..., 'relu')`` at the same shapes would collide on one
-    measured winner."""
+    """Flattened shapes of every array-typed argument, plus the
+    deduplicated dtypes of ALL array args with the non-array static
+    args (activation name, causal flag, ...) folded in — the cache key
+    for a dispatch decision.  Without the static part,
+    ``mlp(..., 'gelu')`` and ``mlp(..., 'relu')`` at the same shapes
+    would collide on one measured winner; keying only the FIRST array
+    dtype would collide an fp32-query int8-pool call with its all-bf16
+    twin (the query leads both), so every distinct operand dtype
+    joins the key."""
     import jax
 
     shape: list = []
     static: list = []
-    dtype = None
+    dtypes: dict = {}                       # ordered de-dup
     for leaf in jax.tree.leaves(
             (args, kwargs), is_leaf=lambda x: x is None):
         if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
             shape.extend(int(s) for s in leaf.shape)
             shape.append(-1)                    # arg separator
-            if dtype is None:
-                dtype = str(leaf.dtype)
+            dtypes[str(leaf.dtype)] = None
         elif isinstance(leaf, (str, bool, int, float)) or leaf is None:
             static.append(str(leaf))
-    dtype = dtype or "float32"
+    dtype = ",".join(dtypes) or "float32"
     if static:
         dtype = dtype + ";" + ",".join(static)
     return tuple(shape), dtype

@@ -23,9 +23,13 @@ from repro.kernels import autotune
 from repro.kernels.vwr_attention import vwr_attention_p
 from repro.kernels.vwr_conv2d import vwr_conv2d_p
 from repro.kernels.vwr_decode import (vwr_flash_decode_p,
+                                      vwr_flash_decode_q8_p,
                                       vwr_mla_flash_decode_p,
+                                      vwr_mla_flash_decode_q8_p,
                                       vwr_mla_paged_flash_decode_p,
-                                      vwr_paged_flash_decode_p)
+                                      vwr_mla_paged_flash_decode_q8_p,
+                                      vwr_paged_flash_decode_p,
+                                      vwr_paged_flash_decode_q8_p)
 from repro.kernels.vwr_depthwise import vwr_depthwise_p
 from repro.kernels.vwr_matmul import vwr_matmul_p, vwr_swiglu_p
 
@@ -529,6 +533,186 @@ def _decode_blocks(B, T, H, KV, D, dtype, interpret):
         candidates=autotune.decode_candidates(T, D, dtype),
         prior=lambda c: autotune.decode_prior(B, T, H, KV, D, dtype, c),
         runner=runner if autotune.enabled() else None)
+
+
+# ======================================================================
+# q8 flash decode: int8 caches / page pools, fp32 scale sidecars,
+# dequantized in-kernel on the staged block
+# ======================================================================
+
+@functools.partial(jax.jit, static_argnames=("bkv", "interpret"))
+def _vwr_flash_decode_q8_jit(q, k, v, k_scale, v_scale, lens, *, bkv,
+                             interpret):
+    B, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qf = q.reshape(B * KV, G, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, T, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, T, D)
+    ksf = k_scale.astype(jnp.float32).reshape(B * KV)
+    vsf = v_scale.astype(jnp.float32).reshape(B * KV)
+    bkv_ = min(bkv, T)
+    kf = _pad_dim(kf, 1, bkv_)
+    vf = _pad_dim(vf, 1, bkv_)
+    o_t, m, l = vwr_flash_decode_q8_p(qf, kf, vf, ksf, vsf, lens,
+                                      bkv=bkv_, t_valid=T,
+                                      interpret=interpret)
+    return (o_t.reshape(B, H, D), m.reshape(B, H), l.reshape(B, H))
+
+
+def vwr_flash_decode_q8(q, k, v, k_scale, v_scale, cur_len, pos0=0, *,
+                        bkv=None, interpret=None):
+    """``vwr_flash_decode`` over an int8 cache with per-(B, KV) fp32
+    scales: the staged cache block is 1 byte/feature in HBM and is
+    dequantized in-kernel (scores/values rescaled after the int8
+    dots).  Same (o_tilde, m, l) fp32 combine contract."""
+    interpret = _auto_interpret(interpret)
+    B, T = q.shape[0], k.shape[1]
+    H, KV, D = q.shape[1], k.shape[2], q.shape[2]
+    if bkv is None:
+        bkv = _decode_blocks_q8(B, T, H, KV, D, interpret)[0]
+    lens = jnp.stack([jnp.asarray(cur_len, jnp.int32).reshape(()),
+                      jnp.asarray(pos0, jnp.int32).reshape(())]
+                     ).reshape(1, 2)
+    return _vwr_flash_decode_q8_jit(q, k, v, k_scale, v_scale, lens,
+                                    bkv=bkv, interpret=interpret)
+
+
+def _decode_blocks_q8(B, T, H, KV, D, interpret):
+    backend = _backend_tag(interpret)
+
+    def runner(cand):
+        bkv, = cand
+        qz = jnp.ones((B, H, D), jnp.float32)
+        kz = jnp.ones((B, T, KV, D), jnp.int8)
+        sz = jnp.ones((B, KV), jnp.float32)
+        lens = jnp.asarray([[T, 0]], jnp.int32)
+
+        def run():
+            jax.block_until_ready(_vwr_flash_decode_q8_jit(
+                qz, kz, kz, sz, sz, lens, bkv=bkv, interpret=interpret))
+        return run
+
+    # same op name as the bf16 path: the cache key's dtype field
+    # ("int8") separates the entries, and _dtype_bytes(int8) == 1 feeds
+    # the staged-bytes prior the halved traffic
+    return autotune.get_blocks(
+        "decode", (B, T, H, KV, D), "int8", backend,
+        candidates=autotune.decode_candidates(T, D, "int8"),
+        prior=lambda c: autotune.decode_prior(B, T, H, KV, D, "int8", c),
+        runner=runner if autotune.enabled() else None)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _vwr_paged_flash_decode_q8_jit(q, k_pool, v_pool, k_scale, v_scale,
+                                   table, counts, *, interpret):
+    B, H, D = q.shape
+    n_pages, ps, KV, _ = k_pool.shape
+    G = H // KV
+    qf = q.reshape(B * KV, G, D)
+    tbl = jnp.clip(table, 0, n_pages - 1).astype(jnp.int32)
+    o_t, m, l = vwr_paged_flash_decode_q8_p(
+        qf, k_pool, v_pool, k_scale.astype(jnp.float32),
+        v_scale.astype(jnp.float32), tbl, counts.astype(jnp.int32),
+        interpret=interpret)
+    return (o_t.reshape(B, H, D), m.reshape(B, H), l.reshape(B, H))
+
+
+def vwr_paged_flash_decode_q8(q, k_pool, v_pool, k_scale, v_scale,
+                              table, counts, *, interpret=None):
+    """``vwr_paged_flash_decode`` over int8 page pools.
+
+    k_pool, v_pool: int8 (n_pages, page_size, KV, Dh); k_scale,
+    v_scale: fp32 (n_pages, KV) sidecars riding the same block-table
+    indirection as the pages (scalar-prefetch, resolved per grid
+    step).  Staged cache traffic per token is halved vs bf16 pools;
+    softmax math stays fp32."""
+    interpret = _auto_interpret(interpret)
+    return _vwr_paged_flash_decode_q8_jit(
+        q, k_pool, v_pool, k_scale, v_scale, table, counts,
+        interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bkv", "interpret"))
+def _vwr_mla_flash_decode_q8_jit(q_abs, q_rope, c_kv, k_rope, ckv_scale,
+                                 krope_scale, lens, *, scale, bkv,
+                                 interpret):
+    T = c_kv.shape[1]
+    bkv_ = min(bkv, T)
+    ckv = _pad_dim(c_kv, 1, bkv_)
+    kr = _pad_dim(k_rope, 1, bkv_)
+    return vwr_mla_flash_decode_q8_p(
+        q_abs, q_rope, ckv, kr, ckv_scale.astype(jnp.float32),
+        krope_scale.astype(jnp.float32), lens, scale=scale, bkv=bkv_,
+        t_valid=T, interpret=interpret)
+
+
+def vwr_mla_flash_decode_q8(q_abs, q_rope, c_kv, k_rope, ckv_scale,
+                            krope_scale, cur_len, pos0=0, *, scale,
+                            bkv=None, interpret=None):
+    """``vwr_mla_flash_decode`` over int8 latent/rope caches with
+    per-(B,) fp32 scales.  Same combine contract."""
+    interpret = _auto_interpret(interpret)
+    B, H, r = q_abs.shape
+    T, rope = c_kv.shape[1], q_rope.shape[2]
+    if bkv is None:
+        bkv = _mla_decode_blocks_q8(B, T, H, r, rope, interpret)[0]
+    lens = jnp.stack([jnp.asarray(cur_len, jnp.int32).reshape(()),
+                      jnp.asarray(pos0, jnp.int32).reshape(())]
+                     ).reshape(1, 2)
+    return _vwr_mla_flash_decode_q8_jit(
+        q_abs, q_rope, c_kv, k_rope, ckv_scale, krope_scale, lens,
+        scale=scale, bkv=bkv, interpret=interpret)
+
+
+def _mla_decode_blocks_q8(B, T, H, r, rope, interpret):
+    backend = _backend_tag(interpret)
+
+    def runner(cand):
+        bkv, = cand
+        qa = jnp.ones((B, H, r), jnp.float32)
+        qr = jnp.ones((B, H, rope), jnp.float32)
+        ckv = jnp.ones((B, T, r), jnp.int8)
+        kr = jnp.ones((B, T, rope), jnp.int8)
+        sz = jnp.ones((B,), jnp.float32)
+        lens = jnp.asarray([[T, 0]], jnp.int32)
+
+        def run():
+            jax.block_until_ready(_vwr_mla_flash_decode_q8_jit(
+                qa, qr, ckv, kr, sz, sz, lens, scale=1.0, bkv=bkv,
+                interpret=interpret))
+        return run
+
+    return autotune.get_blocks(
+        "decode_mla", (B, T, H, r, rope), "int8", backend,
+        candidates=autotune.decode_candidates(T, r + rope, "int8"),
+        prior=lambda c: autotune.decode_prior(B, T, H, 1, r + rope,
+                                              "int8", c),
+        runner=runner if autotune.enabled() else None)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def _vwr_mla_paged_flash_decode_q8_jit(q_abs, q_rope, ckv_pool,
+                                       krope_pool, ckv_scale,
+                                       krope_scale, table, counts, *,
+                                       scale, interpret):
+    n_pages = ckv_pool.shape[0]
+    tbl = jnp.clip(table, 0, n_pages - 1).astype(jnp.int32)
+    return vwr_mla_paged_flash_decode_q8_p(
+        q_abs, q_rope, ckv_pool, krope_pool,
+        ckv_scale.astype(jnp.float32), krope_scale.astype(jnp.float32),
+        tbl, counts.astype(jnp.int32), scale=scale, interpret=interpret)
+
+
+def vwr_mla_paged_flash_decode_q8(q_abs, q_rope, ckv_pool, krope_pool,
+                                  ckv_scale, krope_scale, table, counts,
+                                  *, scale, interpret=None):
+    """``vwr_mla_paged_flash_decode`` over int8 latent page pools with
+    per-page fp32 scales riding the block-table indirection."""
+    interpret = _auto_interpret(interpret)
+    return _vwr_mla_paged_flash_decode_q8_jit(
+        q_abs, q_rope, ckv_pool, krope_pool, ckv_scale, krope_scale,
+        table, counts, scale=scale, interpret=interpret)
 
 
 def _attention_blocks(B, S, H, KV, D, dtype, causal, interpret):

@@ -1,0 +1,54 @@
+"""Shared symmetric-int8 quantization idiom.
+
+One int8 recipe for the whole repo: ``scale = max(amax, eps) / 127``,
+``q = clip(round(x / scale), -127, 127)``.  Consumers:
+
+- ``dist/compression.py`` — per-tensor wire payloads for the
+  compressed all-reduce (error feedback on top);
+- ``engine/paged_cache.py`` — per-page (per-head) KV page pools with
+  fp32 scale sidecars, dequantized inside the flash-decode kernels.
+
+The eps floor makes an all-zero reduction group safe (scale stays
+strictly positive, roundtrip returns exact zeros) and symmetric
+clipping at +-127 keeps ``q(x) == -q(-x)`` exactly.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+# amax floor: keeps the scale strictly positive for all-zero groups so
+# x/scale never divides by zero and dequant(quant(0)) == 0 exactly
+QEPS = 1e-12
+
+Axis = Union[None, int, Tuple[int, ...]]
+
+
+def int8_scale(amax: jax.Array) -> jax.Array:
+    """fp32 scale for a symmetric int8 grid covering [-amax, amax]."""
+    return jnp.maximum(amax.astype(jnp.float32), QEPS) / 127.0
+
+
+def quantize_int8(x: jax.Array,
+                  axis: Axis = None) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric int8 over ``axis`` groups (None = per-tensor).
+
+    Returns ``(q int8, scale fp32)``.  With ``axis=None`` the scale is
+    a scalar (the wire format ``dist.compression`` ships); with an
+    axis/tuple the reduced dims are kept as size-1 so the scale
+    broadcasts straight back against ``q`` for dequantization.
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=axis, keepdims=axis is not None)
+    scale = int8_scale(amax)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array,
+                    dtype: Optional[jnp.dtype] = None) -> jax.Array:
+    """``q * scale`` in fp32 (optionally cast to ``dtype``)."""
+    out = q.astype(jnp.float32) * scale
+    return out if dtype is None else out.astype(dtype)

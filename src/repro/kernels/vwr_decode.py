@@ -391,6 +391,428 @@ def vwr_paged_flash_decode_p(q: jax.Array, k_pool: jax.Array,
     )(table, counts, q, k_pool, v_pool)
 
 
+# ======================================================================
+# q8 variants: int8 caches/pools with fp32 scale sidecars
+# ======================================================================
+#
+# The staged cache block stays int8 all the way into VMEM — HBM traffic
+# per token is 1 byte/feature instead of 2 (bf16) — and dequantization
+# happens INSIDE the kernel on the staged block.  Because every scale
+# is constant over the staged block (per sequence for dense, per
+# physical page for paged), the dequant multiplies hoist through the
+# dots exactly: ``q.(k*s) == (q.k)*s`` and ``p@(v*s) == (p@v)*s``, so
+# the int8 path adds one scalar multiply per staged block, not one per
+# staged element.  Scales ride as scalar-prefetch operands next to the
+# block table, resolved by the same index arithmetic as the page DMA.
+# Softmax/accumulate math is fp32 throughout, as in the bf16 kernels.
+
+
+def _decode_kernel_q8(ks_ref, vs_ref, q_ref, k_ref, v_ref, lens_ref,
+                      ot_ref, m_ref, l_ref, acc_ref, ms_ref, ls_ref, *,
+                      scale, bkv, t_valid, n_kv):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        ms_ref[...] = jnp.full_like(ms_ref, NEG_INF)
+        ls_ref[...] = jnp.zeros_like(ls_ref)
+
+    cur = lens_ref[0, 0]
+    pos0 = lens_ref[0, 1]
+    ks = ks_ref[b]                                      # per-row scales
+    vs = vs_ref[b]
+    q = q_ref[0].astype(jnp.float32) * scale            # (G, Dh)
+    k = k_ref[0].astype(jnp.float32)                    # (bkv, Dh) int8
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * ks
+    idx = j * bkv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = (idx < t_valid) & (pos0 + idx < cur)
+    s = jnp.where(valid, s, NEG_INF)
+    m_prev = ms_ref[:, 0]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))         # (G,)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where((m_new > NEG_INF / 2)[:, None], p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    ls_ref[:, 0] = ls_ref[:, 0] * corr + p.sum(axis=-1)
+    pv = jnp.dot(p, v_ref[0].astype(jnp.float32),
+                 preferred_element_type=jnp.float32) * vs
+    acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+    ms_ref[:, 0] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _store():
+        ot_ref[0] = acc_ref[...]
+        m_ref[0] = ms_ref[:, 0]
+        l_ref[0] = ls_ref[:, 0]
+
+
+def vwr_flash_decode_q8_p(q: jax.Array, k: jax.Array, v: jax.Array,
+                          k_scale: jax.Array, v_scale: jax.Array,
+                          lens: jax.Array, *, bkv: int, t_valid: int,
+                          interpret: bool = False):
+    """int8 dense flash decode: k, v int8 (BKV, Tp, Dh); k_scale,
+    v_scale (BKV,) fp32 per flattened kv-head row.  Same unnormalized
+    (o_tilde, m, l) fp32 contract as ``vwr_flash_decode_p``."""
+    BKV, G, D = q.shape
+    Tp = k.shape[1]
+    assert k.shape == (BKV, Tp, D) and v.shape == k.shape
+    assert k_scale.shape == (BKV,) and v_scale.shape == (BKV,)
+    assert Tp % bkv == 0, (Tp, bkv)
+    n_kv = Tp // bkv
+    scale = 1.0 / (D ** 0.5)
+    kernel = functools.partial(_decode_kernel_q8, scale=scale, bkv=bkv,
+                               t_valid=t_valid, n_kv=n_kv)
+    f32 = jnp.float32
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # k_scale, v_scale
+        grid=(BKV, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, G, D), lambda b, j, ks, vs: (b, 0, 0)),
+            pl.BlockSpec((1, bkv, D), lambda b, j, ks, vs: (b, j, 0)),
+            pl.BlockSpec((1, bkv, D), lambda b, j, ks, vs: (b, j, 0)),
+            pl.BlockSpec((1, 2), lambda b, j, ks, vs: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, G, D), lambda b, j, ks, vs: (b, 0, 0)),
+            pl.BlockSpec((1, G), lambda b, j, ks, vs: (b, 0)),
+            pl.BlockSpec((1, G), lambda b, j, ks, vs: (b, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((G, D), f32),
+            pltpu.VMEM((G, 1), f32),
+            pltpu.VMEM((G, 1), f32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((BKV, G, D), f32),
+            jax.ShapeDtypeStruct((BKV, G), f32),
+            jax.ShapeDtypeStruct((BKV, G), f32),
+        ],
+        compiler_params=tpu_compiler_params("parallel", "arbitrary"),
+        interpret=interpret,
+    )(k_scale, v_scale, q, k, v, lens)
+
+
+def _paged_decode_kernel_q8(tbl_ref, cnt_ref, ks_ref, vs_ref, q_ref,
+                            k_ref, v_ref, ot_ref, m_ref, l_ref, acc_ref,
+                            ms_ref, ls_ref, *, scale, page_size,
+                            n_logical, kv_heads):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        ms_ref[...] = jnp.full_like(ms_ref, NEG_INF)
+        ls_ref[...] = jnp.zeros_like(ls_ref)
+
+    count = cnt_ref[b // kv_heads, j]                   # tokens valid here
+    page = tbl_ref[b // kv_heads, j]
+    ks = ks_ref[page, b % kv_heads]                     # per-page per-head
+    vs = vs_ref[page, b % kv_heads]
+    q = q_ref[0].astype(jnp.float32) * scale            # (G, Dh)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)           # (ps, Dh) int8
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * ks
+    idx = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(idx < count, s, NEG_INF)
+    m_prev = ms_ref[:, 0]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))         # (G,)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where((m_new > NEG_INF / 2)[:, None], p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    ls_ref[:, 0] = ls_ref[:, 0] * corr + p.sum(axis=-1)
+    pv = jnp.dot(p, v_ref[0, :, 0, :].astype(jnp.float32),
+                 preferred_element_type=jnp.float32) * vs
+    acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+    ms_ref[:, 0] = m_new
+
+    @pl.when(j == n_logical - 1)
+    def _store():
+        ot_ref[0] = acc_ref[...]
+        m_ref[0] = ms_ref[:, 0]
+        l_ref[0] = ls_ref[:, 0]
+
+
+def vwr_paged_flash_decode_q8_p(q: jax.Array, k_pool: jax.Array,
+                                v_pool: jax.Array, k_scale: jax.Array,
+                                v_scale: jax.Array, table: jax.Array,
+                                counts: jax.Array, *,
+                                interpret: bool = False):
+    """Flash decode over int8 page pools with per-page per-head scales.
+
+    k_pool, v_pool: int8 (n_pages, page_size, KV, Dh); k_scale,
+    v_scale: fp32 (n_pages, KV) sidecars resolved through the SAME
+    ``table[slot, j]`` scalar-prefetch indirection as the page DMA.
+    Everything else matches ``vwr_paged_flash_decode_p``.
+    """
+    BKV, G, D = q.shape
+    n_pages, ps, KV, Dp = k_pool.shape
+    assert v_pool.shape == k_pool.shape and Dp == D
+    assert k_scale.shape == (n_pages, KV), (k_scale.shape, k_pool.shape)
+    assert v_scale.shape == (n_pages, KV)
+    assert BKV % KV == 0, (BKV, KV)
+    B, J = table.shape
+    assert counts.shape == (B, J) and B * KV == BKV, (table.shape, BKV)
+    scale = 1.0 / (D ** 0.5)
+    kernel = functools.partial(_paged_decode_kernel_q8, scale=scale,
+                               page_size=ps, n_logical=J, kv_heads=KV)
+    f32 = jnp.float32
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,          # table, counts, k_scale, v_scale
+        grid=(BKV, J),
+        in_specs=[
+            pl.BlockSpec((1, G, D),
+                         lambda b, j, tbl, cnt, ks, vs: (b, 0, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, j, tbl, cnt, ks, vs:
+                         (tbl[b // KV, j], 0, b % KV, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, j, tbl, cnt, ks, vs:
+                         (tbl[b // KV, j], 0, b % KV, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, G, D),
+                         lambda b, j, tbl, cnt, ks, vs: (b, 0, 0)),
+            pl.BlockSpec((1, G), lambda b, j, tbl, cnt, ks, vs: (b, 0)),
+            pl.BlockSpec((1, G), lambda b, j, tbl, cnt, ks, vs: (b, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((G, D), f32),
+            pltpu.VMEM((G, 1), f32),
+            pltpu.VMEM((G, 1), f32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((BKV, G, D), f32),
+            jax.ShapeDtypeStruct((BKV, G), f32),
+            jax.ShapeDtypeStruct((BKV, G), f32),
+        ],
+        compiler_params=tpu_compiler_params("parallel", "arbitrary"),
+        interpret=interpret,
+    )(table, counts, k_scale, v_scale, q, k_pool, v_pool)
+
+
+def _mla_decode_kernel_q8(cs_ref, rs_ref, qa_ref, qr_ref, ckv_ref,
+                          kr_ref, lens_ref, ot_ref, m_ref, l_ref,
+                          acc_ref, ms_ref, ls_ref, *, scale, bkv,
+                          t_valid, n_kv):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        ms_ref[...] = jnp.full_like(ms_ref, NEG_INF)
+        ls_ref[...] = jnp.zeros_like(ls_ref)
+
+    cur = lens_ref[0, 0]
+    pos0 = lens_ref[0, 1]
+    cs = cs_ref[b]                                      # latent scale
+    rs = rs_ref[b]                                      # rope-key scale
+    qa = qa_ref[0].astype(jnp.float32) * scale          # (H, r)
+    qr = qr_ref[0].astype(jnp.float32) * scale          # (H, rope)
+    ckv = ckv_ref[0].astype(jnp.float32)                # (bkv, r) int8
+    kr = kr_ref[0].astype(jnp.float32)                  # (bkv, rope) int8
+    s = jax.lax.dot_general(qa, ckv, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * cs
+    s = s + jax.lax.dot_general(qr, kr, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * rs
+    idx = j * bkv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = (idx < t_valid) & (pos0 + idx < cur)
+    s = jnp.where(valid, s, NEG_INF)
+    m_prev = ms_ref[:, 0]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))         # (H,)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where((m_new > NEG_INF / 2)[:, None], p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    ls_ref[:, 0] = ls_ref[:, 0] * corr + p.sum(axis=-1)
+    pv = jnp.dot(p, ckv, preferred_element_type=jnp.float32) * cs
+    acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+    ms_ref[:, 0] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _store():
+        ot_ref[0] = acc_ref[...]
+        m_ref[0] = ms_ref[:, 0]
+        l_ref[0] = ls_ref[:, 0]
+
+
+def vwr_mla_flash_decode_q8_p(q_abs: jax.Array, q_rope: jax.Array,
+                              c_kv: jax.Array, k_rope: jax.Array,
+                              ckv_scale: jax.Array,
+                              krope_scale: jax.Array, lens: jax.Array,
+                              *, scale: float, bkv: int, t_valid: int,
+                              interpret: bool = False):
+    """int8 split-operand MLA flash decode: c_kv, k_rope int8
+    (B, Tp, .); ckv_scale, krope_scale (B,) fp32.  Same contract as
+    ``vwr_mla_flash_decode_p``."""
+    B, H, r = q_abs.shape
+    rope = q_rope.shape[2]
+    Tp = c_kv.shape[1]
+    assert q_rope.shape == (B, H, rope)
+    assert c_kv.shape == (B, Tp, r) and k_rope.shape == (B, Tp, rope)
+    assert ckv_scale.shape == (B,) and krope_scale.shape == (B,)
+    assert Tp % bkv == 0, (Tp, bkv)
+    n_kv = Tp // bkv
+    kernel = functools.partial(_mla_decode_kernel_q8, scale=scale,
+                               bkv=bkv, t_valid=t_valid, n_kv=n_kv)
+    f32 = jnp.float32
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # ckv_scale, krope_scale
+        grid=(B, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, H, r), lambda b, j, cs, rs: (b, 0, 0)),
+            pl.BlockSpec((1, H, rope), lambda b, j, cs, rs: (b, 0, 0)),
+            pl.BlockSpec((1, bkv, r), lambda b, j, cs, rs: (b, j, 0)),
+            pl.BlockSpec((1, bkv, rope), lambda b, j, cs, rs: (b, j, 0)),
+            pl.BlockSpec((1, 2), lambda b, j, cs, rs: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, H, r), lambda b, j, cs, rs: (b, 0, 0)),
+            pl.BlockSpec((1, H), lambda b, j, cs, rs: (b, 0)),
+            pl.BlockSpec((1, H), lambda b, j, cs, rs: (b, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((H, r), f32),
+            pltpu.VMEM((H, 1), f32),
+            pltpu.VMEM((H, 1), f32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, r), f32),
+            jax.ShapeDtypeStruct((B, H), f32),
+            jax.ShapeDtypeStruct((B, H), f32),
+        ],
+        compiler_params=tpu_compiler_params("parallel", "arbitrary"),
+        interpret=interpret,
+    )(ckv_scale, krope_scale, q_abs, q_rope, c_kv, k_rope, lens)
+
+
+def _mla_paged_decode_kernel_q8(tbl_ref, cnt_ref, cs_ref, rs_ref,
+                                qa_ref, qr_ref, ckv_ref, kr_ref, ot_ref,
+                                m_ref, l_ref, acc_ref, ms_ref, ls_ref,
+                                *, scale, n_logical):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        ms_ref[...] = jnp.full_like(ms_ref, NEG_INF)
+        ls_ref[...] = jnp.zeros_like(ls_ref)
+
+    count = cnt_ref[b, j]                               # tokens valid here
+    page = tbl_ref[b, j]
+    cs = cs_ref[page]                                   # per-page scales
+    rs = rs_ref[page]
+    qa = qa_ref[0].astype(jnp.float32) * scale          # (H, r)
+    qr = qr_ref[0].astype(jnp.float32) * scale          # (H, rope)
+    ckv = ckv_ref[0].astype(jnp.float32)                # (ps, r) int8
+    kr = kr_ref[0].astype(jnp.float32)                  # (ps, rope) int8
+    s = jax.lax.dot_general(qa, ckv, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * cs
+    s = s + jax.lax.dot_general(qr, kr, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * rs
+    idx = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(idx < count, s, NEG_INF)
+    m_prev = ms_ref[:, 0]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))         # (H,)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where((m_new > NEG_INF / 2)[:, None], p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    ls_ref[:, 0] = ls_ref[:, 0] * corr + p.sum(axis=-1)
+    pv = jnp.dot(p, ckv, preferred_element_type=jnp.float32) * cs
+    acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+    ms_ref[:, 0] = m_new
+
+    @pl.when(j == n_logical - 1)
+    def _store():
+        ot_ref[0] = acc_ref[...]
+        m_ref[0] = ms_ref[:, 0]
+        l_ref[0] = ls_ref[:, 0]
+
+
+def vwr_mla_paged_flash_decode_q8_p(q_abs: jax.Array, q_rope: jax.Array,
+                                    ckv_pool: jax.Array,
+                                    krope_pool: jax.Array,
+                                    ckv_scale: jax.Array,
+                                    krope_scale: jax.Array,
+                                    table: jax.Array, counts: jax.Array,
+                                    *, scale: float,
+                                    interpret: bool = False):
+    """Split-operand MLA flash decode over int8 latent page pools.
+
+    ckv_pool: int8 (n_pages, page_size, r); krope_pool: int8 (n_pages,
+    page_size, rope); ckv_scale, krope_scale: fp32 (n_pages,) sidecars
+    resolved through ``table[b, j]``.  Same contract as
+    ``vwr_mla_paged_flash_decode_p``.
+    """
+    B, H, r = q_abs.shape
+    rope = q_rope.shape[2]
+    n_pages, ps, _ = ckv_pool.shape
+    assert krope_pool.shape == (n_pages, ps, rope)
+    assert ckv_scale.shape == (n_pages,) and \
+        krope_scale.shape == (n_pages,)
+    Bt, J = table.shape
+    assert Bt == B and counts.shape == (B, J), (table.shape, B)
+    kernel = functools.partial(_mla_paged_decode_kernel_q8, scale=scale,
+                               n_logical=J)
+    f32 = jnp.float32
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,      # table, counts, ckv_scale, kr_scale
+        grid=(B, J),
+        in_specs=[
+            pl.BlockSpec((1, H, r),
+                         lambda b, j, tbl, cnt, cs, rs: (b, 0, 0)),
+            pl.BlockSpec((1, H, rope),
+                         lambda b, j, tbl, cnt, cs, rs: (b, 0, 0)),
+            pl.BlockSpec((1, ps, r),
+                         lambda b, j, tbl, cnt, cs, rs:
+                         (tbl[b, j], 0, 0)),
+            pl.BlockSpec((1, ps, rope),
+                         lambda b, j, tbl, cnt, cs, rs:
+                         (tbl[b, j], 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, H, r),
+                         lambda b, j, tbl, cnt, cs, rs: (b, 0, 0)),
+            pl.BlockSpec((1, H),
+                         lambda b, j, tbl, cnt, cs, rs: (b, 0)),
+            pl.BlockSpec((1, H),
+                         lambda b, j, tbl, cnt, cs, rs: (b, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((H, r), f32),
+            pltpu.VMEM((H, 1), f32),
+            pltpu.VMEM((H, 1), f32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, r), f32),
+            jax.ShapeDtypeStruct((B, H), f32),
+            jax.ShapeDtypeStruct((B, H), f32),
+        ],
+        compiler_params=tpu_compiler_params("parallel", "arbitrary"),
+        interpret=interpret,
+    )(table, counts, ckv_scale, krope_scale, q_abs, q_rope, ckv_pool,
+      krope_pool)
+
+
 def vwr_flash_decode_p(q: jax.Array, k: jax.Array, v: jax.Array,
                        lens: jax.Array, *, bkv: int, t_valid: int,
                        interpret: bool = False):

@@ -58,6 +58,11 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--n-pages", type=int, default=None,
                     help="page-pool size; default sizes a full "
                          "dense-equivalent batch")
+    ap.add_argument("--kv-dtype", choices=["bf16", "int8"],
+                    default="bf16",
+                    help="page-pool storage dtype (with --paged): "
+                         "'int8' quantizes pages with fp32 per-page "
+                         "scale sidecars, dequantized in-kernel")
     ap.add_argument("--stream", type=int, default=0, metavar="N",
                     help="request-stream mode: continuously batch N "
                          "staggered requests of varying lengths "
@@ -98,6 +103,7 @@ def engine_config_from_args(args, cfg=None) -> EngineConfig:
         paged=bool(args.paged or args.stream),
         page_size=args.page_size,
         n_pages=args.n_pages,
+        kv_dtype=getattr(args, "kv_dtype", "bf16"),
     )
 
 

@@ -96,13 +96,19 @@ def build_decode(cfg: ModelConfig, mesh=None):
         leaf = sub["ckv"] if cfg.mla is not None else sub["k"]
         return leaf.shape[1]
 
+    def _paged_quantized(cache):
+        """int8 pools carry fp32 scale sidecars in the cache tree."""
+        sub = cache["moe"] if cfg.family == "moe" else cache
+        return ("ckv_scale" if cfg.mla is not None else "k_scale") in sub
+
     def sharded_serve_step(params, batch):
         logits, cache = lm.decode_step(params, batch, cfg, mesh=mesh)
         B = logits.shape[0]
         if "block_table" in batch:
             pspecs = SH.paged_cache_pspecs(
                 cfg, mesh, B, seq_shard=(cfg.decode_shard == "seq"),
-                n_pages=_paged_n_pages(cache))
+                n_pages=_paged_n_pages(cache),
+                quantized=_paged_quantized(cache))
         else:
             pspecs = SH.decode_batch_pspecs(
                 cfg, mesh, B, seq_shard=(cfg.decode_shard == "seq"))["cache"]

@@ -401,3 +401,59 @@ def _decode_partial_pallas(q, k, v, cur_len, pos0=0, *, tune=True):
         q.shape[0], T, q.shape[1], k.shape[2], q.shape[-1],
         str(q.dtype), c))[0]
     return ops.vwr_flash_decode(q, k, v, cur_len, pos0=pos0, bkv=bkv)
+
+
+# ---------------- q8 decode (int8 caches, fp32 scale sidecars) ----------------
+#
+# Same partial contracts with the cache/pool operands stored int8 and
+# fp32 scales alongside: per flattened (B, KV) row for the dense cache,
+# per (page, KV head) for the pool.  The XLA references dequantize up
+# front (reference clarity); the pallas backends stage the int8 block
+# and dequantize in-kernel, which is the whole point — staged HBM
+# bytes per token drop 2x vs bf16.  The pool dtype is folded into the
+# dispatch cache key (all operand dtypes are), so a bf16-pool 'auto'
+# winner never replays for an int8 pool of the same geometry.
+
+@D.register("decode_partial_q8", "xla")
+def _decode_partial_q8_xla(q, k, v, k_scale, v_scale, cur_len, pos0=0,
+                           *, tune=True):
+    T = k.shape[1]
+    kf = k.astype(jnp.float32) * k_scale[:, None, :, None]
+    vf = v.astype(jnp.float32) * v_scale[:, None, :, None]
+    return flash_decode_partial(q, kf, vf, pos0 + jnp.arange(T), cur_len)
+
+
+@D.register("decode_partial_q8", "pallas")
+def _decode_partial_q8_pallas(q, k, v, k_scale, v_scale, cur_len,
+                              pos0=0, *, tune=True):
+    from repro.kernels import autotune, ops
+    if tune:
+        return ops.vwr_flash_decode_q8(q, k, v, k_scale, v_scale,
+                                       cur_len, pos0=pos0)
+    T = k.shape[1]
+    cands = autotune.decode_candidates(T, q.shape[-1], "int8")
+    bkv = min(cands, key=lambda c: autotune.decode_prior(
+        q.shape[0], T, q.shape[1], k.shape[2], q.shape[-1],
+        "int8", c))[0]
+    return ops.vwr_flash_decode_q8(q, k, v, k_scale, v_scale, cur_len,
+                                   pos0=pos0, bkv=bkv)
+
+
+@D.register("decode_partial_paged_q8", "xla")
+def _decode_partial_paged_q8_xla(q, k_pool, v_pool, k_scale, v_scale,
+                                 table, counts, *, page_size=None,
+                                 max_pages=None, tune=True):
+    # dequantize the whole pool: honest reference semantics (and the
+    # honest cost of NOT dequantizing in-kernel)
+    kf = k_pool.astype(jnp.float32) * k_scale[:, None, :, None]
+    vf = v_pool.astype(jnp.float32) * v_scale[:, None, :, None]
+    return paged_flash_decode_partial(q, kf, vf, table, counts)
+
+
+@D.register("decode_partial_paged_q8", "pallas")
+def _decode_partial_paged_q8_pallas(q, k_pool, v_pool, k_scale, v_scale,
+                                    table, counts, *, page_size=None,
+                                    max_pages=None, tune=True):
+    from repro.kernels import ops
+    return ops.vwr_paged_flash_decode_q8(q, k_pool, v_pool, k_scale,
+                                         v_scale, table, counts)

@@ -726,15 +726,18 @@ def _rope_slots(x, pos, theta):
     return L.apply_rope(x[:, None], pos[:, None], theta)[:, 0]
 
 
-def _paged_attend(cfg, q, k_pool, v_pool, table, n_valid, mesh=None):
+def _paged_attend(cfg, q, k_pool, v_pool, table, n_valid, mesh=None,
+                  k_scale=None, v_scale=None):
     """Paged decode attention: GQA, absorbed MLA and (identity-paged)
     cross-attention all route through ``dist.decode.paged_decode_attend``
     — the pool-sharded FlashDecoding combine when
     cfg.decode_shard == 'seq', the shard-local ``decode_partial_paged``
     registry op otherwise.  ``n_valid`` (B,) counts valid positions per
-    slot (0 = inactive slot)."""
+    slot (0 = inactive slot); ``k_scale``/``v_scale`` ((n_pages, KV)
+    fp32) select the q8 route over int8 pools."""
     from repro.dist import decode as DD
     return DD.paged_decode_attend(q, k_pool, v_pool, table, n_valid,
+                                  k_scale=k_scale, v_scale=v_scale,
                                   backend=cfg.kernel_impl, mesh=mesh,
                                   seq_shard=(cfg.decode_shard == "seq"))
 
@@ -750,10 +753,13 @@ def _page_write_ids(table, lens, page_size, n_pages):
     return pages, lens % page_size, lens + active.astype(lens.dtype)
 
 
-def _decode_gqa_paged(cfg, lp, h, kp, vp, table, lens, mesh=None):
+def _decode_gqa_paged(cfg, lp, h, kp, vp, table, lens, mesh=None,
+                      kscale=None, vscale=None):
     """h: (B,D) normed; kp/vp: (n_pages, ps, KV, Dh) pools; lens: (B,)
     per-slot valid positions (the new token writes at position lens).
-    Returns (delta, kp, vp)."""
+    With ``kscale``/``vscale`` ((n_pages, KV) fp32 sidecars) the pools
+    are int8: the token quantizes on write and attention dequantizes
+    in-kernel.  Returns (delta, kp, vp, kscale, vscale)."""
     n_pages, ps = kp.shape[0], kp.shape[1]
     q = jnp.einsum("bd,dhk->bhk", h, lp["wq"])
     k = jnp.einsum("bd,dhk->bhk", h, lp["wk"])
@@ -763,15 +769,21 @@ def _decode_gqa_paged(cfg, lp, h, kp, vp, table, lens, mesh=None):
     q = _rope_slots(q, lens, cfg.rope_theta)
     k = _rope_slots(k, lens, cfg.rope_theta)
     pages, offs, n_valid = _page_write_ids(table, lens, ps, n_pages)
-    kp = kp.at[pages, offs].set(k.astype(kp.dtype), mode="drop")
-    vp = vp.at[pages, offs].set(v.astype(vp.dtype), mode="drop")
-    o = _paged_attend(cfg, q, kp, vp, table, n_valid, mesh)
+    if kscale is not None:
+        from repro.engine import paged_cache as PC
+        kp, kscale = PC.quantized_page_write(kp, kscale, pages, offs, k)
+        vp, vscale = PC.quantized_page_write(vp, vscale, pages, offs, v)
+    else:
+        kp = kp.at[pages, offs].set(k.astype(kp.dtype), mode="drop")
+        vp = vp.at[pages, offs].set(v.astype(vp.dtype), mode="drop")
+    o = _paged_attend(cfg, q, kp, vp, table, n_valid, mesh,
+                      k_scale=kscale, v_scale=vscale)
     delta = jnp.einsum("bhk,hkd->bd", o, lp["wo"])
-    return delta, kp, vp
+    return delta, kp, vp, kscale, vscale
 
 
 def _decode_mla_paged(cfg, lp, h, ckv_pool, krope_pool, table, lens,
-                      mesh=None):
+                      mesh=None, ckv_scale=None, krope_scale=None):
     """MLA absorbed decode against paged latent pools: ckv_pool
     (n_pages, ps, r); krope_pool (n_pages, ps, rope).
 
@@ -780,7 +792,8 @@ def _decode_mla_paged(cfg, lp, h, ckv_pool, krope_pool, table, lens,
     ``decode_partial_mla_paged`` registry op stages only the block
     table's pages (scalar-prefetch on the pallas backend), where the
     concat view used to copy the whole POOL into k_cat/v_cat every
-    step."""
+    step.  With ``ckv_scale``/``krope_scale`` ((n_pages,) fp32) the
+    pools are int8, quantized on write and dequantized in-kernel."""
     from repro.dist import decode as DD
     n_pages, ps = ckv_pool.shape[0], ckv_pool.shape[1]
     h3 = h[:, None, :]
@@ -788,19 +801,29 @@ def _decode_mla_paged(cfg, lp, h, ckv_pool, krope_pool, table, lens,
     q_nope, q_rope = MLA.mla_queries(lp, h3, pos, cfg)
     c_kv, k_rope = MLA.mla_latent(lp, h3, pos, cfg)
     pages, offs, n_valid = _page_write_ids(table, lens, ps, n_pages)
-    ckv_pool = ckv_pool.at[pages, offs].set(
-        c_kv[:, 0].astype(ckv_pool.dtype), mode="drop")
-    krope_pool = krope_pool.at[pages, offs].set(
-        k_rope[:, 0].astype(krope_pool.dtype), mode="drop")
+    if ckv_scale is not None:
+        from repro.engine import paged_cache as PC
+        ckv_pool, ckv_scale = PC.quantized_page_write(
+            ckv_pool, ckv_scale, pages, offs, c_kv[:, 0])
+        krope_pool, krope_scale = PC.quantized_page_write(
+            krope_pool, krope_scale, pages, offs, k_rope[:, 0])
+    else:
+        ckv_pool = ckv_pool.at[pages, offs].set(
+            c_kv[:, 0].astype(ckv_pool.dtype), mode="drop")
+        krope_pool = krope_pool.at[pages, offs].set(
+            k_rope[:, 0].astype(krope_pool.dtype), mode="drop")
     q_abs, q_rope_f, scale = MLA.mla_absorbed_queries(
         lp, q_nope[:, 0], q_rope[:, 0], cfg)
     o = DD.mla_paged_decode_attend(q_abs, q_rope_f, ckv_pool,
                                    krope_pool, table, n_valid,
-                                   scale=scale, backend=cfg.kernel_impl,
+                                   scale=scale, ckv_scale=ckv_scale,
+                                   krope_scale=krope_scale,
+                                   backend=cfg.kernel_impl,
                                    mesh=mesh,
                                    seq_shard=(cfg.decode_shard == "seq"))
     delta = MLA.mla_decode_finish(lp, o.astype(jnp.float32), cfg)
-    return delta.astype(h.dtype), ckv_pool, krope_pool
+    return delta.astype(h.dtype), ckv_pool, krope_pool, ckv_scale, \
+        krope_scale
 
 
 def _decode_cross_paged(cfg, lp, h, xk, xv, enc_lens, page_size,
@@ -824,19 +847,33 @@ def _decode_cross_paged(cfg, lp, h, xk, xv, enc_lens, page_size,
     return jnp.einsum("bhk,hkd->bd", o, lp["wo"])
 
 
+def _paged_attn_delta(cfg, lens, table, h, lp, cache_slice, mesh):
+    """Shared attention step of the paged layer bodies: routes MLA vs
+    GQA, detects int8 pools by their scale sidecars in the cache
+    slice, and returns (delta, updated cache slice)."""
+    if cfg.mla is not None:
+        d, ckv, ckr, cs, rs = _decode_mla_paged(
+            cfg, lp["attn"], h, cache_slice["ckv"],
+            cache_slice["krope"], table, lens, mesh,
+            cache_slice.get("ckv_scale"), cache_slice.get("krope_scale"))
+        new = {"ckv": ckv, "krope": ckr}
+        if cs is not None:
+            new["ckv_scale"], new["krope_scale"] = cs, rs
+    else:
+        d, kp, vp, ks, vs = _decode_gqa_paged(
+            cfg, lp["attn"], h, cache_slice["k"], cache_slice["v"],
+            table, lens, mesh, cache_slice.get("k_scale"),
+            cache_slice.get("v_scale"))
+        new = {"k": kp, "v": vp}
+        if ks is not None:
+            new["k_scale"], new["v_scale"] = ks, vs
+    return d, new
+
+
 def _dense_paged_body(cfg, lens, table, x, lp, cache_slice, mesh=None):
     h = _norm(cfg, lp["attn_norm"], x)
-    if cfg.mla is not None:
-        d, ckv, ckr = _decode_mla_paged(cfg, lp["attn"], h,
-                                        cache_slice["ckv"],
-                                        cache_slice["krope"], table,
-                                        lens, mesh)
-        new = {"ckv": ckv, "krope": ckr}
-    else:
-        d, kp, vp = _decode_gqa_paged(cfg, lp["attn"], h,
-                                      cache_slice["k"], cache_slice["v"],
-                                      table, lens, mesh)
-        new = {"k": kp, "v": vp}
+    d, new = _paged_attn_delta(cfg, lens, table, h, lp, cache_slice,
+                               mesh)
     x = x + d
     x = x + L.mlp(lp["mlp"], _norm(cfg, lp["mlp_norm"], x), cfg.act,
                   backend=cfg)
@@ -845,17 +882,8 @@ def _dense_paged_body(cfg, lens, table, x, lp, cache_slice, mesh=None):
 
 def _moe_paged_body(cfg, lens, table, x, lp, cache_slice, mesh=None):
     h = _norm(cfg, lp["attn_norm"], x)
-    if cfg.mla is not None:
-        d, ckv, ckr = _decode_mla_paged(cfg, lp["attn"], h,
-                                        cache_slice["ckv"],
-                                        cache_slice["krope"], table,
-                                        lens, mesh)
-        new = {"ckv": ckv, "krope": ckr}
-    else:
-        d, kp, vp = _decode_gqa_paged(cfg, lp["attn"], h,
-                                      cache_slice["k"], cache_slice["v"],
-                                      table, lens, mesh)
-        new = {"k": kp, "v": vp}
+    d, new = _paged_attn_delta(cfg, lens, table, h, lp, cache_slice,
+                               mesh)
     x = x + d
     y, _aux = MOE.moe_ffn(lp["moe"], _norm(cfg, lp["mlp_norm"], x)[None],
                           cfg, mesh=mesh)
@@ -864,8 +892,9 @@ def _moe_paged_body(cfg, lens, table, x, lp, cache_slice, mesh=None):
 
 def _audio_paged_body(cfg, lens, table, enc_lens, x, lp, cs, mesh=None):
     h = _norm(cfg, lp["self_norm"], x)
-    d, kp, vp = _decode_gqa_paged(cfg, lp["self"], h, cs["self_k"],
-                                  cs["self_v"], table, lens, mesh)
+    d, kp, vp, _, _ = _decode_gqa_paged(cfg, lp["self"], h,
+                                        cs["self_k"], cs["self_v"],
+                                        table, lens, mesh)
     x = x + d
     h = _norm(cfg, lp["cross_norm"], x)
     x = x + _decode_cross_paged(cfg, lp["cross"], h, cs["cross_k"],

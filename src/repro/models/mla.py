@@ -261,6 +261,72 @@ def _decode_partial_mla_paged_pallas(q_abs, q_rope, ckv_pool,
                                           scale=scale)
 
 
+# q8 split-operand decode: int8 latent caches with fp32 scale
+# sidecars.  Per-sequence scales for the dense cache (ckv_scale /
+# krope_scale (B,)), per-page scales for the pools ((n_pages,)).  The
+# latent channel and the rope channel quantize independently — their
+# dynamic ranges differ by the rope rotation — and both dots hoist
+# the scale out of the int8 contraction exactly (per-block-constant
+# scale commutes with the reduction), so drift vs the bf16 path is
+# rounding-only.
+
+@D.register("decode_partial_mla_q8", "xla")
+def _decode_partial_mla_q8_xla(q_abs, q_rope, c_kv, k_rope, ckv_scale,
+                               krope_scale, cur_len, pos0=0, *, scale,
+                               tune=True):
+    T = c_kv.shape[1]
+    ckv = c_kv.astype(jnp.float32) * ckv_scale[:, None, None]
+    kr = k_rope.astype(jnp.float32) * krope_scale[:, None, None]
+    return mla_flash_decode_partial(q_abs, q_rope, ckv, kr,
+                                    pos0 + jnp.arange(T), cur_len,
+                                    scale=scale)
+
+
+@D.register("decode_partial_mla_q8", "pallas")
+def _decode_partial_mla_q8_pallas(q_abs, q_rope, c_kv, k_rope,
+                                  ckv_scale, krope_scale, cur_len,
+                                  pos0=0, *, scale, tune=True):
+    from repro.kernels import autotune, ops
+    if tune:
+        return ops.vwr_mla_flash_decode_q8(q_abs, q_rope, c_kv, k_rope,
+                                           ckv_scale, krope_scale,
+                                           cur_len, pos0=pos0,
+                                           scale=scale)
+    T, r = c_kv.shape[1], c_kv.shape[2]
+    rope = k_rope.shape[2]
+    cands = autotune.decode_candidates(T, r + rope, "int8")
+    bkv = min(cands, key=lambda c: autotune.decode_prior(
+        q_abs.shape[0], T, q_abs.shape[1], 1, r + rope, "int8", c))[0]
+    return ops.vwr_mla_flash_decode_q8(q_abs, q_rope, c_kv, k_rope,
+                                       ckv_scale, krope_scale, cur_len,
+                                       pos0=pos0, scale=scale, bkv=bkv)
+
+
+@D.register("decode_partial_mla_paged_q8", "xla")
+def _decode_partial_mla_paged_q8_xla(q_abs, q_rope, ckv_pool,
+                                     krope_pool, ckv_scale,
+                                     krope_scale, table, counts, *,
+                                     scale, page_size=None,
+                                     max_pages=None, tune=True):
+    ckv = ckv_pool.astype(jnp.float32) * ckv_scale[:, None, None]
+    kr = krope_pool.astype(jnp.float32) * krope_scale[:, None, None]
+    return mla_paged_flash_decode_partial(q_abs, q_rope, ckv, kr,
+                                          table, counts, scale=scale)
+
+
+@D.register("decode_partial_mla_paged_q8", "pallas")
+def _decode_partial_mla_paged_q8_pallas(q_abs, q_rope, ckv_pool,
+                                        krope_pool, ckv_scale,
+                                        krope_scale, table, counts, *,
+                                        scale, page_size=None,
+                                        max_pages=None, tune=True):
+    from repro.kernels import ops
+    return ops.vwr_mla_paged_flash_decode_q8(q_abs, q_rope, ckv_pool,
+                                             krope_pool, ckv_scale,
+                                             krope_scale, table,
+                                             counts, scale=scale)
+
+
 def mla_absorbed_mqa(p, q_nope, q_rope, cache_ckv, cache_krope, cfg):
     """Absorbed MLA decode as an MQA flash-decode problem.
 

@@ -49,6 +49,52 @@ def test_diff_pairs_colliding_keys_by_order():
     assert not res["only_old"] and not res["only_new"]
 
 
+def test_diff_flags_staged_bytes_regressions():
+    """A matched row whose ``staged_bytes`` column grew past the
+    threshold is flagged even when its latency held still — the
+    quantized-KV benchmarks' headline is bytes, not us."""
+    old = [_row("paged_decode_q8", "4x2048", 50.0) | {
+               "staged_bytes": 1_000_000},
+           _row("decode", "4x2048", 50.0) | {"staged_bytes": 500_000}]
+    new = [_row("paged_decode_q8", "4x2048", 50.0) | {
+               "staged_bytes": 1_200_000},        # +20% bytes: flagged
+           _row("decode", "4x2048", 50.0) | {"staged_bytes": 520_000}]
+    res = bench_diff.diff(old, new, threshold=0.10)
+    assert not res["regressions"]
+    assert [(e["op"], e["ratio"]) for e in res["byte_regressions"]] == \
+        [("paged_decode_q8", 1.2)]
+    assert res["byte_regressions"][0]["staged_bytes_old"] == 1_000_000
+    assert res["byte_regressions"][0]["staged_bytes_new"] == 1_200_000
+
+
+def test_diff_ignores_missing_staged_bytes():
+    """Rows without the column (most latency benches) never produce
+    byte flags."""
+    old = [_row("matmul", "s", 100.0),
+           _row("engine", "a", 10.0) | {"staged_bytes": None}]
+    new = [_row("matmul", "s", 100.0),
+           _row("engine", "a", 10.0) | {"staged_bytes": 999}]
+    res = bench_diff.diff(old, new)
+    assert not res["byte_regressions"]
+
+
+def test_cli_fail_flag_counts_byte_regressions(tmp_path):
+    """--fail exits nonzero on a staged-bytes-only regression."""
+    old = tmp_path / "old.json"
+    new = tmp_path / "new.json"
+    old.write_text(json.dumps(
+        [_row("paged_decode_q8", "s", 100.0) | {"staged_bytes": 100}]))
+    new.write_text(json.dumps(
+        [_row("paged_decode_q8", "s", 100.0) | {"staged_bytes": 150}]))
+    script = os.path.join(os.path.dirname(__file__), "..", "scripts",
+                          "bench_diff.py")
+    r = subprocess.run([sys.executable, script, str(old), str(new),
+                        "--fail"], capture_output=True, text=True)
+    assert r.returncode == 1
+    assert "BYTES-REGRESSION" in r.stdout
+    assert "1 staged-bytes" in r.stdout
+
+
 def test_diff_ignores_untimed_rows():
     old = [_row("engine", "a", None), _row("x", "s", 0)]
     new = [_row("engine", "a", 99.0), _row("x", "s", 99.0)]

@@ -253,3 +253,45 @@ def test_paged_dispatch_cache_keyed_by_page_geometry(tmp_path,
                             geom) == "xla"
     assert D.cached_backend("decode_partial_paged", "auto", args,
                             other) == "pallas"
+
+
+def test_paged_dispatch_cache_keyed_by_pool_dtype(tmp_path,
+                                                  monkeypatch):
+    """A measured 'auto' winner for bf16 pools must not replay for the
+    int8+scales call at the same shapes: the query leads both operand
+    lists in fp32, so keying only the FIRST array dtype collided them.
+    Every distinct operand dtype joins the signature."""
+    from repro.kernels import autotune
+    from repro.kernels import ops as kops
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE",
+                       str(tmp_path / "autotune.json"))
+    autotune.reset()
+    B, H, KV, Dh, ps, J, n_pages = 2, 4, 2, 16, 4, 6, 12
+    q = jnp.zeros((B, H, Dh))                       # fp32 leads both
+    tbl = jnp.zeros((B, J), jnp.int32)
+    cnt = jnp.zeros((B, J), jnp.int32)
+    geom = {"page_size": ps, "max_pages": J}
+    kp16 = jnp.zeros((n_pages, ps, KV, Dh), jnp.bfloat16)
+    bf16_args = (q, kp16, kp16, tbl, cnt)
+    kp8 = jnp.zeros((n_pages, ps, KV, Dh), jnp.int8)
+    sc = jnp.zeros((n_pages, KV), jnp.float32)
+    q8_args = (q, kp8, kp8, sc, sc, tbl, cnt)
+
+    sig16 = D._arg_signature(bf16_args, geom)
+    sig8 = D._arg_signature(q8_args, geom)
+    assert sig16 != sig8
+    assert "int8" in sig8[1] and "int8" not in sig16[1]
+
+    # persist an 'xla' winner for the bf16 pools; the q8 twin still
+    # resolves through the prior (pallas-first), not the bf16 entry
+    tag = kops._backend_tag(kops._auto_interpret(None))
+    key = autotune.cache_key("dispatch:decode_partial_paged", sig16[0],
+                             sig16[1], tag)
+    autotune._persist(autotune.cache_path(), {key: {"blocks": ["xla"]}})
+    assert D.cached_backend("decode_partial_paged", "auto", bf16_args,
+                            geom) == "xla"
+    assert D.cached_backend("decode_partial_paged_q8", "auto", q8_args,
+                            geom) == "pallas"
+    assert D.cached_backend("decode_partial_paged", "auto", q8_args,
+                            geom) == "pallas"
