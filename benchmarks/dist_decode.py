@@ -484,6 +484,74 @@ rows.append({
     "collective_bytes": None,
 })
 
+# ---- prefix cache: warm vs cold TTFT on a shared system prompt -------
+# Production traffic reuses a handful of system prompts; the radix
+# cache turns that reuse into resident pages, so admission prefills
+# only the per-request suffix.  TTFT here = submit -> first token
+# (admission prefill + scatter + argmax), measured on a 100%-shared
+# system prompt: cold pays the full P-token prefill, warm only the
+# suffix — prefill FLOPs drop with the positions (attention is
+# super-linear, so the wall-clock win grows with the prompt).
+import time as _time
+
+from repro.engine import Request, Scheduler
+
+PS_PC, SYS_PAGES, SUF = 8, 12, 8
+SYS = SYS_PAGES * PS_PC                         # 96 shared tokens
+P_PC = SYS + SUF                                # 104-token prompts
+pceng = DecodeEngine(cfg, EngineConfig(batch=2, max_len=P_PC + 4,
+                                       paged=True, page_size=PS_PC,
+                                       n_pages=64, prefix_cache=True))
+rng_pc = np.random.default_rng(0)
+
+
+def _pc_prompt(sys_toks):
+    suf = rng_pc.integers(2, cfg.vocab, (SUF,)).astype(np.int32)
+    return np.concatenate([sys_toks, suf])
+
+
+def _ttft(sched, rid, prompt):
+    sched.submit(Request(rid=rid, tokens=prompt, gen=1))
+    t0 = _time.perf_counter()
+    assert sched.admit() == 1
+    jax.block_until_ready(sched.cache)
+    return (_time.perf_counter() - t0) * 1e6
+
+
+sched_pc = Scheduler(pceng)
+# warm-up: compile both the full-prompt and the suffix prefill paths
+warm_sys = rng_pc.integers(2, cfg.vocab, (SYS,)).astype(np.int32)
+_ttft(sched_pc, "w0", _pc_prompt(warm_sys))
+_ttft(sched_pc, "w1", _pc_prompt(warm_sys))
+sched_pc.prefix.clear()
+
+sys_toks = rng_pc.integers(2, cfg.vocab, (SYS,)).astype(np.int32)
+t_cold = _ttft(sched_pc, "cold", _pc_prompt(sys_toks))
+warm = sorted(_ttft(sched_pc, f"warm{i}", _pc_prompt(sys_toks))
+              for i in range(5))
+t_warm = warm[len(warm) // 2]
+hit_rate = sched_pc.stats["prefix_hits"] / max(
+    1, sched_pc.stats["prefix_hits"] + sched_pc.stats["prefix_misses"])
+# per-position prefill cost: attention O(S*T) + MLP O(S) — report the
+# dominant linear term as the FLOPs column (positions actually run)
+D = cfg.d_model
+flops_cold = P_PC * (12 * D * D + 2 * P_PC * D)
+flops_warm = SUF * (12 * D * D + 2 * P_PC * D)
+rows.append({
+    "op": "prefix_cache_decode",
+    "shape": f"{cfg.name}:{P_PC}p/{SYS}shared",
+    "us": round(t_warm, 1), "us_ref": round(t_cold, 1),
+    "flops": flops_warm, "staged_bytes": None, "arith_intensity": None,
+    "note": (f"TTFT warm {t_warm:.0f}us vs cold {t_cold:.0f}us "
+             f"({t_cold / t_warm:.1f}x) on a 100%-shared {SYS}-token "
+             f"system prompt: suffix-only prefill runs {SUF} of "
+             f"{P_PC} positions ({flops_cold / flops_warm:.1f}x fewer "
+             f"prefill FLOPs); hit rate {hit_rate:.2f}, "
+             f"{sched_pc.stats['prefix_hit_tokens']} tokens from cache "
+             "(us_ref = cold full prefill)"),
+    "collective_bytes": None,
+})
+
 print("JSON:" + json.dumps(rows))
 """
 
@@ -526,7 +594,8 @@ def dist_decode_bench(json_path="BENCH_kernels.json"):
                                            "paged_decode_bucketed",
                                            "paged_decode_q8",
                                            "mla_decode_paged_q8",
-                                           "sched_pick")]
+                                           "sched_pick",
+                                           "prefix_cache_decode")]
         existing.extend(rows)
         with open(json_path, "w") as f:
             json.dump(existing, f, indent=1)

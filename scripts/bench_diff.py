@@ -12,10 +12,16 @@ only in numbers), pairing them by emission order.  A matched row whose
 ``us`` grew by more than ``--threshold`` (default 10%) is flagged as a
 regression, and so is a matched row whose ``staged_bytes`` column
 (cache bytes staged per decode step — the quantized-KV benchmarks'
-headline) grew by more than the same threshold; ``--fail`` turns
-either kind of flag into a nonzero exit for CI.  Unmatched rows (ops
-added/removed between the two artifacts) are listed but never
-flagged.
+headline) grew by more than the same threshold.  Rows that carry a
+within-run baseline in ``us_ref`` (e.g. the ``prefix_cache_decode``
+row's warm-vs-cold TTFT, or the split-vs-concat MLA rows) are
+additionally checked on their SPEEDUP (``us_ref / us``): a speedup
+that shrank by more than the threshold is flagged even when both
+absolute latencies moved together — machine-load jitter cancels out
+of the ratio, so this is the robust signal for headline wins like
+"warm TTFT >= 2x cold".  ``--fail`` turns any kind of flag into a
+nonzero exit for CI.  Unmatched rows (ops added/removed between the
+two artifacts) are listed but never flagged.
 """
 from __future__ import annotations
 
@@ -51,12 +57,14 @@ def _index(rows: List[dict]) -> Dict[Tuple[str, str, str, int], dict]:
 def diff(old_rows: List[dict], new_rows: List[dict],
          threshold: float = 0.10) -> dict:
     """Returns {'regressions': [...], 'improvements': [...],
-    'byte_regressions': [...], 'only_old': [...], 'only_new': [...]}
-    — latency entries carry the matched key and the old/new ``us``,
-    byte entries the old/new ``staged_bytes``."""
+    'byte_regressions': [...], 'speedup_regressions': [...],
+    'only_old': [...], 'only_new': [...]} — latency entries carry the
+    matched key and the old/new ``us``, byte entries the old/new
+    ``staged_bytes``, speedup entries the old/new ``us_ref / us``."""
     old = _index(old_rows)
     new = _index(new_rows)
-    regressions, improvements, byte_regressions = [], [], []
+    regressions, improvements = [], []
+    byte_regressions, speedup_regressions = [], []
     for key, n in new.items():
         o = old.get(key)
         if o is None:
@@ -72,6 +80,19 @@ def diff(old_rows: List[dict], new_rows: List[dict],
                 regressions.append(entry)
             elif ratio < 1.0 - threshold:
                 improvements.append(entry)
+        ref_old, ref_new = o.get("us_ref"), n.get("us_ref")
+        if us_old and us_new and ref_old and ref_new:
+            # within-run baseline (TTFT cold, dense ref, ...): the
+            # speedup us_ref/us cancels machine-load jitter; shrinking
+            # means the headline win itself eroded
+            sp_old, sp_new = ref_old / us_old, ref_new / us_new
+            if sp_new < sp_old * (1.0 - threshold):
+                speedup_regressions.append(
+                    {"op": key[0], "shape": key[1],
+                     "note": n.get("note"),
+                     "speedup_old": round(sp_old, 3),
+                     "speedup_new": round(sp_new, 3),
+                     "ratio": round(sp_new / sp_old, 3)})
         b_old, b_new = o.get("staged_bytes"), n.get("staged_bytes")
         if b_old and b_new:
             bratio = b_new / b_old
@@ -85,10 +106,12 @@ def diff(old_rows: List[dict], new_rows: List[dict],
     regressions.sort(key=lambda e: -e["ratio"])
     improvements.sort(key=lambda e: e["ratio"])
     byte_regressions.sort(key=lambda e: -e["ratio"])
+    speedup_regressions.sort(key=lambda e: e["ratio"])
     return {
         "regressions": regressions,
         "improvements": improvements,
         "byte_regressions": byte_regressions,
+        "speedup_regressions": speedup_regressions,
         "only_old": sorted(k[:2] for k in old.keys() - new.keys()),
         "only_new": sorted(k[:2] for k in new.keys() - old.keys()),
     }
@@ -122,6 +145,11 @@ def main(argv=None) -> int:
               f"{entry['staged_bytes_old']} -> "
               f"{entry['staged_bytes_new']} staged bytes "
               f"({entry['ratio']}x)  [{entry['note']}]")
+    for entry in result["speedup_regressions"]:
+        print(f"SPEEDUP-REGRESSION {entry['op']},{entry['shape']}: "
+              f"us_ref/us {entry['speedup_old']} -> "
+              f"{entry['speedup_new']} ({entry['ratio']}x)  "
+              f"[{entry['note']}]")
     for entry in result["improvements"]:
         print(f"improved   {entry['op']},{entry['shape']}: "
               f"{entry['us_old']} -> {entry['us_new']} us "
@@ -130,10 +158,12 @@ def main(argv=None) -> int:
         print(f"removed    {op},{shape}")
     for op, shape in result["only_new"]:
         print(f"added      {op},{shape}")
-    n_reg = len(result["regressions"]) + len(result["byte_regressions"])
+    n_reg = (len(result["regressions"]) + len(result["byte_regressions"])
+             + len(result["speedup_regressions"]))
     print(f"# {n_reg} regression(s) "
           f"({len(result['regressions'])} latency, "
-          f"{len(result['byte_regressions'])} staged-bytes), "
+          f"{len(result['byte_regressions'])} staged-bytes, "
+          f"{len(result['speedup_regressions'])} speedup), "
           f"{len(result['improvements'])} improvement(s) "
           f"at threshold {args.threshold:.0%}")
     return 1 if (n_reg and args.fail) else 0

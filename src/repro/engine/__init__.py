@@ -13,11 +13,12 @@ injectors in ``engine.faults``.
 from repro.engine.cache import pad_cache_from_prefill
 from repro.engine.engine import DecodeEngine, EngineConfig
 from repro.engine.paged_cache import (PageAllocator, PagePoolExhausted,
-                                      bucket_table_width)
+                                      bucket_table_width, fork_page)
+from repro.engine.prefix_cache import PrefixCache
 from repro.engine.scheduler import (Request, RequestResult, RequestStatus,
                                     Scheduler)
 
 __all__ = ["DecodeEngine", "EngineConfig", "pad_cache_from_prefill",
-           "PageAllocator", "PagePoolExhausted", "Request",
+           "PageAllocator", "PagePoolExhausted", "PrefixCache", "Request",
            "RequestResult", "RequestStatus", "Scheduler",
-           "bucket_table_width"]
+           "bucket_table_width", "fork_page"]

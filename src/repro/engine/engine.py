@@ -62,7 +62,13 @@ class EngineConfig:
     ``kv_dtype='int8'`` (paged only) stores the page pools as
     symmetric int8 with fp32 per-page scale sidecars — ~2x fewer HBM
     bytes streamed per decoded token than bf16 pools, dequantized
-    inside the flash-decode kernels."""
+    inside the flash-decode kernels.
+
+    ``prefix_cache=True`` (paged, dense/moe families) turns on the
+    prefix-sharing radix cache in ``engine.scheduler``: admission
+    matches the longest cached whole-page prompt prefix, aliases those
+    refcounted pages into the slot's block table, and prefills only
+    the suffix (``engine.prefix_cache``)."""
     batch: int = 1
     max_len: int = 128              # prompt + generation budget
     mesh_shape: Tuple[int, int] = (1, 1)      # (data, model)
@@ -73,6 +79,7 @@ class EngineConfig:
     page_size: int = 16             # positions per page (paged=True)
     n_pages: Optional[int] = None   # pool size; None = dense-equivalent
     kv_dtype: str = "bf16"          # 'bf16' (model dtype) | 'int8'
+    prefix_cache: bool = False      # radix prompt-prefix sharing
 
     def replace(self, **kw) -> "EngineConfig":
         return dataclasses.replace(self, **kw)
@@ -111,6 +118,18 @@ class DecodeEngine:
                 "cache appends in place every step and a growing "
                 "per-sequence scale would re-quantize the whole slab "
                 "per token — per-page scales make the rewrite O(page)")
+        if ecfg.prefix_cache:
+            if not ecfg.paged:
+                raise ValueError(
+                    "prefix_cache=True needs paged=True: prefix "
+                    "sharing aliases physical pages through block "
+                    "tables")
+            if cfg.family not in ("dense", "moe"):
+                raise ValueError(
+                    f"prefix_cache=True supports the token-only "
+                    f"families ('dense', 'moe'); family "
+                    f"{cfg.family!r} prepends frontend positions a "
+                    "token-keyed prefix index cannot match")
         if ecfg.paged:
             paged_cache.check_family(cfg)
             if ecfg.kv_dtype == "int8" and cfg.family == "audio":
@@ -154,6 +173,13 @@ class DecodeEngine:
                 seq_shard=(ecfg.decode_shard == "seq"))
         self.prefill_fn = jax.jit(steps.build_prefill(cfg, mesh=self.mesh))
         self.decode_fn = jax.jit(steps.build_decode(cfg, self.mesh))
+        # suffix-only prefill for prefix-cache hits: built for every
+        # paged token-only engine (the jit wrapper traces nothing until
+        # called), so a Scheduler can enable the cache per-stream even
+        # when the EngineConfig default is off
+        self.suffix_prefill_fn = (
+            jax.jit(steps.build_suffix_prefill(cfg, mesh=self.mesh))
+            if ecfg.paged and cfg.family in ("dense", "moe") else None)
         self._enc_len = 0           # audio: encoder positions at prefill
 
     # ------------------------------------------------------------------

@@ -39,7 +39,7 @@ allocator; request-level admission / eviction policy lives in
 """
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import Dict, List, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -325,19 +325,27 @@ class PagePoolExhausted(RuntimeError):
 
 
 class PageAllocator:
-    """Free-list over physical page ids [0, n_pages).  Pure host state:
-    the device only ever sees the resulting block tables.
+    """Refcounted free-list over physical page ids [0, n_pages).  Pure
+    host state: the device only ever sees the resulting block tables.
 
-    Every handed-out page is tracked in an owned set, so ``free`` can
-    reject a double free and a page it never handed out as *different*
-    faults, and ``check()`` can assert the pool invariant
-    (owned ∪ free == all pages, owned ∩ free == ∅) at any point — the
-    chaos / property tests call it after every scheduler transition."""
+    ``alloc`` hands a page out at refcount 1; every additional holder
+    (a prefix-cache trie node, a second slot aliasing the page through
+    its block table) takes a ref with ``incref`` and releases it with
+    ``decref`` — the page returns to the free list only when the last
+    ref drops.  The legacy ``free`` keeps its exclusive-owner contract
+    (it rejects a shared page: freeing under another holder is exactly
+    the preempt/retire double-free the prefix cache must not hit), so
+    pre-refcount callers and their double-free diagnostics keep
+    working.  ``check()`` asserts the pool invariant at any point
+    (owned ∪ free == all pages, owned ∩ free == ∅, every owned page
+    holds refcount >= 1, no free page holds a ref) — the chaos /
+    property tests call it after every scheduler transition."""
 
     def __init__(self, n_pages: int):
         self.n_pages = int(n_pages)
         self._free: List[int] = list(range(self.n_pages - 1, -1, -1))
         self._owned: set = set()
+        self._refs: Dict[int, int] = {}
 
     @property
     def free_pages(self) -> int:
@@ -346,6 +354,15 @@ class PageAllocator:
     @property
     def used_pages(self) -> int:
         return self.n_pages - len(self._free)
+
+    @property
+    def shared_pages(self) -> int:
+        """Pages currently held by more than one holder."""
+        return sum(1 for r in self._refs.values() if r > 1)
+
+    def refcount(self, page: int) -> int:
+        """Current holders of ``page`` (0 = free)."""
+        return self._refs.get(page, 0)
 
     def alloc(self, n: int) -> List[int]:
         if n > len(self._free):
@@ -356,9 +373,52 @@ class PageAllocator:
                 f"page_size)")
         out = [self._free.pop() for _ in range(n)]
         self._owned.update(out)
+        for p in out:
+            self._refs[p] = 1
         return out
 
+    def _validate_owned(self, pages: Sequence[int], verb: str) -> None:
+        for p in pages:
+            if not 0 <= p < self.n_pages:
+                raise ValueError(f"{verb} invalid page id {p}")
+            if p not in self._owned:
+                raise ValueError(
+                    f"{verb} page {p}: not currently handed out "
+                    "(already freed, or never allocated)")
+
+    def incref(self, pages: Sequence[int]) -> None:
+        """Take one more ref on each page (pages must be handed out)."""
+        self._validate_owned(pages, "incref of")
+        for p in pages:
+            self._refs[p] += 1
+
+    def decref(self, pages: Sequence[int]) -> None:
+        """Drop one ref per page; a page whose last ref drops returns
+        to the free list.  The same page may appear more than once (it
+        then loses one ref per occurrence)."""
+        self._validate_owned(pages, "decref of")
+        counts: Dict[int, int] = {}
+        for p in pages:
+            counts[p] = counts.get(p, 0) + 1
+        for p, n in counts.items():
+            if self._refs[p] < n:
+                raise ValueError(
+                    f"decref of page {p} by {n} holder(s) but only "
+                    f"{self._refs[p]} ref(s) held")
+        released = []
+        for p, n in counts.items():
+            self._refs[p] -= n
+            if self._refs[p] == 0:
+                del self._refs[p]
+                self._owned.discard(p)
+                released.append(p)
+        self._free.extend(released)
+
     def free(self, pages: Sequence[int]) -> None:
+        """Exclusive-owner release: every page must be held by exactly
+        one ref.  A shared page raises — the caller is about to pull a
+        page out from under the prefix cache / another slot; route
+        shared ownership through ``decref`` instead."""
         seen: set = set()
         for p in pages:
             if not 0 <= p < self.n_pages:
@@ -370,9 +430,15 @@ class PageAllocator:
                 raise ValueError(
                     f"double free of page {p}: not currently handed "
                     "out (already freed, or never allocated)")
+            if self._refs.get(p, 0) != 1:
+                raise ValueError(
+                    f"free of shared page {p} (refcount "
+                    f"{self._refs.get(p, 0)}): another holder still "
+                    "references it — decref instead")
             seen.add(p)
         for p in pages:
             self._owned.discard(p)
+            del self._refs[p]
         self._free.extend(pages)
 
     def check(self) -> bool:
@@ -391,4 +457,41 @@ class PageAllocator:
                 f"page leak: owned ∪ free covers {len(universe)} of "
                 f"{self.n_pages} pages "
                 f"(missing {sorted(set(range(self.n_pages)) - universe)})")
+        unref = self._owned - set(self._refs)
+        if unref:
+            raise ValueError(f"owned pages with no refcount: "
+                             f"{sorted(unref)}")
+        bad = [p for p, r in self._refs.items() if r < 1]
+        if bad:
+            raise ValueError(f"refcount < 1 on owned pages: {sorted(bad)}")
+        ghost = set(self._refs) - self._owned
+        if ghost:
+            raise ValueError(f"refcounts on pages not handed out: "
+                             f"{sorted(ghost)}")
         return True
+
+
+# ----------------------------------------------------------------------
+# copy-on-write page fork
+# ----------------------------------------------------------------------
+
+def fork_page(cfg, cache, src, dst):
+    """Device-side page fork: copy physical page ``src`` onto ``dst``
+    across every pool leaf — including the int8 scale sidecar rows,
+    which are part of page identity (a forked page must dequantize
+    exactly like its original until the divergent write lands).
+
+    ``src``/``dst`` may be traced int32 scalars, so one jitted copy
+    serves every (src, dst) pair.  Every leaf of the dense/moe paged
+    cache carries the page dim at axis 1 (pools ``(L, n_pages, ps,
+    ...)``, sidecars ``(L, n_pages[, KV])``); the audio family's
+    slot-dense cross cache breaks that contract and is rejected.
+    """
+    check_family(cfg)
+    if cfg.family == "audio":
+        raise ValueError(
+            "fork_page does not support the audio family: the "
+            "slot-dense cross cache carries slots, not pages, at "
+            "axis 1")
+    return jax.tree.map(lambda leaf: leaf.at[:, dst].set(leaf[:, src]),
+                        cache)

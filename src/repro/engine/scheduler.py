@@ -75,7 +75,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.engine.paged_cache import (PageAllocator, PagePoolExhausted,
-                                      bucket_table_width, write_prefill)
+                                      bucket_table_width, fork_page,
+                                      write_prefill)
+from repro.engine.prefix_cache import PrefixCache
 from repro.runtime.resilience import (Heartbeat, RetryPolicy,
                                       StragglerMonitor, call_with_retries,
                                       percentiles)
@@ -206,6 +208,21 @@ class Scheduler:
     ``straggler`` / ``heartbeat``  optional
                          ``runtime.resilience`` monitors wired into
                          every ``step()``.
+
+    ``prefix_cache`` (None = inherit ``EngineConfig.prefix_cache``)
+    turns on prompt-prefix sharing (``engine.prefix_cache``):
+    admission matches the longest cached whole-page prefix, increfs
+    and aliases those pages into the slot's block table, and prefills
+    only the suffix; retire/preempt decref instead of free, and when
+    an allocation would exhaust the pool, refcount-1 LRU trie leaves
+    are evicted BEFORE any slot is preempted.  Greedy token streams
+    are bit-identical to the cache-off scheduler for model-dtype
+    pools (the suffix prefill reads exactly the KV blocks the cold
+    prefill would recompute).  int8 pools dequantize the prefix
+    through the same per-page scales decode reads, but a HIT's suffix
+    prefill sees the quantized prefix where a cold prefill saw full
+    precision, so a near-tie argmax in the hit's own stream can flip
+    — miss streams (and every decode step) are unaffected.
     """
 
     def __init__(self, engine, enc_len: Optional[int] = None,
@@ -214,7 +231,8 @@ class Scheduler:
                  max_preemptions: int = 3,
                  guard_nonfinite: bool = True,
                  straggler: Optional[StragglerMonitor] = None,
-                 heartbeat: Optional[Heartbeat] = None):
+                 heartbeat: Optional[Heartbeat] = None,
+                 prefix_cache: Optional[bool] = None):
         if not engine.ecfg.paged:
             raise ValueError(
                 "Scheduler needs a paged engine: EngineConfig("
@@ -241,13 +259,32 @@ class Scheduler:
         self.pending: deque = deque()   # Request | preempted _Slot
         self.parked: deque = deque()    # watchdog-parked _Slots
         self.finished: Dict[Any, RequestResult] = {}
+        if prefix_cache is None:
+            prefix_cache = engine.ecfg.prefix_cache
+        self.prefix: Optional[PrefixCache] = None
+        if prefix_cache:
+            if self.cfg.family not in ("dense", "moe"):
+                raise ValueError(
+                    f"prefix_cache supports the token-only families "
+                    f"('dense', 'moe'); family {self.cfg.family!r} "
+                    "prepends frontend positions a token-keyed prefix "
+                    "index cannot match")
+            if engine.suffix_prefill_fn is None:
+                raise ValueError("engine has no suffix_prefill_fn — "
+                                 "construct a paged dense/moe engine")
+            self.prefix = PrefixCache(self.page_size, self.allocator)
         self.stats = {"prefills": 0, "admitted": 0, "retired": 0,
                       "steps": 0, "peak_pages": 0, "preempted": 0,
                       "table_widths": {},   # width -> steps at it
                       "rejected": 0, "failed": 0, "cancelled": 0,
                       "timed_out": 0, "step_retries": 0,
                       "prefill_retries": 0, "parked": 0,
-                      "straggler_flags": 0}
+                      "straggler_flags": 0,
+                      # prefix-cache counters (zero when it's off)
+                      "prefix_hits": 0, "prefix_misses": 0,
+                      "prefix_hit_tokens": 0, "prefix_evictions": 0,
+                      "shared_pages": 0,     # peak pages refcount > 1
+                      "cow_forks": 0}
         self._latencies: List[float] = []
         self._order = 0
         # jitted prefill->pages scatter with the pool DONATED (where
@@ -257,6 +294,13 @@ class Scheduler:
             lambda cache, caches, table, slots: write_prefill(
                 self.cfg, cache, caches, table,
                 enc_caches_slots=slots),
+            donate_argnums=(() if jax.default_backend() == "cpu"
+                            else (0,)))
+        # jitted copy-on-write page fork (src/dst ride as traced
+        # scalars: one compile serves every pair); donation for the
+        # same reason as _write_prefill
+        self._fork_page = jax.jit(
+            lambda cache, src, dst: fork_page(self.cfg, cache, src, dst),
             donate_argnums=(() if jax.default_backend() == "cpu"
                             else (0,)))
         # one jitted pick for the whole batch: greedy argmax, per-slot
@@ -322,10 +366,14 @@ class Scheduler:
         return res
 
     def _evict(self, slot_id: int) -> _Slot:
-        """Free a slot's pages + batch-row state (no terminal record)."""
+        """Release a slot's pages + batch-row state (no terminal
+        record).  Pages are DECREF'd, not freed: with the prefix cache
+        on, a slot's row may alias pages the trie (or another slot)
+        still holds — the old unconditional ``free`` double-freed
+        exactly those, pulling live prefixes out from under survivors."""
         slot = self.slots[slot_id]
         if slot.pages:
-            self.allocator.free(slot.pages)
+            self.allocator.decref(slot.pages)
             slot.pages = []
         self.slots[slot_id] = None
         self.lens[slot_id] = 0
@@ -334,6 +382,18 @@ class Scheduler:
         return slot
 
     def _retire(self, slot_id: int) -> None:
+        slot = self.slots[slot_id]
+        if self.prefix is not None:
+            # index the retiring request's whole pages — prompt AND
+            # generated tokens (multi-turn reuse: a follow-up prompt
+            # that extends this conversation hits the whole history).
+            # The cache holds positions [0, length) = prompt + out[:-1]
+            # (the last picked token's KV is written by the step that
+            # never came).
+            toks = np.concatenate([
+                np.asarray(slot.req.tokens, np.int32),
+                np.asarray(slot.out[:-1], np.int32)])
+            self.prefix.insert(toks, slot.pages)
         slot = self._evict(slot_id)
         self._terminal(slot.req, slot.out, RequestStatus.FINISHED)
 
@@ -392,6 +452,19 @@ class Scheduler:
         if self.cfg.family == "vlm":
             P += self.cfg.frontend_tokens
         return P
+
+    @staticmethod
+    def _teacher_tokens(item) -> np.ndarray:
+        """Every token position the admission prefill must occupy: the
+        prompt, plus — for a preempted slot being re-admitted — the
+        generated prefix except the last token (that one is the slot's
+        pending input, written by the next step)."""
+        req = item.req if isinstance(item, _Slot) else item
+        tokens = np.asarray(req.tokens, np.int32)
+        if isinstance(item, _Slot):
+            tokens = np.concatenate(
+                [tokens, np.asarray(item.out[:-1], np.int32)])
+        return tokens
 
     def _pages_needed(self, positions: int, more_writes: bool) -> int:
         """Pages covering ``positions`` occupied slots — plus the page
@@ -471,42 +544,77 @@ class Scheduler:
                     f"{self.allocator.n_pages} in total — raise "
                     "EngineConfig.n_pages or page_size")
                 continue
-            if need > self.allocator.free_pages:
+            # prefix-cache match: alias the longest cached whole-page
+            # prefix (incref'd NOW, so eviction below can't reclaim it)
+            # and only allocate private pages for the suffix + growth
+            matched: List[int] = []
+            if self.prefix is not None:
+                matched = self.prefix.match(self._teacher_tokens(item))
+                if matched:
+                    self.allocator.incref(matched)
+            private = need - len(matched)
+            if private > self.allocator.free_pages \
+                    and self.prefix is not None:
+                # refcount-1 LRU trie leaves go before any preemption
+                # (the matched pages just took a slot ref, so eviction
+                # cannot reclaim them out from under this admission)
+                self.stats["prefix_evictions"] += self.prefix.evict(
+                    private - self.allocator.free_pages)
+            if private > self.allocator.free_pages:
+                if matched:
+                    self.allocator.decref(matched)
                 break               # wait for a retirement
             self.pending.popleft()
-            if self._admit_into(slot_id, item,
-                                self.allocator.alloc(need)):
+            if self.prefix is not None:
+                if matched:
+                    self.stats["prefix_hits"] += 1
+                    self.stats["prefix_hit_tokens"] += \
+                        len(matched) * self.page_size
+                else:
+                    self.stats["prefix_misses"] += 1
+                self.stats["shared_pages"] = max(
+                    self.stats["shared_pages"],
+                    self.allocator.shared_pages)
+            pages = matched + self.allocator.alloc(private)
+            if self._admit_into(slot_id, item, pages,
+                                n_shared=len(matched)):
                 admitted += 1
         return admitted
 
-    def _admit_into(self, slot_id: int, item, pages: List[int]) -> bool:
+    def _admit_into(self, slot_id: int, item, pages: List[int],
+                    n_shared: int = 0) -> bool:
         """Prefill ``item`` (a fresh Request, or a preempted _Slot whose
         prompt + generated prefix is teacher-forced back in) into the
-        allocated pages of ``slot_id``.  A prefill that keeps failing
-        past the retry budget FAILs the request (pages returned) rather
-        than the stream.  Returns True if the slot went active."""
+        allocated pages of ``slot_id``.  The first ``n_shared`` pages
+        are prefix-cache aliases already resident in the pool: the
+        prefill runs suffix-only over the remaining tokens (attending
+        to the shared pages read-only) and the scatter touches only the
+        private suffix pages.  A prefill that keeps failing past the
+        retry budget FAILs the request (pages decref'd) rather than the
+        stream.  Returns True if the slot went active."""
         resumed = isinstance(item, _Slot)
         req = item.req if resumed else item
-        tokens = np.asarray(req.tokens, np.int32)
-        if resumed:
-            # re-prefill everything already in the cache at preemption:
-            # prompt + generated tokens except the last, which is the
-            # slot's pending input token (written by the next step)
-            tokens = np.concatenate([tokens,
-                                     np.asarray(item.out[:-1], np.int32)])
-        batch = {"tokens": jnp.asarray(tokens)[None]}
+        tokens = self._teacher_tokens(item)
+        M = n_shared * self.page_size   # cached positions (page-whole)
+        batch = {"tokens": jnp.asarray(tokens[M:])[None]}
         if req.frontend_emb is not None:
             batch["frontend_emb"] = jnp.asarray(req.frontend_emb)[None]
+        if n_shared:
+            batch["pages"] = jnp.asarray(pages[:n_shared], jnp.int32)
+            batch["cache"] = self.cache
+            prefill_fn = self.eng.suffix_prefill_fn
+        else:
+            prefill_fn = self.eng.prefill_fn
 
         def _count_retry(attempt, exc):
             self.stats["prefill_retries"] += 1
 
         try:
             logits, caches = call_with_retries(
-                self.eng.prefill_fn, self.eng.params, batch,
+                prefill_fn, self.eng.params, batch,
                 policy=self.retry, on_retry=_count_retry)
         except Exception as e:                      # noqa: BLE001
-            self.allocator.free(pages)
+            self.allocator.decref(pages)
             self._terminal(req, item.out if resumed else [],
                            RequestStatus.FAILED,
                            f"prefill failed after "
@@ -515,8 +623,13 @@ class Scheduler:
         self.stats["prefills"] += 1
         row = np.zeros((1, self.table.shape[1]), np.int32)
         row[0, :len(pages)] = pages
+        # scatter ONLY the suffix caches into the private suffix pages:
+        # the shared prefix pages already hold their KV (that is the
+        # whole point of the hit) and must never be written through
+        srow = np.zeros((1, self.table.shape[1]), np.int32)
+        srow[0, :len(pages) - n_shared] = pages[n_shared:]
         self.cache = self._write_prefill(self.cache, caches,
-                                         jnp.asarray(row),
+                                         jnp.asarray(srow),
                                          jnp.asarray([slot_id]))
         if resumed:
             slot = _Slot(req=req, length=self._prefill_positions(req)
@@ -545,6 +658,13 @@ class Scheduler:
         self.stats["admitted"] += 1
         self.stats["peak_pages"] = max(self.stats["peak_pages"],
                                        self.allocator.used_pages)
+        if self.prefix is not None:
+            # index the freshly prefilled whole pages NOW (not just at
+            # retirement) so concurrent requests sharing this prompt
+            # hit while it is still in flight; the trie increfs only
+            # nodes it creates, so re-inserting a matched prefix is a
+            # no-op walk
+            self.prefix.insert(tokens, slot.pages)
         if len(slot.out) >= req.gen:
             self._retire(slot_id)   # gen=1: the prefill already ends it
         return True
@@ -556,10 +676,16 @@ class Scheduler:
     def _grow_pages(self) -> None:
         """A slot whose next write position opens a new page gets one
         more from the pool (the only mid-flight allocation).  When the
-        pool is dry, the LATEST-admitted active slot is preempted
-        (freeing its pages) until the allocation fits — the stream
-        degrades to less concurrency instead of dying with every
-        in-flight request lost."""
+        pool is dry, refcount-1 LRU trie leaves are evicted first (a
+        cached-but-unreferenced prefix is the cheapest thing to drop);
+        only once the trie has nothing reclaimable is the
+        LATEST-admitted active slot preempted (decref'ing its pages)
+        until the allocation fits — the stream degrades to less
+        concurrency instead of dying with every in-flight request
+        lost.  A preempted slot's trie-held prefix pages stay resident
+        (refcount 1, trie) and become evictable next iteration, so the
+        loop still terminates: the final victim is the needy slot
+        itself."""
         for slot_id, slot in enumerate(self.slots):
             if slot is None:
                 continue
@@ -567,6 +693,11 @@ class Scheduler:
             if page_idx < len(slot.pages):
                 continue
             while self.allocator.free_pages < 1:
+                if self.prefix is not None:
+                    self.stats["prefix_evictions"] += \
+                        self.prefix.evict(1)
+                    if self.allocator.free_pages >= 1:
+                        break
                 victim = max(
                     (s for s, sl in enumerate(self.slots)
                      if sl is not None),
@@ -579,6 +710,40 @@ class Scheduler:
             (page,) = self.allocator.alloc(1)
             slot.pages.append(page)
             self.table[slot_id, page_idx] = page
+            self.stats["peak_pages"] = max(
+                self.stats["peak_pages"], self.allocator.used_pages)
+
+    def _cow_guard(self) -> None:
+        """Copy-on-write: fork any slot's WRITE page (the page its next
+        decode token lands in) that is shared (refcount > 1), so the
+        write cannot corrupt another reader's prefix.  On the normal
+        scheduler path this never fires — matched prefixes are
+        whole-page and the partial tail / growth pages are always
+        privately allocated — but external incref'ing (snapshots,
+        speculative forks, tests) makes a write page shared, and this
+        guard is what keeps the aliasing safe rather than silently
+        corrupting."""
+        for slot_id, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            wp = slot.length // self.page_size
+            page = slot.pages[wp]
+            if self.allocator.refcount(page) <= 1:
+                continue
+            if self.allocator.free_pages < 1:
+                self.stats["prefix_evictions"] += self.prefix.evict(1)
+            if self.allocator.free_pages < 1:
+                # no page to fork into: back this slot off rather than
+                # write through a shared page
+                self._preempt(slot_id)
+                continue
+            (new,) = self.allocator.alloc(1)
+            self.cache = self._fork_page(self.cache, jnp.int32(page),
+                                         jnp.int32(new))
+            slot.pages[wp] = new
+            self.table[slot_id, wp] = new
+            self.allocator.decref([page])
+            self.stats["cow_forks"] += 1
             self.stats["peak_pages"] = max(
                 self.stats["peak_pages"], self.allocator.used_pages)
 
@@ -625,6 +790,10 @@ class Scheduler:
         self._grow_pages()
         if self.n_active == 0:      # growth preempted everything
             return
+        if self.prefix is not None:
+            self._cow_guard()
+            if self.n_active == 0:
+                return
         if self.straggler is not None:
             self.straggler.start_step()
         # table-width bucketing: stage only live pages.  After

@@ -68,6 +68,14 @@ def build_parser() -> argparse.ArgumentParser:
                          "staggered requests of varying lengths "
                          "through the scheduler (implies --paged; "
                          "--batch is the slot count)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="with --stream: prefix-sharing radix cache "
+                         "over the page pool (engine.prefix_cache) — "
+                         "admission aliases the longest cached whole-"
+                         "page prefix into the slot's block table and "
+                         "prefills only the suffix; some stream "
+                         "prompts share a common system prefix so the "
+                         "hit counters are exercised")
     ap.add_argument("--inject", action="store_true",
                     help="with --stream: run a deterministic chaos "
                          "schedule (engine.faults) through the stream "
@@ -104,6 +112,7 @@ def engine_config_from_args(args, cfg=None) -> EngineConfig:
         page_size=args.page_size,
         n_pages=args.n_pages,
         kv_dtype=getattr(args, "kv_dtype", "bf16"),
+        prefix_cache=bool(getattr(args, "prefix_cache", False)),
     )
 
 
@@ -140,12 +149,25 @@ def _serve_stream(engine, args):
                 faults.SlowStep(step=9 + s0 % 3, delay_s=0.05)]
         faults.inject(sched, decode_faults=plan)
         release = faults.hold_pages(sched, max(1, engine.n_pages // 8))
-    # varying lengths: prompts in [P/2, P], gens in [G/2, G]
-    reqs = [Request(rid=i,
-                    tokens=rng.integers(
-                        2, cfg.vocab,
-                        (int(rng.integers(max(P // 2, 1), P + 1)),)
-                    ).astype(np.int32),
+    # varying lengths: prompts in [P/2, P], gens in [G/2, G].  With
+    # --prefix-cache, half the stream shares a common "system prompt"
+    # prefix (a whole number of pages) so the radix cache actually hits.
+    shared = None
+    if getattr(args, "prefix_cache", False):
+        sys_pages = max(1, (P // 2) // engine.page_size)
+        shared = rng.integers(
+            2, cfg.vocab, (sys_pages * engine.page_size,)
+        ).astype(np.int32)
+
+    def _prompt(i):
+        body = rng.integers(
+            2, cfg.vocab,
+            (int(rng.integers(max(P // 2, 1), P + 1)),)).astype(np.int32)
+        if shared is not None and i % 2 == 0:
+            return np.concatenate([shared, body])[:P].astype(np.int32)
+        return body
+
+    reqs = [Request(rid=i, tokens=_prompt(i),
                     gen=int(rng.integers(max(G // 2, 1), G + 1)),
                     temperature=args.temperature, seed=i)
             for i in range(n)]
@@ -193,6 +215,14 @@ def _serve_stream(engine, args):
     if lat:
         print(f"[serve] request latency: p50 {lat['p50']:.3f}s "
               f"p90 {lat['p90']:.3f}s p99 {lat['p99']:.3f}s")
+    if sched.prefix is not None:
+        print(f"[serve] prefix cache: hits {st['prefix_hits']} / "
+              f"misses {st['prefix_misses']}, "
+              f"{st['prefix_hit_tokens']} prompt tokens served from "
+              f"cache; evictions {st['prefix_evictions']}, peak shared "
+              f"pages {st['shared_pages']}, cow forks "
+              f"{st['cow_forks']}; {sched.prefix.cached_pages} pages "
+              "still cached")
     if args.inject:
         bad = {i: v for i, v in sched.finished.items() if not v.ok}
         for i, v in sorted(bad.items()):

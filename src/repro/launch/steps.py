@@ -73,6 +73,18 @@ def build_prefill(cfg: ModelConfig, mesh=None):
     return prefill_step
 
 
+def build_suffix_prefill(cfg: ModelConfig, mesh=None):
+    """Suffix-only prefill against a prefix already resident in the
+    page pools (prefix-cache hit): batch carries the suffix ``tokens``,
+    the matched ``pages`` and the live ``cache``; the matched length
+    rides the pages operand's shape, so jit compiles once per
+    (suffix_len, prefix_len) pair — the same per-shape discipline as
+    whole-prompt prefill."""
+    def suffix_prefill_step(params, batch):
+        return lm.prefill_suffix(params, batch, cfg, mesh=mesh)
+    return suffix_prefill_step
+
+
 def build_decode(cfg: ModelConfig, mesh=None):
     """One-token serve step with the mesh passed explicitly through
     ``lm.decode_step`` (no ambient-mesh lookup on the decode hot path).

@@ -1142,6 +1142,149 @@ def prefill(params, batch, cfg, mesh=None):
     return logits.astype(jnp.float32), out.caches
 
 
+# ---------------- suffix-only prefill (prefix cache) ----------------
+
+def _gather_prefix_kv(sub, keys, pages):
+    """Gather the matched prefix pages back out of one family's pools
+    into dense prefill-cache-shaped ``(L, 1, M, ...)`` arrays
+    (M = n_pages * page_size), dequantizing int8 pools through their
+    per-page scale sidecars.  For model-dtype pools the gathered rows
+    are bit-identical to the KV the original prefill wrote."""
+    out = []
+    for kk in keys:
+        pool = sub[kk]                       # (L, n_pages, ps, ...)
+        g = pool[:, pages]                   # (L, J, ps, ...)
+        if kk + "_scale" in sub:
+            s = sub[kk + "_scale"][:, pages]  # (L, J[, KV])
+            if g.ndim == 5:                   # GQA: per-page per-head
+                s = s[:, :, None, :, None]
+            else:                             # MLA latent: per-page
+                s = s[:, :, None, None]
+            g = g.astype(jnp.float32) * s
+        L, J, ps = g.shape[:3]
+        out.append(g.reshape(L, 1, J * ps, *g.shape[3:]))
+    return tuple(out)
+
+
+def _suffix_attn_delta(cfg, ap, h, q_pos, kv_pos, prefix, *,
+                       residual=None, mesh=None):
+    """Attention step of the suffix bodies: queries at global positions
+    ``q_pos`` over concat(prefix KV from the pools, suffix KV computed
+    here).  Runs the blockwise (xla) path directly — the streaming
+    kv scan sees the same kv length and block boundaries as the
+    whole-prompt prefill, so every suffix row is bit-identical to the
+    corresponding row of a full prefill (the pallas prefill kernel has
+    no positional-offset support; admission is batch-1 and off the
+    decode hot path, so kernel parity is deliberately future work)."""
+    if cfg.mla is not None:
+        pckv, pkrope = prefix
+        out, cache = MLA.mla_attention_suffix(
+            ap, h, q_pos, kv_pos, cfg, pckv, pkrope,
+            head_axis=_head_axis(cfg), mesh=mesh)
+        return (out if residual is None else residual + out), cache
+    pk, pv = prefix
+    q, k, v = A.qkv_proj(ap, h, q_pos, cfg.rope_theta, cfg)
+    k_all = jnp.concatenate([pk.astype(k.dtype), k], axis=1)
+    v_all = jnp.concatenate([pv.astype(v.dtype), v], axis=1)
+    if cfg.accounting:
+        o = A.full_attn_ref(q, k_all, v_all, causal=True,
+                            q_positions=q_pos, kv_positions=kv_pos)
+    else:
+        o = A.blockwise_attn(q, k_all, v_all, causal=True,
+                             q_positions=q_pos, kv_positions=kv_pos,
+                             block_q=cfg.attn_block_q,
+                             block_kv=cfg.attn_block_kv,
+                             head_axis=_head_axis(cfg), mesh=mesh)
+    return A.o_proj(ap, o, cfg, residual=residual), (k, v)
+
+
+def _dense_suffix_body(cfg, q_pos, kv_pos, x, lp, prefix, *, mesh=None):
+    x, kv = _suffix_attn_delta(cfg, lp["attn"],
+                               _norm(cfg, lp["attn_norm"], x),
+                               q_pos, kv_pos, prefix, residual=x,
+                               mesh=mesh)
+    x = L.mlp(lp["mlp"], _norm(cfg, lp["mlp_norm"], x), cfg.act,
+              backend=cfg, residual=x)
+    return x, kv
+
+
+def _moe_suffix_body(cfg, q_pos, kv_pos, x, lp, prefix, *, mesh=None):
+    x, kv = _suffix_attn_delta(cfg, lp["attn"],
+                               _norm(cfg, lp["attn_norm"], x),
+                               q_pos, kv_pos, prefix, residual=x,
+                               mesh=mesh)
+    y, aux = MOE.moe_ffn(lp["moe"], _norm(cfg, lp["mlp_norm"], x), cfg,
+                         mesh=mesh)
+    return x + y, (kv, aux)
+
+
+def prefill_suffix(params, batch, cfg, mesh=None):
+    """Prefill only the SUFFIX of a prompt whose prefix is already
+    resident in the page pools (prefix cache hit).
+
+    batch: ``tokens`` (1, S) int32 suffix tokens, ``pages`` (J_m,)
+    int32 matched physical page ids (whole pages, prefix order), and
+    ``cache`` — the live page pools the prefix is read from.  The
+    matched length M = J_m * page_size rides the ``pages`` operand's
+    SHAPE, so under jit this compiles once per (S, M) pair — the same
+    per-shape compile discipline as whole-prompt prefill.
+
+    Returns (last-token logits (1, vocab_padded) fp32, suffix cache
+    material) exactly like ``prefill`` restricted to positions
+    [M, M+S): the caches scatter into the slot's pages from page index
+    J_m on (the suffix starts page-aligned by construction).
+
+    Families: dense and moe (GQA or MLA).  The frontend families
+    (vlm/audio) prepend non-token positions, so a token-only prefix
+    index cannot alias their pages — the scheduler gates them off.
+    """
+    fam = cfg.family
+    if fam not in ("dense", "moe"):
+        raise ValueError(
+            f"prefill_suffix supports the token-only families "
+            f"('dense', 'moe'); family {fam!r} prepends frontend "
+            "positions that a token-keyed prefix index cannot match")
+    tokens = batch["tokens"]
+    pages = jnp.asarray(batch["pages"], jnp.int32)
+    cache = batch["cache"]
+    keys = ("ckv", "krope") if cfg.mla is not None else ("k", "v")
+    sub = cache["moe"] if fam == "moe" else cache
+    ps = sub[keys[0]].shape[2]
+    M = pages.shape[0] * ps
+    S = tokens.shape[1]
+    q_pos = jnp.arange(S) + M
+    kv_pos = jnp.arange(M + S)
+
+    x = L.embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+
+    if fam == "dense":
+        prefix = _gather_prefix_kv(cache, keys, pages)
+        body = functools.partial(_dense_suffix_body, cfg, q_pos, kv_pos,
+                                 mesh=mesh)
+        x, kvs = _scan_stack(cfg, body, x, params["layers"],
+                             extra_xs=prefix)
+        caches = kvs
+    else:                                   # moe
+        m = cfg.moe
+        kv_d = None
+        if m.first_k_dense:
+            prefix_d = _gather_prefix_kv(cache["dense"], keys, pages)
+            body = functools.partial(_dense_suffix_body, cfg, q_pos,
+                                     kv_pos, mesh=mesh)
+            x, kv_d = _scan_stack(cfg, body, x, params["dense_layers"],
+                                  extra_xs=prefix_d)
+        prefix_m = _gather_prefix_kv(cache["moe"], keys, pages)
+        body = functools.partial(_moe_suffix_body, cfg, q_pos, kv_pos,
+                                 mesh=mesh)
+        x, (kv_m, _aux) = _scan_stack(cfg, body, x, params["layers"],
+                                      extra_xs=prefix_m)
+        caches = (kv_d, kv_m)
+
+    h = _norm(cfg, params["final_norm"], x)
+    logits = _logits(params, h[:, -1:, :], cfg)[:, 0]
+    return logits.astype(jnp.float32), caches
+
+
 # ---------------- xlstm decode uses ml/sl steps with scalar inputs -------
 
 def ssm_decode_supported(cfg) -> bool:

@@ -100,6 +100,54 @@ def mla_attention(p, x, positions, cfg, *, causal=True, dense=False,
     return out, (c_kv, k_rope)
 
 
+def mla_attention_suffix(p, x, q_positions, kv_positions, cfg,
+                         prefix_ckv, prefix_krope, *, head_axis=None,
+                         mesh=None):
+    """Expanded-form attention for suffix-only prefill (prefix cache).
+
+    ``x`` holds only the SUFFIX tokens at global ``q_positions``
+    (arange(M, M+S) for a matched prefix of M tokens);
+    ``prefix_ckv`` (B, M, r) / ``prefix_krope`` (B, M, rope) are the
+    prefix latents gathered back out of the page pools (already
+    normalized / rope'd — exactly what ``mla_latent`` cached).  Keys
+    and values are reconstructed from the concatenated latents through
+    wk_b / wv_b just as the full prefill does, so each suffix row's
+    output is bit-identical to the same row of a whole-prompt
+    ``mla_attention`` when the pools store the model dtype.  Returns
+    (out, (c_kv, k_rope)) covering the suffix only — the prefix is
+    already paged."""
+    m = cfg.mla
+    H = cfg.n_heads
+    q_nope, q_rope = mla_queries(p, x, q_positions, cfg)
+    c_kv, k_rope = mla_latent(p, x, q_positions, cfg)
+
+    ckv_all = jnp.concatenate([prefix_ckv.astype(c_kv.dtype), c_kv], 1)
+    krope_all = jnp.concatenate(
+        [prefix_krope.astype(k_rope.dtype), k_rope], 1)
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv_all, p["wk_b"])
+    v = jnp.einsum("bsr,rhk->bshk", ckv_all, p["wv_b"])
+    k_rope_h = jnp.broadcast_to(
+        krope_all[:, :, None, :],
+        (*krope_all.shape[:2], H, m.rope_head_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+
+    if cfg.accounting:
+        from repro.models.attention import full_attn_ref
+        o = full_attn_ref(q, k, v_pad(v, q.shape[-1]), causal=True,
+                          q_positions=q_positions,
+                          kv_positions=kv_positions)[..., : m.v_head_dim]
+    else:
+        o = blockwise_attn(
+            q, k, v_pad(v, q.shape[-1]), causal=True,
+            q_positions=q_positions, kv_positions=kv_positions,
+            block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv,
+            head_axis=head_axis, mesh=mesh,
+        )[..., : m.v_head_dim]
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, (c_kv, k_rope)
+
+
 def v_pad(v, d):
     """Pad V head dim up to QK head dim so the streaming kernel is uniform."""
     pad = d - v.shape[-1]

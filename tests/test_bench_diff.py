@@ -67,6 +67,43 @@ def test_diff_flags_staged_bytes_regressions():
     assert res["byte_regressions"][0]["staged_bytes_new"] == 1_200_000
 
 
+def test_diff_flags_speedup_regressions():
+    """A row carrying a within-run baseline (``us_ref`` — the
+    prefix_cache_decode TTFT row's cold reference) is flagged when the
+    SPEEDUP us_ref/us shrinks past the threshold, even if both
+    absolute latencies moved together (machine-load jitter)."""
+    old = [_row("prefix_cache_decode", "m:104p", 1000.0) | {
+               "us_ref": 5000.0}]                  # 5.0x warm-vs-cold
+    # everything 2x slower (load), but the ratio collapsed to 2.2x
+    new = [_row("prefix_cache_decode", "m:104p", 4500.0) | {
+               "us_ref": 10000.0}]
+    res = bench_diff.diff(old, new, threshold=0.10)
+    assert [(e["op"], e["speedup_old"], e["speedup_new"])
+            for e in res["speedup_regressions"]] == \
+        [("prefix_cache_decode", 5.0, 2.222)]
+    # a proportional slowdown keeps the ratio: no speedup flag
+    prop = [_row("prefix_cache_decode", "m:104p", 2000.0) | {
+                "us_ref": 10000.0}]
+    assert not bench_diff.diff(old, prop,
+                               threshold=0.10)["speedup_regressions"]
+
+
+def test_cli_fail_flag_counts_speedup_regressions(tmp_path):
+    old = tmp_path / "old.json"
+    new = tmp_path / "new.json"
+    old.write_text(json.dumps(
+        [_row("prefix_cache_decode", "s", 100.0) | {"us_ref": 500.0}]))
+    new.write_text(json.dumps(
+        [_row("prefix_cache_decode", "s", 105.0) | {"us_ref": 210.0}]))
+    script = os.path.join(os.path.dirname(__file__), "..", "scripts",
+                          "bench_diff.py")
+    r = subprocess.run([sys.executable, script, str(old), str(new),
+                        "--fail"], capture_output=True, text=True)
+    assert r.returncode == 1
+    assert "SPEEDUP-REGRESSION" in r.stdout
+    assert "1 speedup" in r.stdout
+
+
 def test_diff_ignores_missing_staged_bytes():
     """Rows without the column (most latency benches) never produce
     byte flags."""

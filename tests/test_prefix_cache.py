@@ -1,0 +1,489 @@
+"""Prefix-sharing radix cache tests: refcounted allocator semantics,
+trie match/insert/evict boundaries (whole-page granularity off-by-ones),
+the device-side copy-on-write page fork (incl. int8 scale sidecars),
+scheduler integration (suffix-only prefill bit-identity vs the
+cache-off scheduler for every paged family x kv dtype), the
+shared-page double-free regression, eviction-before-preemption
+ordering, and a deterministic randomized interleaving pinning the
+refcount partition invariant (the hypothesis mirror lives in
+tests/test_resilience_prop.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import MLAConfig, ModelConfig, MoEConfig
+from repro.engine import (DecodeEngine, EngineConfig, PageAllocator,
+                          PrefixCache, Request, Scheduler, fork_page)
+
+PS = 4          # page_size used throughout
+
+
+def _cfg(**kw):
+    base = dict(name="t", family="dense", n_layers=2, d_model=64,
+                n_heads=4, n_kv_heads=2, d_head=16, d_ff=128, vocab=256,
+                dtype="float32", remat="none", attn_block_q=32,
+                attn_block_kv=32)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+_MLA = MLAConfig(q_lora_rank=32, kv_lora_rank=16, rope_head_dim=8,
+                 nope_head_dim=16, v_head_dim=16)
+
+
+def _mla_cfg():
+    return _cfg(mla=_MLA)
+
+
+def _moe_mla_cfg():
+    return _cfg(family="moe",
+                moe=MoEConfig(n_experts=4, top_k=2, d_expert=32,
+                              first_k_dense=1, d_ff_dense=128,
+                              capacity_factor=4.0),
+                mla=_MLA)
+
+
+def _engine(cfg, B=2, P=8, G=5, n_pages=16, **kw):
+    return DecodeEngine(cfg, EngineConfig(
+        batch=B, max_len=P + G, paged=True, page_size=PS,
+        n_pages=n_pages, prefix_cache=True, **kw))
+
+
+def _run(eng, reqs, *, prefix_cache=None, **sched_kw):
+    sched = Scheduler(eng, prefix_cache=prefix_cache, **sched_kw)
+    for r in reqs:
+        sched.submit(r)
+    out = sched.run()
+    return sched, out
+
+
+def _reqs(prompts, gen=5):
+    return [Request(rid=i, tokens=np.asarray(p, np.int32), gen=gen,
+                    seed=i)
+            for i, p in enumerate(prompts)]
+
+
+# ------------------------------------------------- refcounted allocator
+
+
+def test_allocator_refcounts():
+    al = PageAllocator(4)
+    (p,) = al.alloc(1)
+    assert al.refcount(p) == 1 and al.shared_pages == 0
+    al.incref([p])
+    assert al.refcount(p) == 2 and al.shared_pages == 1
+    al.decref([p])
+    assert al.refcount(p) == 1 and al.used_pages == 1
+    al.decref([p])                      # last ref: page returns
+    assert al.free_pages == 4 and al.refcount(p) == 0
+    al.check()
+
+
+def test_allocator_free_of_shared_page_raises():
+    """The double-free shape the scheduler used to hit: ``free`` on a
+    page another holder still references must refuse loudly."""
+    al = PageAllocator(4)
+    pages = al.alloc(2)
+    al.incref(pages)
+    with pytest.raises(ValueError, match="shared page"):
+        al.free(pages)
+    al.decref(pages)
+    al.free(pages)                      # sole ref: plain free still works
+    assert al.free_pages == 4
+    al.check()
+
+
+def test_allocator_ref_misuse_raises():
+    al = PageAllocator(2)
+    (p,) = al.alloc(1)
+    with pytest.raises(ValueError):
+        al.incref([p + 1])              # not handed out
+    al.decref([p])
+    with pytest.raises(ValueError):
+        al.decref([p])                  # over-decref
+    al.check()
+
+
+def test_allocator_decref_duplicates_in_one_call():
+    """A caller may hold several refs on one page (trie + slot row) and
+    release them in a single decref list."""
+    al = PageAllocator(2)
+    (p,) = al.alloc(1)
+    al.incref([p])
+    al.decref([p, p])
+    assert al.free_pages == 2
+    al.check()
+
+
+# ------------------------------------------------- trie boundaries
+
+
+def _insert(al, pc, tokens):
+    """Retiring-slot idiom: alloc the whole pages, insert, drop the
+    slot refs (the trie keeps what it indexed, the rest frees)."""
+    n_whole = len(tokens) // pc.page_size
+    pages = al.alloc(n_whole)
+    pc.insert(tokens, pages)
+    if pages:
+        al.decref(pages)
+    return pages
+
+
+@pytest.mark.parametrize("P,want_cached,want_match", [
+    (1, 0, 0),           # 1-token prompt: nothing whole to share
+    (PS - 1, 0, 0),      # under a page
+    (PS, 1, 0),          # exactly one page cached, but matching the
+                         # SAME prompt must leave >= 1 suffix token
+    (PS + 1, 1, 1),      # one whole page + partial tail
+    (2 * PS, 2, 1),      # two whole pages; match capped at len-1
+    (2 * PS + 1, 2, 2),
+], ids=["one-token", "ps-1", "ps", "ps+1", "2ps", "2ps+1"])
+def test_trie_whole_page_boundaries(P, want_cached, want_match):
+    """Off-by-ones at the page boundary: only whole pages are indexed,
+    and a match never swallows the final token (the suffix prefill must
+    produce the first generated token's logits)."""
+    al = PageAllocator(16)
+    pc = PrefixCache(PS, al)
+    tokens = np.arange(P, dtype=np.int32)
+    _insert(al, pc, tokens)
+    assert pc.cached_pages == want_cached
+    assert len(pc.match(tokens)) == want_match
+    assert al.used_pages == want_cached     # partial tail pages freed
+    pc.check()
+    al.check()
+
+
+def test_trie_match_is_prefix_ordered_and_longest():
+    al = PageAllocator(16)
+    pc = PrefixCache(PS, al)
+    tokens = np.arange(3 * PS, dtype=np.int32)
+    pages = al.alloc(3)
+    pc.insert(tokens, pages)
+    al.decref(pages)
+    # longer query: all 3 cached pages come back, in prefix order
+    q = np.concatenate([tokens, [99]])
+    assert pc.match(q) == pages
+    # diverging third page: only the shared 2-page prefix matches
+    q2 = np.concatenate([tokens[:2 * PS], [7] * PS, [99]])
+    assert pc.match(q2) == pages[:2]
+    assert pc.match(np.asarray([5, 6, 7])) == []
+
+
+def test_trie_dedup_keeps_canonical_page():
+    al = PageAllocator(16)
+    pc = PrefixCache(PS, al)
+    tokens = np.arange(PS, dtype=np.int32)
+    (a,) = al.alloc(1)
+    assert pc.insert(tokens, [a]) == 1
+    (b,) = al.alloc(1)
+    assert pc.insert(tokens, [b]) == 0      # duplicate: no new node
+    assert pc.match(np.concatenate([tokens, [0]])) == [a]
+    assert al.refcount(b) == 1              # duplicate stays caller-owned
+    al.decref([a, b])
+    pc.check()
+
+
+def test_trie_evict_lru_and_refcount_safety():
+    """Eviction is LRU over refcount-1 leaves and never drops a page a
+    slot still holds; emptying a branch cascades to its parent."""
+    al = PageAllocator(16)
+    pc = PrefixCache(PS, al)
+    old = np.asarray([1] * (2 * PS), np.int32)
+    new = np.asarray([2] * PS, np.int32)
+    old_pages = al.alloc(2)
+    pc.insert(old, old_pages)
+    al.decref(old_pages)
+    new_pages = al.alloc(1)
+    pc.insert(new, new_pages)
+    al.decref(new_pages)
+    # pin the NEW page like a slot would; LRU would prefer old anyway
+    al.incref(new_pages)
+    assert pc.evict(10) == 2                # both old pages, cascading
+    assert al.refcount(new_pages[0]) == 2   # pinned page untouched
+    assert pc.cached_pages == 1
+    al.decref(new_pages)
+    assert pc.evict(10) == 1                # unpinned: now evictable
+    assert al.free_pages == 16
+    pc.check()
+    al.check()
+
+
+# ------------------------------------------------- device-side CoW fork
+
+
+@pytest.mark.parametrize("make_cfg,kv_dtype", [
+    (_cfg, "bf16"), (_cfg, "int8"), (_mla_cfg, "int8")],
+    ids=["gqa", "gqa-int8", "mla-int8"])
+def test_fork_page_copies_every_leaf(make_cfg, kv_dtype, rng):
+    """``fork_page`` duplicates one physical page across every pool
+    leaf — including the fp32 per-page scale sidecar rows of int8
+    pools — leaving all other pages untouched."""
+    cfg = make_cfg()
+    eng = _engine(cfg, kv_dtype=kv_dtype)
+    cache = eng.init_paged_cache()
+    cache = jax.tree.map(
+        lambda leaf: jnp.asarray(
+            rng.standard_normal(leaf.shape), leaf.dtype)
+        if jnp.issubdtype(leaf.dtype, jnp.floating)
+        else jnp.asarray(rng.integers(-5, 5, leaf.shape), leaf.dtype),
+        cache)
+    src, dst, other = 1, 3, 0
+    before = jax.tree.map(lambda leaf: np.asarray(leaf), cache)
+    forked = fork_page(cfg, cache, src, dst)
+    for (path, leaf), (_, was) in zip(
+            jax.tree_util.tree_flatten_with_path(forked)[0],
+            jax.tree_util.tree_flatten_with_path(before)[0]):
+        got = np.asarray(leaf)
+        np.testing.assert_array_equal(got[:, dst], was[:, src],
+                                      err_msg=str(path))
+        np.testing.assert_array_equal(got[:, other], was[:, other],
+                                      err_msg=str(path))
+        np.testing.assert_array_equal(got[:, src], was[:, src],
+                                      err_msg=str(path))
+
+
+def test_fork_page_rejects_audio():
+    cfg = _cfg(family="audio", enc_layers=2, frontend="audio",
+               frontend_dim=24)
+    eng = DecodeEngine(cfg, EngineConfig(batch=2, max_len=16, paged=True,
+                                         page_size=PS))
+    with pytest.raises(ValueError, match="audio"):
+        fork_page(cfg, eng.init_paged_cache(), 0, 1)
+
+
+# ------------------------------------------------- scheduler integration
+
+
+@pytest.mark.parametrize("make_cfg", [_cfg, _mla_cfg, _moe_mla_cfg],
+                         ids=["gqa", "mla", "moe-mla"])
+@pytest.mark.parametrize("kv_dtype", ["bf16", "int8"])
+def test_prefix_scheduler_matches_off(make_cfg, kv_dtype, rng):
+    """Greedy token streams with the prefix cache ON are bit-identical
+    to the cache-off scheduler — shared-prompt requests run suffix-only
+    prefill over aliased pages.  Exact for model-dtype pools by
+    construction; for int8 pools the hit's suffix prefill reads the
+    dequantized prefix (cold prefill saw full precision), so identity
+    there is pinned empirically at this scale/seed — the per-page
+    scales match exactly because the shared pages hold the same
+    tokens."""
+    cfg = make_cfg()
+    P, G = 9, 5
+    eng = _engine(cfg, P=P + 3, G=G, kv_dtype=kv_dtype)
+    shared = rng.integers(2, cfg.vocab, (P,)).astype(np.int32)
+    prompts = [shared, shared,                      # exact repeat
+               np.concatenate([shared, [7, 8, 9]]),  # extension
+               rng.integers(2, cfg.vocab, (P,))]     # unrelated
+    off, want = _run(eng, _reqs(prompts, gen=G), prefix_cache=False)
+    on, got = _run(eng, _reqs(prompts, gen=G))
+    for i in range(len(prompts)):
+        np.testing.assert_array_equal(np.asarray(got[i]),
+                                      np.asarray(want[i]),
+                                      err_msg=f"req {i}")
+    assert on.stats["prefix_hits"] >= 2
+    assert on.stats["prefix_hit_tokens"] >= 2 * PS
+    assert on.stats["shared_pages"] >= 1
+    assert off.stats["prefix_hits"] == 0
+    on.prefix.check()
+    on.allocator.check()
+
+
+def test_prefix_scheduler_matches_off_unbucketed(rng):
+    """bucket_tables=False stages full-width tables; aliasing must be
+    oblivious to the staging width."""
+    cfg = _cfg()
+    shared = rng.integers(2, cfg.vocab, (9,)).astype(np.int32)
+    eng = _engine(cfg, P=9, G=5)
+    prompts = [shared, shared]
+    _, want = _run(eng, _reqs(prompts), prefix_cache=False,
+                   bucket_tables=False)
+    on, got = _run(eng, _reqs(prompts), bucket_tables=False)
+    for i in range(2):
+        np.testing.assert_array_equal(np.asarray(got[i]),
+                                      np.asarray(want[i]))
+    assert on.stats["prefix_hits"] == 1
+
+
+def test_multi_turn_retirement_indexes_generated_tokens(rng):
+    """A follow-up prompt extending a finished conversation (prompt +
+    generated tokens) hits pages covering the GENERATED history too —
+    retirement indexes the whole resident sequence, not just the
+    prompt."""
+    cfg = _cfg()
+    P, G = 8, 6
+    eng = _engine(cfg, B=2, P=P + G + 4, G=G, n_pages=24)
+    prompt = rng.integers(2, cfg.vocab, (P,)).astype(np.int32)
+    s1, out1 = _run(eng, [Request(rid=0, tokens=prompt, gen=G, seed=0)])
+    turn1 = np.concatenate([prompt, np.asarray(out1[0], np.int32)])
+    # reuse the SAME scheduler (the trie persists across run() calls)
+    follow = np.concatenate([turn1,
+                             rng.integers(2, cfg.vocab, (3,))
+                             .astype(np.int32)])
+    s1.submit(Request(rid=1, tokens=follow, gen=3, seed=1))
+    out2 = s1.run()
+    assert out2[1].ok
+    # conversation history is P + G - 1 resident positions: every
+    # whole page of it must have come from the cache
+    assert s1.stats["prefix_hit_tokens"] >= ((P + G - 1) // PS) * PS
+    # bit-identity of the follow-up against a cold scheduler
+    _, want = _run(eng, [Request(rid=1, tokens=follow, gen=3, seed=1)],
+                   prefix_cache=False)
+    np.testing.assert_array_equal(np.asarray(out2[1]),
+                                  np.asarray(want[1]))
+
+
+def test_preempting_shared_slot_no_double_free(rng):
+    """Regression for the shared-page double-free: two slots alias the
+    same prefix pages; preempting one must DECREF (old code free'd),
+    leaving the survivor's prefix intact and the allocator coherent."""
+    cfg = _cfg()
+    P, G = 9, 6
+    eng = _engine(cfg, B=2, P=P, G=G, n_pages=24)
+    shared = rng.integers(2, cfg.vocab, (P,)).astype(np.int32)
+    reqs = _reqs([shared, shared], gen=G)
+    _, want = _run(eng, _reqs([shared, shared], gen=G),
+                   prefix_cache=False)
+    sched = Scheduler(eng)
+    for r in reqs:
+        sched.submit(r)
+    assert sched.admit() == 2
+    assert sched.allocator.shared_pages >= 1
+    sched._preempt(1)               # mid-flight eviction of the sharer
+    sched.allocator.check()         # old code: free() already corrupted
+    sched.prefix.check()
+    out = sched.run()               # victim re-admits and finishes
+    for i in range(2):
+        np.testing.assert_array_equal(np.asarray(out[i]),
+                                      np.asarray(want[i]),
+                                      err_msg=f"req {i}")
+    sched.allocator.check()
+
+
+def test_cow_guard_forks_shared_write_page(rng):
+    """An externally shared WRITE page (snapshot-style incref) is
+    forked before the next decode write — the stream's tokens are
+    unchanged and the pinned original page is never written through."""
+    cfg = _cfg()
+    P, G = 9, 6
+    eng = _engine(cfg, B=1, P=P, G=G, n_pages=16)
+    prompt = rng.integers(2, cfg.vocab, (P,)).astype(np.int32)
+    _, want = _run(eng, [Request(rid=0, tokens=prompt, gen=G, seed=0)],
+                   prefix_cache=False)
+    sched = Scheduler(eng)
+    sched.submit(Request(rid=0, tokens=prompt, gen=G, seed=0))
+    assert sched.admit() == 1
+    slot = sched.slots[0]
+    wp = slot.length // sched.page_size
+    pinned = slot.pages[wp]
+    sched.allocator.incref([pinned])        # external snapshot ref
+    snap = np.asarray(jax.tree_util.tree_leaves(sched.cache)[0][:, pinned])
+    out = sched.run()
+    np.testing.assert_array_equal(np.asarray(out[0]),
+                                  np.asarray(want[0]))
+    assert sched.stats["cow_forks"] >= 1
+    np.testing.assert_array_equal(
+        np.asarray(jax.tree_util.tree_leaves(sched.cache)[0][:, pinned]),
+        snap)                               # pinned page untouched
+    assert sched.allocator.refcount(pinned) == 1
+    sched.allocator.decref([pinned])
+    sched.allocator.check()
+
+
+def test_eviction_precedes_preemption(rng):
+    """Pool pressure reclaims refcount-1 trie leaves BEFORE any active
+    slot is preempted: cold cache entries are cheaper than redoing a
+    live request's prefill."""
+    cfg = _cfg()
+    P, G = 8, 6
+    # pool sized so the second request cannot fit while the first
+    # request's retired pages sit in the trie
+    eng = _engine(cfg, B=1, P=P, G=G, n_pages=4)
+    r0 = Request(rid=0, tokens=rng.integers(2, cfg.vocab, (P,))
+                 .astype(np.int32), gen=G, seed=0)
+    r1 = Request(rid=1, tokens=rng.integers(2, cfg.vocab, (P,))
+                 .astype(np.int32), gen=G, seed=1)
+    sched, out = _run(eng, [r0, r1])
+    assert out[0].ok and out[1].ok
+    assert sched.stats["prefix_evictions"] >= 1
+    assert sched.stats["preempted"] == 0
+    sched.allocator.check()
+
+
+def test_clear_drains_pool(rng):
+    """After the stream drains, the only pages still held are the
+    trie's; ``clear()`` hands every one back (the chaos-leg leak
+    check)."""
+    cfg = _cfg()
+    eng = _engine(cfg, P=9, G=5)
+    shared = rng.integers(2, cfg.vocab, (9,)).astype(np.int32)
+    sched, out = _run(eng, _reqs([shared, shared, shared]))
+    assert all(v.ok for v in out.values())
+    assert sched.allocator.free_pages == \
+        eng.n_pages - sched.prefix.cached_pages
+    sched.prefix.clear()
+    assert sched.allocator.free_pages == eng.n_pages
+    sched.allocator.check()
+
+
+# ------------------------------------------------- randomized interleaving
+
+
+def test_refcount_partition_under_random_interleaving():
+    """Deterministic mirror of the hypothesis property (which skips
+    when hypothesis is absent): random insert / match+incref / release
+    / evict interleavings keep the refcount partition exact — every
+    owned page's refcount equals (trie nodes owning it) + (outstanding
+    match holds on it) — and eviction never frees a held page."""
+    rng = np.random.default_rng(0)
+    al = PageAllocator(12)
+    pc = PrefixCache(PS, al)
+    holds = []
+
+    def trie_counts():
+        counts = {}
+        stack = list(pc._root.children.values())
+        while stack:
+            nd = stack.pop()
+            stack.extend(nd.children.values())
+            counts[nd.page] = counts.get(nd.page, 0) + 1
+        return counts
+
+    def partition():
+        counts = trie_counts()
+        for pages in holds:
+            for p in pages:
+                counts[p] = counts.get(p, 0) + 1
+        assert set(counts) == {
+            p for p in range(al.n_pages) if al.refcount(p) > 0}
+        for p, want in counts.items():
+            assert al.refcount(p) == want, f"page {p}"
+        al.check()
+        pc.check()
+
+    for _ in range(400):
+        op = rng.integers(0, 4)
+        toks = rng.integers(0, 2, (int(rng.integers(1, 3 * PS + 2)),))
+        if op == 0:                                  # retiring insert
+            n_whole = len(toks) // PS
+            if n_whole <= al.free_pages:
+                pages = al.alloc(n_whole)
+                pc.insert(toks, pages)
+                if pages:
+                    al.decref(pages)
+        elif op == 1:                                # match + hold
+            pages = pc.match(toks)
+            if pages:
+                al.incref(pages)
+                holds.append(pages)
+        elif op == 2 and holds:                      # release a hold
+            al.decref(holds.pop(int(rng.integers(len(holds)))))
+        elif op == 3:                                # evict
+            held = {p for hold in holds for p in hold}
+            pc.evict(int(rng.integers(1, 4)))
+            for p in held:
+                assert al.refcount(p) >= 1, "evicted a held page"
+        partition()
+    for pages in holds:
+        al.decref(pages)
+    pc.clear()
+    assert al.free_pages == al.n_pages

@@ -1,9 +1,14 @@
 """Property tests (hypothesis) for the fault-tolerant serving layer:
 random alloc/free interleavings against the PageAllocator invariant,
-and random admit/step/cancel sequences driving the Scheduler's
+random admit/step/cancel sequences driving the Scheduler's
 bookkeeping (growth, preemption, parking, rejection, retirement) on a
-model-free fake engine.  Token-level correctness under faults is
-pinned by tests/test_resilience.py on the real engine."""
+model-free fake engine, and random insert/match/evict/decref
+interleavings against the prefix-cache refcount partition (the trie
+plus outstanding holds account for every ref, eviction never drops a
+held page).  Token-level correctness under faults is pinned by
+tests/test_resilience.py; prefix-cache token identity by
+tests/test_prefix_cache.py (which also carries a deterministic mirror
+of the partition property for hypothesis-less environments)."""
 import types
 
 import jax.numpy as jnp
@@ -13,8 +18,8 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.engine import (EngineConfig, Request, RequestStatus,  # noqa: E402
-                          Scheduler)
+from repro.engine import (EngineConfig, PrefixCache, Request,  # noqa: E402
+                          RequestStatus, Scheduler)
 from repro.engine import paged_cache as PC  # noqa: E402
 from repro.engine.paged_cache import (PageAllocator,  # noqa: E402
                                       PagePoolExhausted)
@@ -51,6 +56,85 @@ def test_allocator_invariants_under_random_ops(n_pages, ops):
     assert al.free_pages == n_pages
 
 
+_PREFIX_OPS = st.lists(
+    st.one_of(
+        # (insert, token-seed, length)
+        st.tuples(st.just("insert"), st.integers(0, 3),
+                  st.integers(1, 14)),
+        # (match, token-seed, length) — a hit takes a hold (incref)
+        st.tuples(st.just("match"), st.integers(0, 3),
+                  st.integers(1, 14)),
+        st.tuples(st.just("release"), st.integers(0, 7), st.just(0)),
+        st.tuples(st.just("evict"), st.integers(1, 4), st.just(0))),
+    max_size=50)
+
+
+def _toks(seed: int, length: int) -> np.ndarray:
+    """Deterministic token stream per seed: overlapping prefixes across
+    seeds (all start from the same base) so matches actually hit."""
+    base = np.arange(length, dtype=np.int32)
+    return base + (seed // 2)   # seeds 0/1, 2/3 share streams pairwise
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(4, 16), _PREFIX_OPS)
+def test_prefix_refcount_partition_under_random_ops(n_pages, ops):
+    """Random insert / match+hold / release / evict interleavings: the
+    refcount of every owned page equals (trie nodes owning it) +
+    (outstanding match holds on it), eviction never frees a page a hold
+    still pins, and clear() drains the pool completely."""
+    ps = 4
+    al = PageAllocator(n_pages)
+    pc = PrefixCache(ps, al)
+    holds = []
+
+    def partition():
+        counts = {}
+        stack = list(pc._root.children.values())
+        while stack:
+            nd = stack.pop()
+            stack.extend(nd.children.values())
+            counts[nd.page] = counts.get(nd.page, 0) + 1
+        for pages in holds:
+            for p in pages:
+                counts[p] = counts.get(p, 0) + 1
+        assert set(counts) == {
+            p for p in range(n_pages) if al.refcount(p) > 0}
+        for p, want in counts.items():
+            assert al.refcount(p) == want, f"page {p}"
+        al.check()
+        pc.check()
+
+    for op, a, b in ops:
+        if op == "insert":
+            # retiring-slot idiom: alloc whole pages, insert, drop the
+            # slot refs (trie keeps what it indexed, dupes free)
+            n_whole = b // ps
+            if n_whole <= al.free_pages:
+                pages = al.alloc(n_whole)
+                pc.insert(_toks(a, b), pages)
+                if pages:
+                    al.decref(pages)
+        elif op == "match":
+            pages = pc.match(_toks(a, b))
+            if pages:
+                al.incref(pages)
+                holds.append(pages)
+        elif op == "release" and holds:
+            al.decref(holds.pop(a % len(holds)))
+        elif op == "evict":
+            held = {p for hold in holds for p in hold}
+            pc.evict(a)
+            for p in held:
+                assert al.refcount(p) >= 1, "evicted a held page"
+        partition()
+    for pages in holds:
+        al.decref(pages)
+    pc.clear()
+    al.check()
+    assert al.free_pages == n_pages
+
+
 class _FakeEngine:
     """No-jax-model engine: real EngineConfig/paged-cache layout, but
     prefill/decode return zeros — fast enough to drive the *scheduler's
@@ -81,6 +165,13 @@ class _FakeEngine:
     def decode_fn(self, params, dbatch):
         B = dbatch["token"].shape[0]
         return jnp.zeros((B, self._V)), dbatch["cache"]
+
+    def suffix_prefill_fn(self, params, batch):
+        # suffix-only prefill: same zeros contract as prefill_fn, the
+        # matched prefix rides along only as already-resident pages
+        S = batch["tokens"].shape[1]
+        kv = jnp.zeros((1, 1, S, 1, 1))
+        return jnp.zeros((1, self._V)), (kv, kv)
 
 
 _OPS = st.lists(
@@ -141,3 +232,63 @@ def test_scheduler_invariants_under_random_sequences(ops, max_preempt):
             RequestStatus.FINISHED, RequestStatus.REJECTED,
             RequestStatus.CANCELLED, RequestStatus.TIMED_OUT,
             RequestStatus.FAILED}
+
+
+@settings(max_examples=10, deadline=None)
+@given(_OPS, st.integers(0, 2))
+def test_scheduler_prefix_cache_invariants_under_random_sequences(
+        ops, max_preempt):
+    """The scheduler property with the prefix cache ON: the strict
+    'no page aliased across slots' invariant is deliberately relaxed to
+    the refcount partition — every owned page's refcount equals the
+    slot rows holding it plus the trie nodes owning it — while
+    eviction, preemption, growth and retirement interleave at random
+    (prompts are drawn from a 2-token alphabet so cross-request prefix
+    hits actually occur).  The drained pool holds exactly the trie's
+    pages; clear() returns the rest."""
+    eng = _FakeEngine()
+    sched = Scheduler(eng, max_preemptions=max_preempt,
+                      prefix_cache=True)
+    rng = np.random.default_rng(0)
+    submitted = []
+
+    def invariants():
+        sched.allocator.check()
+        sched.prefix.check()
+        counts = {}
+        for s in sched.slots:
+            if s is not None:
+                assert s.req.status is RequestStatus.RUNNING
+                for p in s.pages:
+                    counts[p] = counts.get(p, 0) + 1
+        stack = list(sched.prefix._root.children.values())
+        while stack:
+            nd = stack.pop()
+            stack.extend(nd.children.values())
+            counts[nd.page] = counts.get(nd.page, 0) + 1
+        assert len(counts) == sched.allocator.used_pages
+        for p, want in counts.items():
+            assert sched.allocator.refcount(p) == want, f"page {p}"
+
+    for op, a, b in ops:
+        if op == "submit":
+            rid = len(submitted)
+            submitted.append(rid)
+            sched.submit(Request(
+                rid=rid,
+                tokens=rng.integers(0, 2, (a,)).astype(np.int32),
+                gen=b))
+        elif op == "step":
+            sched.step()
+        elif op == "admit":
+            sched.admit()
+        elif op == "cancel" and a < len(submitted):
+            sched.cancel(a)
+        invariants()
+    out = sched.run()
+    invariants()
+    assert sched.allocator.free_pages == \
+        eng.n_pages - sched.prefix.cached_pages
+    sched.prefix.clear()
+    assert sched.allocator.free_pages == eng.n_pages
+    assert set(out) == set(submitted)
