@@ -552,6 +552,66 @@ rows.append({
     "collective_bytes": None,
 })
 
+# ---- mixed stream: chunked prefill pins decode ITL p99 ---------------
+# A long prompt entering a busy batch is the classic ITL-tail killer:
+# non-chunked admission runs the WHOLE prefill while every decoding
+# slot waits, so the waiting slots' inter-token latency spikes by the
+# full prefill wall time.  The token-budget mixed step slices the
+# prompt into chunk_tokens-sized pieces that ride inside ordinary
+# decode steps, collapsing the tail from "one full prefill" to "one
+# chunk".  us = chunked ITL p99 during the prefill window, us_ref =
+# the same window under whole-prompt admission — bench_diff's
+# speedup-shrink guard watches the us_ref/us ratio.
+LONG_P, CT, PS_MX = 128, 16, 8
+mxeng = DecodeEngine(cfg, EngineConfig(
+    batch=4, max_len=LONG_P + 64, paged=True, page_size=PS_MX,
+    n_pages=48, chunked_prefill=True, chunk_tokens=CT))
+rng_mx = np.random.default_rng(0)
+shorts_mx = [rng_mx.integers(2, cfg.vocab, (16,)).astype(np.int32)
+             for _ in range(3)]
+long_mx = rng_mx.integers(2, cfg.vocab, (LONG_P,)).astype(np.int32)
+
+
+# _stream_gaps: wall gaps between the 3 decoding slots' token
+# emissions while the long prompt is admitted + prefilled.  Every
+# executed step emits one token per decoding slot, so the step-to-step
+# gaps ARE those slots' inter-token latencies — and the non-chunked
+# run folds the whole admission prefill into the first gap.
+def _stream_gaps(chunked):
+    sched = Scheduler(mxeng, chunked_prefill=chunked)
+    for i, toks in enumerate(shorts_mx):
+        sched.submit(Request(rid=f"s{i}", tokens=toks, gen=56))
+    sched.admit()
+    for _ in range(4):                      # shorts into steady decode
+        sched.step()
+    sched.submit(Request(rid="long", tokens=long_mx, gen=4))
+    marks = [_time.perf_counter()]
+    sched.admit()                  # non-chunked: full prefill in here
+    for _ in range(LONG_P // CT):  # chunked: the long's 8 chunk steps
+        sched.step()
+        jax.block_until_ready(sched.cache)
+        marks.append(_time.perf_counter())
+    sched.run()                             # drain; frees every page
+    return np.diff(marks) * 1e6
+
+
+_stream_gaps(True)                          # compile the mixed step
+_stream_gaps(False)                         # compile the long prefill
+itl_mix = float(np.percentile(_stream_gaps(True), 99))
+itl_base = float(np.percentile(_stream_gaps(False), 99))
+rows.append({
+    "op": "mixed_stream",
+    "shape": f"{cfg.name}:{LONG_P}p/ct{CT}",
+    "us": round(itl_mix, 1), "us_ref": round(itl_base, 1),
+    "flops": None, "staged_bytes": None, "arith_intensity": None,
+    "note": (f"decode ITL p99 while a {LONG_P}-token prompt prefills: "
+             f"chunked {itl_mix:.0f}us vs whole-prompt admission "
+             f"{itl_base:.0f}us ({itl_base / itl_mix:.1f}x lower "
+             f"tail; chunk_tokens={CT}, 3 slots decoding; us_ref = "
+             "non-chunked batch-1 admission)"),
+    "collective_bytes": None,
+})
+
 print("JSON:" + json.dumps(rows))
 """
 
@@ -595,7 +655,8 @@ def dist_decode_bench(json_path="BENCH_kernels.json"):
                                            "paged_decode_q8",
                                            "mla_decode_paged_q8",
                                            "sched_pick",
-                                           "prefix_cache_decode")]
+                                           "prefix_cache_decode",
+                                           "mixed_stream")]
         existing.extend(rows)
         with open(json_path, "w") as f:
             json.dump(existing, f, indent=1)

@@ -19,6 +19,20 @@ prefill/decode steps; generation is three calls.
                                           # to the cache-off scheduler
                                           # (add --inject for the
                                           # chaos + no-leak pass)
+    PYTHONPATH=src python examples/serve_batch.py --stream --chunked-prefill
+                                          # + mixed-traffic leg: one
+                                          # long prompt chunk-prefills
+                                          # INSIDE the decode steps of
+                                          # many short requests — no
+                                          # decoding slot ever stalls
+                                          # (add --inject for the
+                                          # mid-chunk transient-fault
+                                          # retry pass)
+    PYTHONPATH=src python examples/serve_batch.py --stream --arrival-rate 0.7
+                                          # seeded Poisson arrivals
+                                          # (requests per decode step)
+                                          # instead of the scripted
+                                          # stagger
     # any paged-family text arch (dense/vlm/moe — recurrent ssm/hybrid
     # state doesn't page, and the audio demo would need frontend_emb),
     # e.g. the deepseek-style MLA config (paged split-operand MLA
@@ -53,6 +67,17 @@ def _kv_dtype_arg():
             sys.exit("usage: serve_batch.py [--kv-dtype {bf16,int8}]")
         return sys.argv[i]
     return "bf16"
+
+
+def _arrival_rate_arg():
+    """--arrival-rate R: seeded Poisson arrivals (requests per decode
+    step) for the stream demo; None = the scripted stagger."""
+    if "--arrival-rate" in sys.argv:
+        i = sys.argv.index("--arrival-rate") + 1
+        if i >= len(sys.argv) or sys.argv[i].startswith("--"):
+            sys.exit("usage: serve_batch.py [--arrival-rate R]")
+        return float(sys.argv[i])
+    return None
 
 
 def stream_demo():
@@ -158,6 +183,186 @@ def inject_demo():
     print("inject example OK")
 
 
+def poisson_demo(rate):
+    """Seeded Poisson arrivals: requests arrive as a Poisson process at
+    ``rate`` requests per decode step (exponential inter-arrival gaps
+    from a fixed-seed rng — same rate, same trace) instead of the
+    scripted stagger.  The scheduler absorbs the burstiness: every
+    request finishes with its full generation, and the table-width
+    buckets show admission riding the arrival process."""
+    cfg = reduced(get_config(_model_arg()))
+    engine = DecodeEngine(cfg, EngineConfig(
+        batch=2, max_len=48, paged=True, page_size=8,
+        mesh_shape=(1, 1), kernel_impl="xla",
+        kv_dtype=_kv_dtype_arg(),
+    ))
+    sched = Scheduler(engine)
+    rng = np.random.default_rng(0)
+    n = 6
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, n))
+    reqs = [Request(rid=f"req{i}",
+                    tokens=rng.integers(
+                        2, cfg.vocab,
+                        (int(rng.integers(4, 20)),)).astype(np.int32),
+                    gen=int(rng.integers(3, 9)))
+            for i in range(n)]
+
+    t, i = 0, 0
+    while i < n or sched.n_active or sched.pending:
+        while i < n and arrivals[i] <= t:
+            sched.submit(reqs[i])
+            i += 1
+        sched.admit()
+        if sched.n_active:
+            sched.step()
+        t += 1
+        assert t < 10_000, "poisson stream failed to drain"
+    out = sched.results()
+    assert len(out) == n and all(out[r.rid].ok for r in reqs)
+    assert all(len(out[r.rid]) == r.gen for r in reqs)
+    itl = sched.itl_percentiles()
+    print(f"[poisson] {cfg.name}: {n} requests, rate {rate:g}/step "
+          f"(arrival steps {[round(float(a), 1) for a in arrivals]}), "
+          f"{sched.stats['steps']} steps, "
+          f"ITL p50/p99 {itl['p50'] * 1e3:.1f}/{itl['p99'] * 1e3:.1f} ms")
+    print("poisson example OK")
+
+
+def mixed_demo():
+    """Mixed-traffic leg (chunked prefill): three short requests decode
+    while a 40-token prompt arrives and chunk-prefills INSIDE their
+    decode steps — the token-budget packer grants the in-flight prompt
+    one ``chunk_tokens`` slice per unified step, so no decoding slot
+    ever waits on the long prefill.  Asserted hard: during the entire
+    prefill window every RUNNING slot emits a token on every step
+    (zero stall steps), and the final streams are bit-identical to the
+    non-chunked scheduler on the same engine.
+
+    With ``--kv-dtype int8`` the long request's identity is relaxed:
+    its chunks k>=1 read the already-quantized prefix where the
+    non-chunked prefill saw full precision, so a near-tie argmax may
+    flip (the short prompts fit in one chunk and stay exact)."""
+    from repro.engine import RequestStatus
+
+    cfg = reduced(get_config(_model_arg()))
+    kv_dtype = _kv_dtype_arg()
+    engine = DecodeEngine(cfg, EngineConfig(
+        batch=4, max_len=64, paged=True, page_size=8,
+        mesh_shape=(1, 1), kernel_impl="xla", kv_dtype=kv_dtype,
+        chunked_prefill=True, chunk_tokens=8,
+    ))
+    rng = np.random.default_rng(3)
+    shorts = [rng.integers(2, cfg.vocab, (6,)).astype(np.int32)
+              for _ in range(3)]
+    long_prompt = rng.integers(2, cfg.vocab, (40,)).astype(np.int32)
+
+    def reqs():
+        rs = [Request(rid=f"short{i}", tokens=t, gen=14)
+              for i, t in enumerate(shorts)]
+        rs.append(Request(rid="long", tokens=long_prompt, gen=4))
+        return rs
+
+    sched = Scheduler(engine)
+    rs = reqs()
+    for r in rs[:3]:
+        sched.submit(r)
+    sched.admit()
+    while any(s is not None and s.req.status is RequestStatus.PREFILLING
+              for s in sched.slots):
+        sched.step()                        # drain the shorts' chunks
+    sched.submit(rs[3])
+    sched.admit()                           # long enters PREFILLING
+
+    stall_steps, window = 0, 0
+    while any(s is not None and s.req.status is RequestStatus.PREFILLING
+              for s in sched.slots):
+        before = {s.req.rid: len(s.out) for s in sched.slots
+                  if s is not None
+                  and s.req.status is RequestStatus.RUNNING}
+        sched.step()
+        window += 1
+        after = {s.req.rid: len(s.out) for s in sched.slots
+                 if s is not None
+                 and s.req.status is RequestStatus.RUNNING}
+        stall_steps += sum(1 for rid in before
+                           if rid in after and after[rid] <= before[rid])
+    # 40 tokens / 8-token chunks = 5 mixed steps, zero decode stalls
+    assert window == 5 and stall_steps == 0, (window, stall_steps)
+    out = sched.run()
+    assert all(out[r.rid].ok and len(out[r.rid]) == r.gen for r in rs)
+
+    base = Scheduler(engine, chunked_prefill=False)
+    for r in reqs():
+        base.submit(r)
+    ref = base.run()
+    for r in rs:
+        if kv_dtype == "bf16" or r.rid != "long":
+            assert np.array_equal(out[r.rid], ref[r.rid]), r.rid
+    st = sched.stats
+    itl = sched.itl_percentiles()
+    ident = ("streams bit-identical to the non-chunked scheduler"
+             if kv_dtype == "bf16" else
+             "short streams bit-identical (the int8 long prompt's "
+             "chunks re-read the quantized prefix: near-ties may flip)")
+    print(f"[mixed] {cfg.name}: 40-token prompt prefilled in "
+          f"{st['chunks']} chunks across {st['mixed_steps']} mixed "
+          f"steps while 3 short requests decoded — {stall_steps} stall "
+          f"steps, ITL p99 {itl['p99'] * 1e3:.1f} ms — {ident}")
+    print("mixed example OK")
+
+
+def chunk_chaos_demo():
+    """Chaos over a chunking stream: a transient fault lands mid-way
+    through the long prompt's chunk sequence (the shared decode/mixed
+    call counter makes step index 5 a mixed step here).  The bounded
+    retry redoes THAT CHUNK ONLY — the successful-chunk count matches
+    the clean run, completed chunks are never re-prefilled, and every
+    stream (long included, any kv dtype: both runs take the identical
+    chunked path) is bit-identical to the fault-free chunked run."""
+    from repro.engine import faults
+
+    cfg = reduced(get_config(_model_arg()))
+    engine = DecodeEngine(cfg, EngineConfig(
+        batch=4, max_len=64, paged=True, page_size=8,
+        mesh_shape=(1, 1), kernel_impl="xla",
+        kv_dtype=_kv_dtype_arg(),
+        chunked_prefill=True, chunk_tokens=8,
+    ))
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(2, cfg.vocab, (6,)).astype(np.int32)
+               for _ in range(3)]
+    prompts.append(rng.integers(2, cfg.vocab, (40,)).astype(np.int32))
+    gens = [14, 14, 14, 4]
+
+    def run(with_fault):
+        sched = Scheduler(engine)
+        proxy = None
+        if with_fault:
+            # steps 0-2 chunk the three short prompts; steps 3-7 are
+            # the long prompt's five chunks -> step 5 is mid-sequence
+            proxy = faults.inject(sched, decode_faults=[
+                faults.TransientError(step=5)])
+        for i, (p, g) in enumerate(zip(prompts, gens)):
+            sched.submit(Request(rid=f"req{i}", tokens=p, gen=g))
+        return sched, proxy, sched.run()
+
+    _, _, clean_out = run(False)
+    sched, proxy, out = run(True)
+    assert sched.stats["step_retries"] == 1
+    assert proxy.mixed_fn.injected == 1      # it hit a MIXED step
+    clean_chunks = 3 + 5                     # 3 shorts + 40/8 chunks
+    assert sched.stats["chunks"] == clean_chunks  # only 1 chunk redone
+    for rid in out:
+        assert out[rid].ok
+        assert np.array_equal(out[rid], clean_out[rid]), rid
+    assert sched.allocator.free_pages == engine.n_pages
+    print(f"[chunk-chaos] {cfg.name}: transient fault on mixed step 5 "
+          f"(chunk 3/5 of the long prompt) healed with 1 retry of that "
+          f"chunk only ({sched.stats['chunks']} chunks total, same as "
+          "clean); streams bit-identical, pool fully drained")
+    print("chunk-chaos example OK")
+
+
 def prefix_demo():
     """Prefix-cache leg: three requests, two sharing a 2-page system
     prompt, through the radix-cached scheduler.  Every token stream
@@ -253,11 +458,19 @@ def prefix_demo():
 
 
 if "--stream" in sys.argv:
-    stream_demo()
+    _rate = _arrival_rate_arg()
+    if _rate is not None:
+        poisson_demo(_rate)
+    else:
+        stream_demo()
     if "--inject" in sys.argv:
         inject_demo()
     if "--prefix-cache" in sys.argv:
         prefix_demo()
+    if "--chunked-prefill" in sys.argv:
+        mixed_demo()
+        if "--inject" in sys.argv:
+            chunk_chaos_demo()
     sys.exit(0)
 
 B, P, G = 4, 32, 16

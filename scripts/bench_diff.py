@@ -14,7 +14,9 @@ regression, and so is a matched row whose ``staged_bytes`` column
 (cache bytes staged per decode step — the quantized-KV benchmarks'
 headline) grew by more than the same threshold.  Rows that carry a
 within-run baseline in ``us_ref`` (e.g. the ``prefix_cache_decode``
-row's warm-vs-cold TTFT, or the split-vs-concat MLA rows) are
+row's warm-vs-cold TTFT, the ``mixed_stream`` row's chunked-vs-
+monolithic-admission decode ITL p99, or the split-vs-concat MLA
+rows) are
 additionally checked on their SPEEDUP (``us_ref / us``): a speedup
 that shrank by more than the threshold is flagged even when both
 absolute latencies moved together — machine-load jitter cancels out

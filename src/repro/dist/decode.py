@@ -558,3 +558,126 @@ def decode_attend(q, cache_k, cache_v, cur_len, *,
     return local_decode_attend(q, cache_k, cache_v, cur_len,
                                k_scale=k_scale, v_scale=v_scale,
                                backend=backend)
+
+
+# ======================================================================
+# chunked prefill: sequence-sharded chunk-prefix attention
+# ======================================================================
+
+def local_chunk_prefix_attend(q, k_pool, v_pool, table, counts, *,
+                              k_scale=None, v_scale=None,
+                              backend="xla"):
+    """Single-shard chunk->prior-pages attention partial through the
+    dispatch registry.
+
+    q: (C, H, Dh) — one prompt chunk's queries; table: (J,) int32 —
+    the chunk's PRIOR whole pages (earlier chunks + prefix-cache
+    aliases); counts: (J,) int32 valid slots per page.  Returns the
+    UNNORMALIZED fp32 partial (o_t (C, H, Dh), m (C, H), l (C, H)) —
+    the caller merges it with the chunk's causal self-attention
+    partial (``models.attention.merge_partials``) and normalizes,
+    exactly like the local ``chunk_prefill_attend``.
+    ``k_scale``/``v_scale`` ((n_pages, KV) fp32) select the q8 op over
+    int8 pools."""
+    ps, J = k_pool.shape[1], table.shape[0]
+    if k_scale is not None:
+        return D.dispatch("chunk_prefix_paged_q8", backend, q, k_pool,
+                          v_pool, k_scale, v_scale, table, counts,
+                          page_size=ps, max_pages=J)
+    return D.dispatch("chunk_prefix_paged", backend, q, k_pool, v_pool,
+                      table, counts, page_size=ps, max_pages=J)
+
+
+def sharded_chunk_prefix_attend(mesh, q, k_pool, v_pool, table, counts,
+                                *, k_scale=None, v_scale=None,
+                                backend: str = "xla",
+                                model_axis: str = "model"):
+    """Chunk->prior-pages attention with the page pool sharded over
+    ``model_axis`` — the chunked-prefill sibling of
+    ``sharded_paged_flash_decode``.
+
+    Shard s owns pages [s*pp, (s+1)*pp); the (J,) table is replicated
+    and may point anywhere, so each shard zeroes the counts of foreign
+    pages, computes its unnormalized partial over the pages it owns,
+    and the pmax/psum statistics combine stitches the shards — run
+    UNNORMALIZED here (m* = pmax m; o = psum o~*exp(m-m*); l = psum
+    l*exp(m-m*)) so the caller can still merge the chunk's replicated
+    causal self-attention partial before normalizing.  Collective
+    bytes per chunk are O(C * H * (Dh + 2)), independent of prefix
+    length — the same wire contract as sharded decode.  A chunk with
+    no prior pages (J = 0, or every count zeroed) combines to the
+    fully-masked partial (o = 0, m = NEG_INF, l = 0), which the merge
+    treats as exact identity."""
+    n_pages, ps = k_pool.shape[0], k_pool.shape[1]
+    J = table.shape[0]
+    q8 = k_scale is not None
+    op = "chunk_prefix_paged_q8" if q8 else "chunk_prefix_paged"
+    sig = ((q, k_pool, v_pool, k_scale, v_scale, table, counts)
+           if q8 else (q, k_pool, v_pool, table, counts))
+    backend = D.cached_backend(op, backend, sig,
+                               {"page_size": ps, "max_pages": J})
+    msize = mesh.shape.get(model_axis, 1) if model_axis else 1
+    if (model_axis not in mesh.axis_names or msize == 1
+            or n_pages % msize or J == 0):
+        return local_chunk_prefix_attend(q, k_pool, v_pool, table,
+                                         counts, k_scale=k_scale,
+                                         v_scale=v_scale,
+                                         backend=backend)
+    pp = n_pages // msize
+
+    def shard_fn(q, kp, vp, *rest):
+        tbl, cnt = rest[-2], rest[-1]
+        p0 = jax.lax.axis_index(model_axis) * pp
+        owned = (tbl >= p0) & (tbl < p0 + pp)
+        tloc = jnp.clip(tbl - p0, 0, pp - 1)
+        cnt = jnp.where(owned, cnt, 0)
+        o_t, m, l = D.dispatch(op, backend, q, kp, vp, *rest[:-2],
+                               tloc, cnt, page_size=ps, max_pages=J,
+                               tune=False)
+        # unnormalized cross-shard combine: keep (o~, m, l) so the
+        # caller's self-partial merge stays exact
+        m_star = jax.lax.pmax(m, model_axis)
+        s = jnp.exp(m - m_star)
+        o = jax.lax.psum(o_t * s[..., None], model_axis)
+        l = jax.lax.psum(l * s, model_axis)
+        return o, m_star, l
+
+    scale_specs = ((PS(model_axis, None), PS(model_axis, None))
+                   if q8 else ())
+    scale_args = (k_scale, v_scale) if q8 else ()
+    fn = shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(PS(None, None, None),
+                  PS(model_axis, None, None, None),
+                  PS(model_axis, None, None, None))
+                 + scale_specs + (PS(None), PS(None)),
+        out_specs=(PS(None, None, None), PS(None, None),
+                   PS(None, None)),
+        check_rep=False)
+    return fn(q, k_pool, v_pool, *scale_args,
+              table.astype(jnp.int32), counts.astype(jnp.int32))
+
+
+def chunk_prefix_attend(q, k_pool, v_pool, table, counts, *,
+                        k_scale=None, v_scale=None,
+                        backend: str = "xla", mesh=None,
+                        seq_shard: bool = True):
+    """Mesh-aware chunk-prefix attention partial.
+
+    Routes to ``sharded_chunk_prefix_attend`` when ``seq_shard`` and a
+    mesh with a 'model' axis divides the pool evenly, else the local
+    registry op.  Either way returns the unnormalized (o_t, m, l)
+    partial for the caller's self-attention merge."""
+    if seq_shard:
+        mesh = resolve_mesh(mesh, "dist.decode.chunk_prefix_attend")
+        n_pages = k_pool.shape[0]
+        if (mesh is not None and "model" in mesh.axis_names
+                and n_pages % mesh.shape["model"] == 0):
+            return sharded_chunk_prefix_attend(mesh, q, k_pool, v_pool,
+                                               table, counts,
+                                               k_scale=k_scale,
+                                               v_scale=v_scale,
+                                               backend=backend)
+    return local_chunk_prefix_attend(q, k_pool, v_pool, table, counts,
+                                     k_scale=k_scale, v_scale=v_scale,
+                                     backend=backend)

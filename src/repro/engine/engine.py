@@ -68,7 +68,18 @@ class EngineConfig:
     prefix-sharing radix cache in ``engine.scheduler``: admission
     matches the longest cached whole-page prompt prefix, aliases those
     refcounted pages into the slot's block table, and prefills only
-    the suffix (``engine.prefix_cache``)."""
+    the suffix (``engine.prefix_cache``).
+
+    ``chunked_prefill=True`` (paged, dense/moe families) replaces
+    batch-1 whole-prompt admission with chunked prefill inside the
+    shared decode step: the scheduler grants a prompt all its pages up
+    front and feeds it through the unified mixed step
+    (``steps.build_mixed_step``) ``chunk_tokens`` tokens at a time,
+    packed next to the decoding slots under a token budget — one long
+    prompt no longer stalls decode.  ``chunk_tokens`` must be a
+    multiple of ``page_size`` so every non-final chunk ends
+    page-aligned (the next chunk's resident prefix is then whole
+    pages, exactly the suffix-prefill contract)."""
     batch: int = 1
     max_len: int = 128              # prompt + generation budget
     mesh_shape: Tuple[int, int] = (1, 1)      # (data, model)
@@ -80,6 +91,8 @@ class EngineConfig:
     n_pages: Optional[int] = None   # pool size; None = dense-equivalent
     kv_dtype: str = "bf16"          # 'bf16' (model dtype) | 'int8'
     prefix_cache: bool = False      # radix prompt-prefix sharing
+    chunked_prefill: bool = False   # mixed prefill/decode steps
+    chunk_tokens: int = 32          # prefill tokens per mixed step
 
     def replace(self, **kw) -> "EngineConfig":
         return dataclasses.replace(self, **kw)
@@ -130,6 +143,25 @@ class DecodeEngine:
                     f"families ('dense', 'moe'); family "
                     f"{cfg.family!r} prepends frontend positions a "
                     "token-keyed prefix index cannot match")
+        if ecfg.chunked_prefill:
+            if not ecfg.paged:
+                raise ValueError(
+                    "chunked_prefill=True needs paged=True: chunks "
+                    "land in granted pages through the block table")
+            if cfg.family not in ("dense", "moe"):
+                raise ValueError(
+                    f"chunked_prefill=True supports the token-only "
+                    f"families ('dense', 'moe'); family "
+                    f"{cfg.family!r} prepends frontend positions the "
+                    "chunked (suffix-composed) prefill cannot offset")
+            if ecfg.chunk_tokens < 1 or \
+                    ecfg.chunk_tokens % ecfg.page_size:
+                raise ValueError(
+                    f"chunk_tokens={ecfg.chunk_tokens} must be a "
+                    f"positive multiple of page_size="
+                    f"{ecfg.page_size}: every non-final chunk must "
+                    "end page-aligned so the next chunk's resident "
+                    "prefix is whole pages")
         if ecfg.paged:
             paged_cache.check_family(cfg)
             if ecfg.kv_dtype == "int8" and cfg.family == "audio":
@@ -179,6 +211,14 @@ class DecodeEngine:
         # when the EngineConfig default is off
         self.suffix_prefill_fn = (
             jax.jit(steps.build_suffix_prefill(cfg, mesh=self.mesh))
+            if ecfg.paged and cfg.family in ("dense", "moe") else None)
+        # unified mixed prefill/decode step: built for every paged
+        # token-only engine (like suffix_prefill_fn, the jit wrapper
+        # traces nothing until called), so a Scheduler can turn
+        # chunking on per-stream even when the EngineConfig default is
+        # off
+        self.mixed_fn = (
+            jax.jit(steps.build_mixed_step(cfg, mesh=self.mesh))
             if ecfg.paged and cfg.family in ("dense", "moe") else None)
         self._enc_len = 0           # audio: encoder positions at prefill
 

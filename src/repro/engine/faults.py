@@ -81,17 +81,30 @@ class FaultyStepFn:
     """Wraps a jitted step function with a deterministic fault schedule
     keyed by call index (``.calls``).  Note retries advance the call
     index: attempt k+1 of a step is call index k+1, which is exactly
-    how a transient fault heals on retry."""
+    how a transient fault heals on retry.
 
-    def __init__(self, fn: Callable, faults: Sequence[Fault] = ()):
+    The wrapped fn may return any tuple whose FIRST element is the
+    decode logits — ``(logits, cache)`` for prefill/decode steps,
+    ``(logits, chunk_logits, cache)`` for the mixed chunked-prefill
+    step — NonFiniteLogits corrupts that first element.  ``counter``
+    (a one-element list) lets two wrappers share one call index, so a
+    scheduler that alternates decode and mixed steps sees a single
+    fault schedule over its step sequence."""
+
+    def __init__(self, fn: Callable, faults: Sequence[Fault] = (),
+                 counter: Optional[List[int]] = None):
         self.fn = fn
         self.faults = list(faults)
-        self.calls = 0
+        self._calls = counter if counter is not None else [0]
         self.injected = 0
 
+    @property
+    def calls(self) -> int:
+        return self._calls[0]
+
     def __call__(self, params, batch):
-        k = self.calls
-        self.calls += 1
+        k = self._calls[0]
+        self._calls[0] += 1
         for f in self.faults:
             if isinstance(f, SlowStep) and f.step == k:
                 self.injected += 1
@@ -100,24 +113,35 @@ class FaultyStepFn:
                     and f.step <= k < f.step + f.count:
                 self.injected += 1
                 raise InjectedFault(f"{f.message} (call {k})")
-        out = self.fn(params, batch)
-        logits, cache = out
+        out = list(self.fn(params, batch))
         for f in self.faults:
             if isinstance(f, NonFiniteLogits) and f.step == k:
                 self.injected += 1
-                logits = jnp.asarray(logits).at[f.slot].set(f.value)
-        return logits, cache
+                out[0] = jnp.asarray(out[0]).at[f.slot].set(f.value)
+        return tuple(out)
 
 
 class FaultyEngine:
     """Delegating engine proxy with fault-wrapped step functions: the
-    underlying (possibly shared) engine is never mutated."""
+    underlying (possibly shared) engine is never mutated.
+
+    ``decode_faults`` schedule over the engine's STEP sequence: the
+    decode and mixed (chunked-prefill) step wrappers share one call
+    counter and one fault list, so call index k means "the scheduler's
+    k-th step" whichever kind it was — a TransientError landing on a
+    mixed step exercises the retry-the-current-chunk-only path."""
 
     def __init__(self, eng, decode_faults: Sequence[Fault] = (),
                  prefill_faults: Sequence[Fault] = ()):
         self._eng = eng
-        self.decode_fn = FaultyStepFn(eng.decode_fn, decode_faults)
+        counter: List[int] = [0]
+        step_faults = list(decode_faults)
+        self.decode_fn = FaultyStepFn(eng.decode_fn, step_faults,
+                                      counter=counter)
         self.prefill_fn = FaultyStepFn(eng.prefill_fn, prefill_faults)
+        self.mixed_fn = (
+            FaultyStepFn(eng.mixed_fn, step_faults, counter=counter)
+            if getattr(eng, "mixed_fn", None) is not None else None)
 
     def __getattr__(self, name):
         return getattr(self._eng, name)

@@ -25,14 +25,26 @@ paged decode step as a *slot machine* instead:
            the next pending request is admitted on the following
            ``admit()`` — short requests stop paying for long ones.
 
-Request lifecycle (fault tolerance).  Every request walks a status
-machine::
+With ``chunked_prefill`` (EngineConfig or the constructor knob),
+admission becomes "grant pages + enqueue chunks": a prompt takes a
+free slot and ALL its pages immediately but prefills ``chunk_tokens``
+tokens at a time INSIDE the shared step (``steps.build_mixed_step``
+runs one prompt chunk + the whole decode batch in a single jitted
+call), packed by a token-budget rule (``pack_chunk``) that always
+runs every decoding slot and fits the chunk into what budget remains
+— one long prompt no longer stalls decode (the head-of-line latency
+cliff of batch-1 admission).
 
-    PENDING -> RUNNING -> FINISHED
-       |          |-> PREEMPTED -> (RUNNING again)
-       |          |-> FAILED      (non-finite logits, prefill fault)
-       |          |-> TIMED_OUT   (deadline_s / max_steps)
-       |          `-> CANCELLED   (cancel(rid) mid-flight)
+Request lifecycle (fault tolerance).  Every request walks a status
+machine (PREFILLING appears only with chunked prefill; whole-prompt
+admission goes straight to RUNNING)::
+
+    PENDING -> [PREFILLING ->] RUNNING -> FINISHED
+       |          |               |-> PREEMPTED -> (again)
+       |          |               |     (chunked: in-flight chunks
+       |          |               |      dropped, completed pages kept)
+       |          |               |-> FAILED / TIMED_OUT / CANCELLED
+       |          `-> FAILED / TIMED_OUT / CANCELLED
        |-> REJECTED               (over budget, pool can never fit it)
        |-> CANCELLED / TIMED_OUT  (while still queued)
 
@@ -87,6 +99,7 @@ class RequestStatus(str, enum.Enum):
     """Request lifecycle states (terminal: FINISHED / REJECTED /
     FAILED / CANCELLED / TIMED_OUT)."""
     PENDING = "PENDING"
+    PREFILLING = "PREFILLING"   # chunked prefill in flight
     RUNNING = "RUNNING"
     PREEMPTED = "PREEMPTED"
     FINISHED = "FINISHED"
@@ -107,16 +120,19 @@ class RequestResult(np.ndarray):
     An int32 ndarray view, so every pre-lifecycle caller keeps working
     (``len(result)``, ``result[:k]``, ``assert_array_equal``), with
     ``status`` (RequestStatus), ``error`` (reason string for
-    non-FINISHED terminals) and ``latency_s`` (submit -> terminal wall
-    time) riding along."""
+    non-FINISHED terminals), ``latency_s`` (submit -> terminal wall
+    time) and ``token_times`` (monotonic wall timestamp per emitted
+    token, ITL = np.diff of it) riding along."""
 
     def __new__(cls, tokens, status: RequestStatus,
                 error: Optional[str] = None,
-                latency_s: Optional[float] = None):
+                latency_s: Optional[float] = None,
+                token_times: Optional[List[float]] = None):
         obj = np.asarray(tokens, np.int32).view(cls)
         obj.status = status
         obj.error = error
         obj.latency_s = latency_s
+        obj.token_times = token_times
         return obj
 
     def __array_finalize__(self, obj):
@@ -125,6 +141,7 @@ class RequestResult(np.ndarray):
         self.status = getattr(obj, "status", None)
         self.error = getattr(obj, "error", None)
         self.latency_s = getattr(obj, "latency_s", None)
+        self.token_times = getattr(obj, "token_times", None)
 
     @property
     def tokens(self) -> np.ndarray:
@@ -174,6 +191,29 @@ class _Slot:
     steps: int = 0                  # decode steps taken (RNG fold_in)
     order: int = 0                  # admission sequence (LIFO preempt)
     preempts: int = 0               # times evicted (livelock watchdog)
+    prefilled: int = 0              # chunked: prompt positions resident
+    token_times: List[float] = dataclasses.field(default_factory=list)
+
+
+def pack_chunk(remaining: int, n_decode: int, budget: int,
+               chunk_tokens: int, page_size: int) -> int:
+    """Token-budget packing rule for one mixed step: how many prompt
+    tokens of the head in-flight prefill ride along with ``n_decode``
+    decoding slots under a ``budget``-token step.
+
+    Decode is never starved: every decoding slot always runs (the
+    chunk takes only ``budget - n_decode`` tokens, down to zero), and
+    the chunk never exceeds ``chunk_tokens``.  A non-final chunk is
+    floored to a whole-page multiple so the NEXT chunk's resident
+    prefix is whole pages (exactly the suffix-prefill contract); the
+    final chunk takes ``remaining`` exactly, page-aligned or not.
+    Returns 0 when no chunk fits this step."""
+    room = min(budget - n_decode, chunk_tokens)
+    if room <= 0:
+        return 0
+    if room >= remaining:
+        return remaining            # final chunk (may be unaligned)
+    return (room // page_size) * page_size
 
 
 class Scheduler:
@@ -223,6 +263,19 @@ class Scheduler:
     prefill sees the quantized prefix where a cold prefill saw full
     precision, so a near-tie argmax in the hit's own stream can flip
     — miss streams (and every decode step) are unaffected.
+
+    ``chunked_prefill`` / ``chunk_tokens`` / ``token_budget`` (None =
+    inherit the first two from EngineConfig; budget defaults to
+    ``batch + chunk_tokens``) turn on chunked admission: prompts
+    prefill ``chunk_tokens`` at a time inside the shared mixed step
+    (see the module docstring), packed under ``token_budget`` by
+    ``pack_chunk`` so decode slots are never starved.  Greedy token
+    streams stay bit-identical to the non-chunked scheduler for
+    model-dtype pools (each chunk is suffix-prefill math over the same
+    kv block boundaries as the whole prefill; extra fully-masked kv
+    blocks are exact no-ops for online softmax); int8 pools carry the
+    same near-tie caveat as a prefix-cache hit, since chunks after the
+    first read the earlier chunks' KV through the quantized pages.
     """
 
     def __init__(self, engine, enc_len: Optional[int] = None,
@@ -232,7 +285,10 @@ class Scheduler:
                  guard_nonfinite: bool = True,
                  straggler: Optional[StragglerMonitor] = None,
                  heartbeat: Optional[Heartbeat] = None,
-                 prefix_cache: Optional[bool] = None):
+                 prefix_cache: Optional[bool] = None,
+                 chunked_prefill: Optional[bool] = None,
+                 chunk_tokens: Optional[int] = None,
+                 token_budget: Optional[int] = None):
         if not engine.ecfg.paged:
             raise ValueError(
                 "Scheduler needs a paged engine: EngineConfig("
@@ -273,6 +329,34 @@ class Scheduler:
                 raise ValueError("engine has no suffix_prefill_fn — "
                                  "construct a paged dense/moe engine")
             self.prefix = PrefixCache(self.page_size, self.allocator)
+        if chunked_prefill is None:
+            chunked_prefill = engine.ecfg.chunked_prefill
+        self.chunked = bool(chunked_prefill)
+        self.chunk_tokens = 0
+        self.token_budget = 0
+        if self.chunked:
+            if self.cfg.family not in ("dense", "moe"):
+                raise ValueError(
+                    f"chunked_prefill supports the token-only families "
+                    f"('dense', 'moe'); got family {self.cfg.family!r}")
+            if getattr(engine, "mixed_fn", None) is None:
+                raise ValueError("engine has no mixed_fn — construct "
+                                 "a paged dense/moe engine")
+            ct = (chunk_tokens if chunk_tokens is not None
+                  else engine.ecfg.chunk_tokens)
+            if ct < 1 or ct % self.page_size:
+                raise ValueError(
+                    f"chunk_tokens must be a positive multiple of "
+                    f"page_size {self.page_size}; got {ct} (a non-final "
+                    "chunk must end page-aligned so the next chunk's "
+                    "prefix is whole pages)")
+            self.chunk_tokens = ct
+            # default budget: every slot decodes AND a full chunk fits
+            self.token_budget = (token_budget if token_budget is not None
+                                 else B + ct)
+            if self.token_budget < 1:
+                raise ValueError("token_budget must be >= 1")
+        self._prefilling: deque = deque()   # slot ids, chunking order
         self.stats = {"prefills": 0, "admitted": 0, "retired": 0,
                       "steps": 0, "peak_pages": 0, "preempted": 0,
                       "table_widths": {},   # width -> steps at it
@@ -284,8 +368,12 @@ class Scheduler:
                       "prefix_hits": 0, "prefix_misses": 0,
                       "prefix_hit_tokens": 0, "prefix_evictions": 0,
                       "shared_pages": 0,     # peak pages refcount > 1
-                      "cow_forks": 0}
+                      "cow_forks": 0,
+                      # chunked-prefill counters (zero when it's off)
+                      "mixed_steps": 0, "chunks": 0,
+                      "chunked_tokens": 0}
         self._latencies: List[float] = []
+        self._itl: List[float] = []     # inter-token latency samples
         self._order = 0
         # jitted prefill->pages scatter with the pool DONATED (where
         # the backend supports donation): the eager .at[].set would
@@ -342,21 +430,35 @@ class Scheduler:
         terminal request so far."""
         return percentiles(self._latencies, qs)
 
+    def itl_percentiles(self, qs=(50, 90, 99)) -> Dict[str, float]:
+        """Inter-token-latency percentiles (seconds between consecutive
+        emitted tokens, per request) aggregated over every terminal
+        request so far — the tail (p99) is what a long prompt's
+        monopolized prefill inflates, and what chunked prefill pins."""
+        return percentiles(self._itl, qs)
+
     # ------------------------------------------------------------------
     # terminal transitions
     # ------------------------------------------------------------------
 
     def _terminal(self, req: Request, tokens, status: RequestStatus,
-                  error: Optional[str] = None) -> RequestResult:
+                  error: Optional[str] = None, *,
+                  token_times: Optional[List[float]] = None
+                  ) -> RequestResult:
         lat = (time.monotonic() - req.submit_t
                if req.submit_t is not None else None)
         req.status = status
         req.error = error
         res = RequestResult(np.asarray(list(tokens), np.int32), status,
-                            error=error, latency_s=lat)
+                            error=error, latency_s=lat,
+                            token_times=(list(token_times)
+                                         if token_times else None))
         self.finished[req.rid] = res
         if lat is not None:
             self._latencies.append(lat)
+        if token_times and len(token_times) > 1:
+            self._itl.extend(
+                np.diff(np.asarray(token_times, np.float64)).tolist())
         key = {RequestStatus.FINISHED: "retired",
                RequestStatus.REJECTED: "rejected",
                RequestStatus.FAILED: "failed",
@@ -375,6 +477,9 @@ class Scheduler:
         if slot.pages:
             self.allocator.decref(slot.pages)
             slot.pages = []
+        slot.prefilled = 0
+        if slot_id in self._prefilling:
+            self._prefilling.remove(slot_id)
         self.slots[slot_id] = None
         self.lens[slot_id] = 0
         self.tokens[slot_id] = 0
@@ -395,11 +500,13 @@ class Scheduler:
                 np.asarray(slot.out[:-1], np.int32)])
             self.prefix.insert(toks, slot.pages)
         slot = self._evict(slot_id)
-        self._terminal(slot.req, slot.out, RequestStatus.FINISHED)
+        self._terminal(slot.req, slot.out, RequestStatus.FINISHED,
+                       token_times=slot.token_times)
 
     def _fail_slot(self, slot_id: int, reason: str) -> None:
         slot = self._evict(slot_id)
-        self._terminal(slot.req, slot.out, RequestStatus.FAILED, reason)
+        self._terminal(slot.req, slot.out, RequestStatus.FAILED, reason,
+                       token_times=slot.token_times)
 
     def _preempt(self, slot_id: int) -> None:
         """Evict an active slot back to the FRONT of the pending queue
@@ -408,8 +515,32 @@ class Scheduler:
         re-admission, so no tokens are lost — only the prefix compute
         is redone.  A slot past ``max_preemptions`` is parked instead:
         re-admitting it just feeds the same thrash, so it waits out the
-        pool pressure (re-admitted when nothing else is runnable)."""
-        slot = self._evict(slot_id)
+        pool pressure (re-admitted when nothing else is runnable).
+
+        A PREFILLING slot (chunked prefill in flight) drops only its
+        in-flight chunk: the whole pages its completed chunks already
+        wrote stay WITH the slot across the queue, so re-admission
+        grants the missing tail and resumes chunking where it left off
+        instead of re-prefilling from scratch.  ``prefilled`` is always
+        page-aligned while PREFILLING (non-final chunks end on page
+        boundaries), so the kept prefix is exactly whole pages — and at
+        least one tail page frees (the grant covers the next unwritten
+        position), so pool-pressure preemption still makes progress."""
+        slot = self.slots[slot_id]
+        if slot.req.status is RequestStatus.PREFILLING:
+            keep = slot.prefilled // self.page_size
+            tail = slot.pages[keep:]
+            if tail:
+                self.allocator.decref(tail)
+            slot.pages = slot.pages[:keep]
+            if slot_id in self._prefilling:
+                self._prefilling.remove(slot_id)
+            self.slots[slot_id] = None
+            self.lens[slot_id] = 0
+            self.tokens[slot_id] = 0
+            self.enc_lens[slot_id] = 0
+        else:
+            slot = self._evict(slot_id)
         slot.preempts += 1
         slot.req.status = RequestStatus.PREEMPTED
         if slot.preempts > self.max_preemptions:
@@ -429,7 +560,8 @@ class Scheduler:
                 slot = self._evict(slot_id)
                 self._terminal(slot.req, slot.out,
                                RequestStatus.CANCELLED,
-                               "cancelled mid-flight")
+                               "cancelled mid-flight",
+                               token_times=slot.token_times)
                 return True
         for q, where in ((self.pending, "pending"),
                          (self.parked, "parked")):
@@ -437,11 +569,25 @@ class Scheduler:
                 req = item.req if isinstance(item, _Slot) else item
                 if req.rid == rid:
                     q.remove(item)
+                    self._release_queued(item)
                     toks = item.out if isinstance(item, _Slot) else []
                     self._terminal(req, toks, RequestStatus.CANCELLED,
-                                   f"cancelled while {where}")
+                                   f"cancelled while {where}",
+                                   token_times=getattr(
+                                       item, "token_times", None))
                     return True
         return False
+
+    def _release_queued(self, item) -> None:
+        """Drop the pages a queued item still holds.  A chunk-preempted
+        slot keeps its completed prefix pages across the queue (so
+        re-admission resumes chunking instead of restarting); if the
+        item goes terminal while queued, those pages must be released
+        here or they leak."""
+        if isinstance(item, _Slot) and item.pages:
+            self.allocator.decref(item.pages)
+            item.pages = []
+            item.prefilled = 0
 
     # ------------------------------------------------------------------
     # admission
@@ -521,38 +667,54 @@ class Scheduler:
             partial = item.out if isinstance(item, _Slot) else []
             if self._deadline_expired(req):
                 self.pending.popleft()
+                self._release_queued(item)
                 self._terminal(req, partial, RequestStatus.TIMED_OUT,
                                f"deadline_s={req.deadline_s} lapsed "
-                               "while queued")
+                               "while queued",
+                               token_times=getattr(
+                                   item, "token_times", None))
                 continue
             fault = self._validate(req)
             if fault is not None:
                 self.pending.popleft()
+                self._release_queued(item)
                 self._terminal(req, partial, RequestStatus.REJECTED,
                                fault)
                 continue
             P = self._prefill_positions(req)
-            done = len(item.out) if isinstance(item, _Slot) else 1
-            positions = P + (len(item.out) - 1
+            # a chunk-preempted slot can be re-queued with out == []
+            # (it never finished prefilling): it behaves like a fresh
+            # request here — the prefill emits its first token
+            done = (max(len(item.out), 1)
+                    if isinstance(item, _Slot) else 1)
+            positions = P + (max(len(item.out) - 1, 0)
                              if isinstance(item, _Slot) else 0)
             need = self._pages_needed(positions, done < req.gen)
             if need > self.allocator.n_pages:
                 self.pending.popleft()
+                self._release_queued(item)
                 self._terminal(
                     req, partial, RequestStatus.REJECTED,
                     f"needs {need} pages but the pool only has "
                     f"{self.allocator.n_pages} in total — raise "
                     "EngineConfig.n_pages or page_size")
                 continue
+            # pages a chunk-preempted slot kept across the queue: its
+            # completed prefix is already resident, so prefix matching
+            # is skipped (the slot holds its own refs) and only the
+            # missing tail is allocated
+            held = (list(item.pages)
+                    if isinstance(item, _Slot) else [])
             # prefix-cache match: alias the longest cached whole-page
             # prefix (incref'd NOW, so eviction below can't reclaim it)
             # and only allocate private pages for the suffix + growth
             matched: List[int] = []
-            if self.prefix is not None:
+            if self.prefix is not None and not held:
                 matched = self.prefix.match(self._teacher_tokens(item))
                 if matched:
                     self.allocator.incref(matched)
-            private = need - len(matched)
+            resident = held or matched
+            private = need - len(resident)
             if private > self.allocator.free_pages \
                     and self.prefix is not None:
                 # refcount-1 LRU trie leaves go before any preemption
@@ -565,7 +727,7 @@ class Scheduler:
                     self.allocator.decref(matched)
                 break               # wait for a retirement
             self.pending.popleft()
-            if self.prefix is not None:
+            if self.prefix is not None and not held:
                 if matched:
                     self.stats["prefix_hits"] += 1
                     self.stats["prefix_hit_tokens"] += \
@@ -575,9 +737,14 @@ class Scheduler:
                 self.stats["shared_pages"] = max(
                     self.stats["shared_pages"],
                     self.allocator.shared_pages)
-            pages = matched + self.allocator.alloc(private)
-            if self._admit_into(slot_id, item, pages,
-                                n_shared=len(matched)):
+            pages = resident + self.allocator.alloc(private)
+            if self.chunked:
+                ok = self._admit_chunked(slot_id, item, pages,
+                                         n_resident=len(resident))
+            else:
+                ok = self._admit_into(slot_id, item, pages,
+                                      n_shared=len(matched))
+            if ok:
                 admitted += 1
         return admitted
 
@@ -636,7 +803,8 @@ class Scheduler:
                          + len(item.out) - 1,
                          pages=list(pages), out=list(item.out),
                          steps=item.steps, order=self._order,
-                         preempts=item.preempts)
+                         preempts=item.preempts,
+                         token_times=list(item.token_times))
             tok = item.out[-1]
         else:
             # engine convention: the first generated token is the
@@ -645,7 +813,8 @@ class Scheduler:
             tok = int(jnp.argmax(logits[0]))
             slot = _Slot(req=req, length=self._prefill_positions(req),
                          pages=list(pages), out=[tok],
-                         order=self._order)
+                         order=self._order,
+                         token_times=[time.monotonic()])
         self._order += 1
         req.status = RequestStatus.RUNNING
         self.slots[slot_id] = slot
@@ -667,6 +836,43 @@ class Scheduler:
             self.prefix.insert(tokens, slot.pages)
         if len(slot.out) >= req.gen:
             self._retire(slot_id)   # gen=1: the prefill already ends it
+        return True
+
+    def _admit_chunked(self, slot_id: int, item, pages: List[int],
+                       n_resident: int = 0) -> bool:
+        """Grant pages + enqueue chunks — the chunked-admission
+        counterpart of ``_admit_into``.  NO model call happens here:
+        the slot goes PREFILLING with all ``need`` pages granted up
+        front, and subsequent mixed steps prefill ``chunk_tokens`` at a
+        time (``step()`` packs them under the token budget).  The first
+        ``n_resident`` pages already hold KV — a prefix-cache match, or
+        the completed pages a chunk-preempted slot kept — so chunking
+        starts at position ``n_resident * page_size``.  The slot rides
+        the decode batch inactive meanwhile (cur_len == 0: write
+        dropped, attention masked, logits discarded)."""
+        resumed = isinstance(item, _Slot)
+        req = item.req if resumed else item
+        if resumed:
+            slot = item             # keep out/steps/preempts/times
+        else:
+            slot = _Slot(req=req, length=0, pages=[], out=[])
+        slot.pages = list(pages)
+        slot.prefilled = n_resident * self.page_size
+        slot.length = 0
+        slot.order = self._order
+        self._order += 1
+        req.status = RequestStatus.PREFILLING
+        self.slots[slot_id] = slot
+        row = np.zeros((self.table.shape[1],), np.int32)
+        row[:len(pages)] = pages
+        self.table[slot_id] = row
+        self.lens[slot_id] = 0
+        self.tokens[slot_id] = 0
+        self.enc_lens[slot_id] = 0
+        self._prefilling.append(slot_id)
+        self.stats["admitted"] += 1
+        self.stats["peak_pages"] = max(self.stats["peak_pages"],
+                                       self.allocator.used_pages)
         return True
 
     # ------------------------------------------------------------------
@@ -726,6 +932,12 @@ class Scheduler:
         for slot_id, slot in enumerate(self.slots):
             if slot is None:
                 continue
+            if slot.req.status is RequestStatus.PREFILLING:
+                # no decode write while chunking (cur_len == 0 drops
+                # it), and chunk writes only touch private suffix pages
+                # — pages[0] may be a shared prefix alias, which is
+                # exactly NOT a reason to fork
+                continue
             wp = slot.length // self.page_size
             page = slot.pages[wp]
             if self.allocator.refcount(page) <= 1:
@@ -757,12 +969,14 @@ class Scheduler:
                 slot = self._evict(slot_id)
                 self._terminal(slot.req, slot.out,
                                RequestStatus.TIMED_OUT,
-                               f"max_steps={req.max_steps} reached")
+                               f"max_steps={req.max_steps} reached",
+                               token_times=slot.token_times)
             elif self._deadline_expired(req):
                 slot = self._evict(slot_id)
                 self._terminal(slot.req, slot.out,
                                RequestStatus.TIMED_OUT,
-                               f"deadline_s={req.deadline_s} lapsed")
+                               f"deadline_s={req.deadline_s} lapsed",
+                               token_times=slot.token_times)
 
     def _run_decode(self, dbatch):
         def _count_retry(attempt, exc):
@@ -774,14 +988,74 @@ class Scheduler:
                                  dbatch, policy=self.retry,
                                  on_retry=_count_retry)
 
+    def _run_mixed(self, mbatch):
+        def _count_retry(attempt, exc):
+            self.stats["step_retries"] += 1
+        # functional like the decode step: a transient-fault retry
+        # re-runs only the CURRENT chunk + decode step against the
+        # untouched previous cache — completed chunks stay resident
+        return call_with_retries(self.eng.mixed_fn, self.eng.params,
+                                 mbatch, policy=self.retry,
+                                 on_retry=_count_retry)
+
+    def _pack_chunk_for_step(self, n_decode: int):
+        """(slot_id, C) for the head in-flight prefill's next chunk
+        under the token budget, or (None, 0) when nothing chunks this
+        step."""
+        if not (self.chunked and self._prefilling):
+            return None, 0
+        sid = self._prefilling[0]
+        slot = self.slots[sid]
+        remaining = len(self._teacher_tokens(slot)) - slot.prefilled
+        C = pack_chunk(remaining, n_decode, self.token_budget,
+                       self.chunk_tokens, self.page_size)
+        return (sid, C) if C > 0 else (None, 0)
+
+    def _promote(self, slot_id: int, chunk_logits) -> None:
+        """Final chunk done: the slot leaves PREFILLING and joins the
+        decode batch next step.  Mirrors the end of ``_admit_into``:
+        first token = argmax of the (final-chunk) prefill logits for a
+        fresh request, the pending generated token for a resumed one;
+        the whole prefilled prefix is indexed into the prefix trie."""
+        slot = self.slots[slot_id]
+        req = slot.req
+        if self.guard_nonfinite and \
+                not bool(jnp.all(jnp.isfinite(chunk_logits))):
+            self._fail_slot(slot_id, "non-finite logits in chunked "
+                            "prefill (final chunk)")
+            return
+        self.stats["prefills"] += 1
+        if slot.out:
+            tok = slot.out[-1]
+            slot.length = (self._prefill_positions(req)
+                           + len(slot.out) - 1)
+        else:
+            tok = int(jnp.argmax(chunk_logits[0]))
+            slot.out = [tok]
+            slot.length = self._prefill_positions(req)
+            slot.token_times.append(time.monotonic())
+        req.status = RequestStatus.RUNNING
+        self.lens[slot_id] = slot.length
+        self.tokens[slot_id] = tok
+        if self.prefix is not None:
+            self.prefix.insert(self._teacher_tokens(slot), slot.pages)
+        if len(slot.out) >= req.gen:
+            self._retire(slot_id)   # gen=1: the prefill already ends it
+
     def step(self) -> None:
-        """One decode step for every active slot, then retirement.
+        """One decode step for every RUNNING slot — plus, in chunked
+        mode, up to ``chunk_tokens`` of the head in-flight prompt
+        packed into the SAME jitted call (``engine.mixed_fn``) under
+        the token budget — then retirement.
 
         Fault handling per step: deadlines expire first (TIMED_OUT with
-        partial tokens), a transient decode exception is retried up to
-        ``retry.max_retries`` times, and — with ``guard_nonfinite`` —
-        any slot whose logits contain NaN/inf is quarantined (FAILED)
-        alone while every other slot's stream is untouched."""
+        partial tokens), a transient step exception is retried up to
+        ``retry.max_retries`` times (a mixed-step retry redoes only the
+        current chunk — earlier chunks are already resident), and —
+        with ``guard_nonfinite`` — any slot whose logits contain
+        NaN/inf is quarantined (FAILED) alone while every other slot's
+        stream is untouched (a PREFILLING slot is guarded at its final
+        chunk, where its logits first matter)."""
         if self.n_active == 0:
             return
         self._expire_deadlines()
@@ -794,6 +1068,15 @@ class Scheduler:
             self._cow_guard()
             if self.n_active == 0:
                 return
+        # snapshot who decodes THIS step: PREFILLING slots ride the
+        # batch masked (cur_len == 0), and a slot promoted after the
+        # mixed call must not consume this step's (garbage) logits row
+        was_running = [sid for sid, s in enumerate(self.slots)
+                       if s is not None
+                       and s.req.status is not RequestStatus.PREFILLING]
+        c_slot, C = self._pack_chunk_for_step(len(was_running))
+        if c_slot is None and not was_running:
+            return                  # nothing decodable, nothing chunks
         if self.straggler is not None:
             self.straggler.start_step()
         # table-width bucketing: stage only live pages.  After
@@ -812,7 +1095,28 @@ class Scheduler:
                   "cache": self.cache}
         if self.cfg.family == "audio":
             dbatch["enc_lens"] = jnp.asarray(self.enc_lens)
-        logits, self.cache = self._run_decode(dbatch)
+        if c_slot is not None:
+            slot = self.slots[c_slot]
+            toks = self._teacher_tokens(slot)
+            p0 = slot.prefilled
+            jp = p0 // self.page_size           # whole prefix pages
+            jw = -(-(p0 + C) // self.page_size)  # end page (excl)
+            dbatch["chunk_tokens"] = jnp.asarray(
+                toks[p0:p0 + C], jnp.int32)[None]
+            dbatch["chunk_pages"] = jnp.asarray(
+                slot.pages[:jp], jnp.int32)
+            dbatch["chunk_write_pages"] = jnp.asarray(
+                slot.pages[jp:jw], jnp.int32)
+            logits, chunk_logits, self.cache = self._run_mixed(dbatch)
+            self.stats["mixed_steps"] += 1
+            self.stats["chunks"] += 1
+            self.stats["chunked_tokens"] += C
+            slot.prefilled = p0 + C
+            if slot.prefilled >= len(toks):
+                self._prefilling.popleft()
+                self._promote(c_slot, chunk_logits)
+        else:
+            logits, self.cache = self._run_decode(dbatch)
         self.stats["steps"] += 1
         # one jitted pick (batched argmax + per-slot fold_in keys +
         # batched categorical + isfinite guard) and ONE device->host
@@ -821,9 +1125,8 @@ class Scheduler:
         seeds = np.zeros((B,), np.int32)
         steps = np.zeros((B,), np.int32)
         temps = np.zeros((B,), np.float32)
-        for slot_id, slot in enumerate(self.slots):
-            if slot is None:
-                continue
+        for slot_id in was_running:
+            slot = self.slots[slot_id]
             seeds[slot_id] = slot.req.seed
             steps[slot_id] = slot.steps
             temps[slot_id] = slot.req.temperature
@@ -831,9 +1134,9 @@ class Scheduler:
             logits, jnp.asarray(seeds), jnp.asarray(steps),
             jnp.asarray(temps)))
         greedy, sampled, finite = picked[0], picked[1], picked[2]
-        for slot_id, slot in enumerate(self.slots):
-            if slot is None:
-                continue
+        now = time.monotonic()
+        for slot_id in was_running:
+            slot = self.slots[slot_id]
             if self.guard_nonfinite and not finite[slot_id]:
                 # quarantine ONLY this slot: its pages free, its
                 # partial stream is attached, survivors untouched
@@ -846,6 +1149,7 @@ class Scheduler:
             slot.steps += 1
             slot.length += 1
             slot.out.append(tok)
+            slot.token_times.append(now)
             self.lens[slot_id] = slot.length
             self.tokens[slot_id] = tok
             if len(slot.out) >= slot.req.gen:
@@ -880,6 +1184,7 @@ class Scheduler:
                 item = self.pending.popleft()
                 req = item.req if isinstance(item, _Slot) else item
                 toks = item.out if isinstance(item, _Slot) else []
+                self._release_queued(item)
                 self._terminal(
                     req, toks, RequestStatus.REJECTED,
                     f"page pool exhausted: cannot admit with "

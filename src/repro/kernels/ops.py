@@ -22,8 +22,12 @@ import jax.numpy as jnp
 from repro.kernels import autotune
 from repro.kernels.vwr_attention import vwr_attention_p
 from repro.kernels.vwr_conv2d import vwr_conv2d_p
-from repro.kernels.vwr_decode import (vwr_flash_decode_p,
+from repro.kernels.vwr_decode import (vwr_chunk_prefix_attend_p,
+                                      vwr_chunk_prefix_attend_q8_p,
+                                      vwr_flash_decode_p,
                                       vwr_flash_decode_q8_p,
+                                      vwr_mla_chunk_prefix_attend_p,
+                                      vwr_mla_chunk_prefix_attend_q8_p,
                                       vwr_mla_flash_decode_p,
                                       vwr_mla_flash_decode_q8_p,
                                       vwr_mla_paged_flash_decode_p,
@@ -711,6 +715,127 @@ def vwr_mla_paged_flash_decode_q8(q_abs, q_rope, ckv_pool, krope_pool,
     per-page fp32 scales riding the block-table indirection."""
     interpret = _auto_interpret(interpret)
     return _vwr_mla_paged_flash_decode_q8_jit(
+        q_abs, q_rope, ckv_pool, krope_pool, ckv_scale, krope_scale,
+        table, counts, scale=scale, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _vwr_chunk_prefix_attend_jit(q, k_pool, v_pool, table, counts, *,
+                                 interpret):
+    C, H, D = q.shape
+    n_pages, ps, KV, _ = k_pool.shape
+    G = H // KV
+    qf = jnp.transpose(q.reshape(C, KV, G, D),
+                       (1, 0, 2, 3)).reshape(KV, C * G, D)
+    tbl = jnp.clip(table, 0, n_pages - 1).astype(jnp.int32)
+    o_t, m, l = vwr_chunk_prefix_attend_p(
+        qf, k_pool, v_pool, tbl, counts.astype(jnp.int32),
+        interpret=interpret)
+    o_t = jnp.transpose(o_t.reshape(KV, C, G, D),
+                        (1, 0, 2, 3)).reshape(C, H, D)
+    m = jnp.transpose(m.reshape(KV, C, G), (1, 0, 2)).reshape(C, H)
+    l = jnp.transpose(l.reshape(KV, C, G), (1, 0, 2)).reshape(C, H)
+    return o_t, m, l
+
+
+def vwr_chunk_prefix_attend(q, k_pool, v_pool, table, counts, *,
+                            interpret=None):
+    """Chunked-prefill prefix attention: a (C, H, Dh) query chunk
+    against its prompt's PRIOR pages (earlier chunks / prefix-cache
+    hits), each page staged once for all C queries.  table/counts:
+    (J,) page ids + per-page valid token counts (0 masks a page
+    entirely — e.g. pages another sequence shard owns).  Returns fp32
+    partials (o_tilde (C,H,Dh), m (C,H), l (C,H)); the within-chunk
+    causal block is combined downstream via the flash merge.  No block
+    autotuning: page size is the transaction width (the engine owns
+    it)."""
+    interpret = _auto_interpret(interpret)
+    return _vwr_chunk_prefix_attend_jit(q, k_pool, v_pool, table,
+                                        counts, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _vwr_chunk_prefix_attend_q8_jit(q, k_pool, v_pool, k_scale, v_scale,
+                                    table, counts, *, interpret):
+    C, H, D = q.shape
+    n_pages, ps, KV, _ = k_pool.shape
+    G = H // KV
+    qf = jnp.transpose(q.reshape(C, KV, G, D),
+                       (1, 0, 2, 3)).reshape(KV, C * G, D)
+    tbl = jnp.clip(table, 0, n_pages - 1).astype(jnp.int32)
+    o_t, m, l = vwr_chunk_prefix_attend_q8_p(
+        qf, k_pool, v_pool, k_scale.astype(jnp.float32),
+        v_scale.astype(jnp.float32), tbl, counts.astype(jnp.int32),
+        interpret=interpret)
+    o_t = jnp.transpose(o_t.reshape(KV, C, G, D),
+                        (1, 0, 2, 3)).reshape(C, H, D)
+    m = jnp.transpose(m.reshape(KV, C, G), (1, 0, 2)).reshape(C, H)
+    l = jnp.transpose(l.reshape(KV, C, G), (1, 0, 2)).reshape(C, H)
+    return o_t, m, l
+
+
+def vwr_chunk_prefix_attend_q8(q, k_pool, v_pool, k_scale, v_scale,
+                               table, counts, *, interpret=None):
+    """``vwr_chunk_prefix_attend`` over int8 page pools with fp32
+    (n_pages, KV) scale sidecars dequantized on the staged block."""
+    interpret = _auto_interpret(interpret)
+    return _vwr_chunk_prefix_attend_q8_jit(
+        q, k_pool, v_pool, k_scale, v_scale, table, counts,
+        interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def _vwr_mla_chunk_prefix_attend_jit(q_abs, q_rope, ckv_pool,
+                                     krope_pool, table, counts, *,
+                                     scale, interpret):
+    C, H, r = q_abs.shape
+    rope = q_rope.shape[2]
+    n_pages = ckv_pool.shape[0]
+    tbl = jnp.clip(table, 0, n_pages - 1).astype(jnp.int32)
+    o_t, m, l = vwr_mla_chunk_prefix_attend_p(
+        q_abs.reshape(C * H, r), q_rope.reshape(C * H, rope),
+        ckv_pool, krope_pool, tbl, counts.astype(jnp.int32),
+        scale=scale, interpret=interpret)
+    return (o_t.reshape(C, H, r), m.reshape(C, H), l.reshape(C, H))
+
+
+def vwr_mla_chunk_prefix_attend(q_abs, q_rope, ckv_pool, krope_pool,
+                                table, counts, *, scale,
+                                interpret=None):
+    """Split-operand MLA chunk-prefix attention: absorbed chunk
+    queries q_abs (C,H,r) + q_rope (C,H,rope) against the latent page
+    pools over the chunk's prior pages.  Same partial contract as
+    ``vwr_chunk_prefix_attend``."""
+    interpret = _auto_interpret(interpret)
+    return _vwr_mla_chunk_prefix_attend_jit(
+        q_abs, q_rope, ckv_pool, krope_pool, table, counts,
+        scale=scale, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def _vwr_mla_chunk_prefix_attend_q8_jit(q_abs, q_rope, ckv_pool,
+                                        krope_pool, ckv_scale,
+                                        krope_scale, table, counts, *,
+                                        scale, interpret):
+    C, H, r = q_abs.shape
+    rope = q_rope.shape[2]
+    n_pages = ckv_pool.shape[0]
+    tbl = jnp.clip(table, 0, n_pages - 1).astype(jnp.int32)
+    o_t, m, l = vwr_mla_chunk_prefix_attend_q8_p(
+        q_abs.reshape(C * H, r), q_rope.reshape(C * H, rope),
+        ckv_pool, krope_pool, ckv_scale.astype(jnp.float32),
+        krope_scale.astype(jnp.float32), tbl,
+        counts.astype(jnp.int32), scale=scale, interpret=interpret)
+    return (o_t.reshape(C, H, r), m.reshape(C, H), l.reshape(C, H))
+
+
+def vwr_mla_chunk_prefix_attend_q8(q_abs, q_rope, ckv_pool, krope_pool,
+                                   ckv_scale, krope_scale, table,
+                                   counts, *, scale, interpret=None):
+    """``vwr_mla_chunk_prefix_attend`` over int8 latent pools with
+    fp32 per-page scale sidecars."""
+    interpret = _auto_interpret(interpret)
+    return _vwr_mla_chunk_prefix_attend_q8_jit(
         q_abs, q_rope, ckv_pool, krope_pool, ckv_scale, krope_scale,
         table, counts, scale=scale, interpret=interpret)
 

@@ -813,6 +813,412 @@ def vwr_mla_paged_flash_decode_q8_p(q_abs: jax.Array, q_rope: jax.Array,
       krope_pool)
 
 
+# ----------------------------------------------------------------------
+# chunked prefill: a (C, d) query chunk against the paged pool
+# ----------------------------------------------------------------------
+#
+# Chunked prefill attends C chunk queries (one in-flight prompt's next
+# slice) against the PRIOR pages of that prompt — earlier chunks and
+# prefix-cache hits already resident in the pool via the block table.
+# The payoff vs replaying the decode kernel C times: each prior page is
+# staged from HBM ONCE for all C queries (C·G rows ride the VMEM
+# resident block), so staged bytes per chunk are ~1/C of the per-row
+# decode cost.  The within-chunk causal self-attention block is a tiny
+# (C, C) problem handled outside (models.attention combines the two
+# partials with the flash merge), so these kernels mask only by the
+# per-page valid counts — which also lets dist.decode zero out pages a
+# shard does not own.
+
+def _chunk_prefix_kernel(tbl_ref, cnt_ref, q_ref, k_ref, v_ref,
+                         ot_ref, m_ref, l_ref, acc_ref, ms_ref, ls_ref,
+                         *, scale, n_logical):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        ms_ref[...] = jnp.full_like(ms_ref, NEG_INF)
+        ls_ref[...] = jnp.zeros_like(ls_ref)
+
+    count = cnt_ref[j]                                  # tokens valid here
+    q = q_ref[0].astype(jnp.float32) * scale            # (C*G, D)
+    k = k_ref[0, :, 0, :]                               # (ps, D)
+    v = v_ref[0, :, 0, :]
+    s = jax.lax.dot_general(q, k.astype(jnp.float32),
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    idx = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(idx < count, s, NEG_INF)
+    m_prev = ms_ref[:, 0]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))         # (C*G,)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where((m_new > NEG_INF / 2)[:, None], p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    ls_ref[:, 0] = ls_ref[:, 0] * corr + p.sum(axis=-1)
+    pv = jnp.dot(p, v.astype(jnp.float32),
+                 preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+    ms_ref[:, 0] = m_new
+
+    @pl.when(j == n_logical - 1)
+    def _store():
+        ot_ref[0] = acc_ref[...]
+        m_ref[0] = ms_ref[:, 0]
+        l_ref[0] = ls_ref[:, 0]
+
+
+def vwr_chunk_prefix_attend_p(q: jax.Array, k_pool: jax.Array,
+                              v_pool: jax.Array, table: jax.Array,
+                              counts: jax.Array, *,
+                              interpret: bool = False):
+    """Chunk-prefix flash attention over the paged pool.
+
+    q: (KV, C*G, D) chunk queries flattened per KV head (C = chunk
+    tokens, G = H // KV); table: (J,) physical page ids of the chunk's
+    PRIOR pages in prefix order; counts: (J,) valid tokens per page
+    (page_size for full prior pages, 0 for pages a shard does not
+    own).  Returns fp32 partials (o_tilde (KV, C*G, D), m (KV, C*G),
+    l (KV, C*G)) under the shared flash combine contract.
+    """
+    KV, CG, D = q.shape
+    n_pages, ps, KVp, _ = k_pool.shape
+    assert KVp == KV, (KVp, KV)
+    J, = table.shape
+    assert counts.shape == (J,), (counts.shape, J)
+    scale = 1.0 / (D ** 0.5)
+    kernel = functools.partial(_chunk_prefix_kernel, scale=scale,
+                               n_logical=J)
+    f32 = jnp.float32
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                  # table, counts
+        grid=(KV, J),
+        in_specs=[
+            pl.BlockSpec((1, CG, D), lambda kv, j, tbl, cnt: (kv, 0, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda kv, j, tbl, cnt: (tbl[j], 0, kv, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda kv, j, tbl, cnt: (tbl[j], 0, kv, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, CG, D), lambda kv, j, tbl, cnt: (kv, 0, 0)),
+            pl.BlockSpec((1, CG), lambda kv, j, tbl, cnt: (kv, 0)),
+            pl.BlockSpec((1, CG), lambda kv, j, tbl, cnt: (kv, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((CG, D), f32),
+            pltpu.VMEM((CG, 1), f32),
+            pltpu.VMEM((CG, 1), f32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((KV, CG, D), f32),
+            jax.ShapeDtypeStruct((KV, CG), f32),
+            jax.ShapeDtypeStruct((KV, CG), f32),
+        ],
+        compiler_params=tpu_compiler_params("parallel", "arbitrary"),
+        interpret=interpret,
+    )(table, counts, q, k_pool, v_pool)
+
+
+def _chunk_prefix_kernel_q8(tbl_ref, cnt_ref, ks_ref, vs_ref, q_ref,
+                            k_ref, v_ref, ot_ref, m_ref, l_ref,
+                            acc_ref, ms_ref, ls_ref, *, scale,
+                            n_logical):
+    kv = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        ms_ref[...] = jnp.full_like(ms_ref, NEG_INF)
+        ls_ref[...] = jnp.zeros_like(ls_ref)
+
+    count = cnt_ref[j]
+    page = tbl_ref[j]
+    ks = ks_ref[page, kv]                               # per-page scales
+    vs = vs_ref[page, kv]
+    q = q_ref[0].astype(jnp.float32) * scale            # (C*G, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)           # (ps, D) int8
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * ks
+    idx = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(idx < count, s, NEG_INF)
+    m_prev = ms_ref[:, 0]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where((m_new > NEG_INF / 2)[:, None], p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    ls_ref[:, 0] = ls_ref[:, 0] * corr + p.sum(axis=-1)
+    pv = jnp.dot(p, v, preferred_element_type=jnp.float32) * vs
+    acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+    ms_ref[:, 0] = m_new
+
+    @pl.when(j == n_logical - 1)
+    def _store():
+        ot_ref[0] = acc_ref[...]
+        m_ref[0] = ms_ref[:, 0]
+        l_ref[0] = ls_ref[:, 0]
+
+
+def vwr_chunk_prefix_attend_q8_p(q: jax.Array, k_pool: jax.Array,
+                                 v_pool: jax.Array, k_scale: jax.Array,
+                                 v_scale: jax.Array, table: jax.Array,
+                                 counts: jax.Array, *,
+                                 interpret: bool = False):
+    """``vwr_chunk_prefix_attend_p`` over int8 page pools with fp32
+    (n_pages, KV) scale sidecars, dequantized on the staged block."""
+    KV, CG, D = q.shape
+    n_pages, ps, KVp, _ = k_pool.shape
+    assert KVp == KV, (KVp, KV)
+    assert k_scale.shape == (n_pages, KV) and \
+        v_scale.shape == (n_pages, KV)
+    J, = table.shape
+    assert counts.shape == (J,), (counts.shape, J)
+    scale = 1.0 / (D ** 0.5)
+    kernel = functools.partial(_chunk_prefix_kernel_q8, scale=scale,
+                               n_logical=J)
+    f32 = jnp.float32
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,      # table, counts, k_scale, v_scale
+        grid=(KV, J),
+        in_specs=[
+            pl.BlockSpec((1, CG, D),
+                         lambda kv, j, tbl, cnt, ks, vs: (kv, 0, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda kv, j, tbl, cnt, ks, vs:
+                         (tbl[j], 0, kv, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda kv, j, tbl, cnt, ks, vs:
+                         (tbl[j], 0, kv, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, CG, D),
+                         lambda kv, j, tbl, cnt, ks, vs: (kv, 0, 0)),
+            pl.BlockSpec((1, CG),
+                         lambda kv, j, tbl, cnt, ks, vs: (kv, 0)),
+            pl.BlockSpec((1, CG),
+                         lambda kv, j, tbl, cnt, ks, vs: (kv, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((CG, D), f32),
+            pltpu.VMEM((CG, 1), f32),
+            pltpu.VMEM((CG, 1), f32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((KV, CG, D), f32),
+            jax.ShapeDtypeStruct((KV, CG), f32),
+            jax.ShapeDtypeStruct((KV, CG), f32),
+        ],
+        compiler_params=tpu_compiler_params("parallel", "arbitrary"),
+        interpret=interpret,
+    )(table, counts, k_scale, v_scale, q, k_pool, v_pool)
+
+
+def _mla_chunk_prefix_kernel(tbl_ref, cnt_ref, qa_ref, qr_ref, ckv_ref,
+                             kr_ref, ot_ref, m_ref, l_ref, acc_ref,
+                             ms_ref, ls_ref, *, scale, n_logical):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        ms_ref[...] = jnp.full_like(ms_ref, NEG_INF)
+        ls_ref[...] = jnp.zeros_like(ls_ref)
+
+    count = cnt_ref[j]
+    qa = qa_ref[...].astype(jnp.float32) * scale        # (C*H, r)
+    qr = qr_ref[...].astype(jnp.float32) * scale        # (C*H, rope)
+    ckv = ckv_ref[0].astype(jnp.float32)                # (ps, r)
+    kr = kr_ref[0].astype(jnp.float32)                  # (ps, rope)
+    s = jax.lax.dot_general(qa, ckv, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s + jax.lax.dot_general(qr, kr, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    idx = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(idx < count, s, NEG_INF)
+    m_prev = ms_ref[:, 0]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))         # (C*H,)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where((m_new > NEG_INF / 2)[:, None], p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    ls_ref[:, 0] = ls_ref[:, 0] * corr + p.sum(axis=-1)
+    pv = jnp.dot(p, ckv, preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+    ms_ref[:, 0] = m_new
+
+    @pl.when(j == n_logical - 1)
+    def _store():
+        ot_ref[...] = acc_ref[...]
+        m_ref[0] = ms_ref[:, 0]
+        l_ref[0] = ls_ref[:, 0]
+
+
+def vwr_mla_chunk_prefix_attend_p(q_abs: jax.Array, q_rope: jax.Array,
+                                  ckv_pool: jax.Array,
+                                  krope_pool: jax.Array,
+                                  table: jax.Array, counts: jax.Array,
+                                  *, scale: float,
+                                  interpret: bool = False):
+    """Split-operand MLA chunk-prefix attention over latent page pools.
+
+    q_abs: (C*H, r) absorbed chunk queries; q_rope: (C*H, rope);
+    table/counts: (J,) prior pages + per-page valid counts.  Returns
+    fp32 partials (o_tilde (C*H, r), m (1, C*H), l (1, C*H)).
+    """
+    CH, r = q_abs.shape
+    rope = q_rope.shape[1]
+    n_pages, ps, _ = ckv_pool.shape
+    assert krope_pool.shape == (n_pages, ps, rope)
+    J, = table.shape
+    assert counts.shape == (J,), (counts.shape, J)
+    kernel = functools.partial(_mla_chunk_prefix_kernel, scale=scale,
+                               n_logical=J)
+    f32 = jnp.float32
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(J,),
+        in_specs=[
+            pl.BlockSpec((CH, r), lambda j, tbl, cnt: (0, 0)),
+            pl.BlockSpec((CH, rope), lambda j, tbl, cnt: (0, 0)),
+            pl.BlockSpec((1, ps, r), lambda j, tbl, cnt: (tbl[j], 0, 0)),
+            pl.BlockSpec((1, ps, rope),
+                         lambda j, tbl, cnt: (tbl[j], 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((CH, r), lambda j, tbl, cnt: (0, 0)),
+            pl.BlockSpec((1, CH), lambda j, tbl, cnt: (0, 0)),
+            pl.BlockSpec((1, CH), lambda j, tbl, cnt: (0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((CH, r), f32),
+            pltpu.VMEM((CH, 1), f32),
+            pltpu.VMEM((CH, 1), f32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((CH, r), f32),
+            jax.ShapeDtypeStruct((1, CH), f32),
+            jax.ShapeDtypeStruct((1, CH), f32),
+        ],
+        compiler_params=tpu_compiler_params("arbitrary"),
+        interpret=interpret,
+    )(table, counts, q_abs, q_rope, ckv_pool, krope_pool)
+
+
+def _mla_chunk_prefix_kernel_q8(tbl_ref, cnt_ref, cs_ref, rs_ref,
+                                qa_ref, qr_ref, ckv_ref, kr_ref,
+                                ot_ref, m_ref, l_ref, acc_ref, ms_ref,
+                                ls_ref, *, scale, n_logical):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        ms_ref[...] = jnp.full_like(ms_ref, NEG_INF)
+        ls_ref[...] = jnp.zeros_like(ls_ref)
+
+    count = cnt_ref[j]
+    page = tbl_ref[j]
+    cs = cs_ref[page]                                   # per-page scales
+    rs = rs_ref[page]
+    qa = qa_ref[...].astype(jnp.float32) * scale
+    qr = qr_ref[...].astype(jnp.float32) * scale
+    ckv = ckv_ref[0].astype(jnp.float32)                # (ps, r) int8
+    kr = kr_ref[0].astype(jnp.float32)                  # (ps, rope) int8
+    s = jax.lax.dot_general(qa, ckv, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * cs
+    s = s + jax.lax.dot_general(qr, kr, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * rs
+    idx = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(idx < count, s, NEG_INF)
+    m_prev = ms_ref[:, 0]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where((m_new > NEG_INF / 2)[:, None], p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    ls_ref[:, 0] = ls_ref[:, 0] * corr + p.sum(axis=-1)
+    pv = jnp.dot(p, ckv, preferred_element_type=jnp.float32) * cs
+    acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+    ms_ref[:, 0] = m_new
+
+    @pl.when(j == n_logical - 1)
+    def _store():
+        ot_ref[...] = acc_ref[...]
+        m_ref[0] = ms_ref[:, 0]
+        l_ref[0] = ls_ref[:, 0]
+
+
+def vwr_mla_chunk_prefix_attend_q8_p(q_abs: jax.Array,
+                                     q_rope: jax.Array,
+                                     ckv_pool: jax.Array,
+                                     krope_pool: jax.Array,
+                                     ckv_scale: jax.Array,
+                                     krope_scale: jax.Array,
+                                     table: jax.Array,
+                                     counts: jax.Array, *,
+                                     scale: float,
+                                     interpret: bool = False):
+    """``vwr_mla_chunk_prefix_attend_p`` over int8 latent pools with
+    fp32 per-page scale sidecars."""
+    CH, r = q_abs.shape
+    rope = q_rope.shape[1]
+    n_pages, ps, _ = ckv_pool.shape
+    assert krope_pool.shape == (n_pages, ps, rope)
+    assert ckv_scale.shape == (n_pages,) and \
+        krope_scale.shape == (n_pages,)
+    J, = table.shape
+    assert counts.shape == (J,), (counts.shape, J)
+    kernel = functools.partial(_mla_chunk_prefix_kernel_q8, scale=scale,
+                               n_logical=J)
+    f32 = jnp.float32
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,      # table, counts, ckv_scale, kr_scale
+        grid=(J,),
+        in_specs=[
+            pl.BlockSpec((CH, r), lambda j, tbl, cnt, cs, rs: (0, 0)),
+            pl.BlockSpec((CH, rope),
+                         lambda j, tbl, cnt, cs, rs: (0, 0)),
+            pl.BlockSpec((1, ps, r),
+                         lambda j, tbl, cnt, cs, rs: (tbl[j], 0, 0)),
+            pl.BlockSpec((1, ps, rope),
+                         lambda j, tbl, cnt, cs, rs: (tbl[j], 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((CH, r), lambda j, tbl, cnt, cs, rs: (0, 0)),
+            pl.BlockSpec((1, CH), lambda j, tbl, cnt, cs, rs: (0, 0)),
+            pl.BlockSpec((1, CH), lambda j, tbl, cnt, cs, rs: (0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((CH, r), f32),
+            pltpu.VMEM((CH, 1), f32),
+            pltpu.VMEM((CH, 1), f32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((CH, r), f32),
+            jax.ShapeDtypeStruct((1, CH), f32),
+            jax.ShapeDtypeStruct((1, CH), f32),
+        ],
+        compiler_params=tpu_compiler_params("arbitrary"),
+        interpret=interpret,
+    )(table, counts, ckv_scale, krope_scale, q_abs, q_rope, ckv_pool,
+      krope_pool)
+
+
 def vwr_flash_decode_p(q: jax.Array, k: jax.Array, v: jax.Array,
                        lens: jax.Array, *, bkv: int, t_valid: int,
                        interpret: bool = False):

@@ -68,6 +68,18 @@ def build_parser() -> argparse.ArgumentParser:
                          "staggered requests of varying lengths "
                          "through the scheduler (implies --paged; "
                          "--batch is the slot count)")
+    ap.add_argument("--chunked-prefill", action="store_true",
+                    help="with --stream: chunked prefill + unified "
+                         "mixed prefill/decode steps — admission "
+                         "grants pages and enqueues chunks, and each "
+                         "step packs decode slots plus up to "
+                         "--chunk-tokens of the head prompt under a "
+                         "token budget (decode is never stalled by a "
+                         "long prompt's prefill)")
+    ap.add_argument("--chunk-tokens", type=int, default=32,
+                    help="prompt tokens per mixed-step chunk (with "
+                         "--chunked-prefill); must be a multiple of "
+                         "--page-size")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="with --stream: prefix-sharing radix cache "
                          "over the page pool (engine.prefix_cache) — "
@@ -113,6 +125,8 @@ def engine_config_from_args(args, cfg=None) -> EngineConfig:
         n_pages=args.n_pages,
         kv_dtype=getattr(args, "kv_dtype", "bf16"),
         prefix_cache=bool(getattr(args, "prefix_cache", False)),
+        chunked_prefill=bool(getattr(args, "chunked_prefill", False)),
+        chunk_tokens=getattr(args, "chunk_tokens", 32),
     )
 
 
@@ -215,6 +229,16 @@ def _serve_stream(engine, args):
     if lat:
         print(f"[serve] request latency: p50 {lat['p50']:.3f}s "
               f"p90 {lat['p90']:.3f}s p99 {lat['p99']:.3f}s")
+    itl = sched.itl_percentiles()
+    if itl:
+        print(f"[serve] inter-token latency: p50 {itl['p50']*1e3:.1f}ms "
+              f"p90 {itl['p90']*1e3:.1f}ms p99 {itl['p99']*1e3:.1f}ms")
+    if sched.chunked:
+        print(f"[serve] chunked prefill: {st['chunks']} chunks / "
+              f"{st['chunked_tokens']} prompt tokens over "
+              f"{st['mixed_steps']} mixed steps (chunk_tokens "
+              f"{sched.chunk_tokens}, token budget "
+              f"{sched.token_budget})")
     if sched.prefix is not None:
         print(f"[serve] prefix cache: hits {st['prefix_hits']} / "
               f"misses {st['prefix_misses']}, "

@@ -132,6 +132,57 @@ def build_decode(cfg: ModelConfig, mesh=None):
     return sharded_serve_step
 
 
+def build_mixed_step(cfg: ModelConfig, mesh=None):
+    """Unified mixed prefill/decode step: one jitted call runs a
+    prompt chunk AND the whole decode batch against the shared pools.
+
+    batch carries the decode operands (``token`` (B,), ``cur_len``
+    (B,), ``block_table`` (B, W), ``cache``) plus the chunk operands
+    (``chunk_tokens`` (1, C), ``chunk_pages`` (J_p,) — the chunk's
+    prior pages, ``chunk_write_pages`` (J_w,) — the pages the chunk's
+    KV lands in).  The chunk prefills first (``lm.prefill_chunk``
+    computes + scatters its KV), then the decode batch steps over the
+    updated cache — the ordering is value-neutral for the decoding
+    slots (their block tables never alias the chunk's pages) and the
+    chunk's own slot rides the decode batch inactive (cur_len == 0:
+    write dropped, attention masked, logits discarded).
+
+    Shapes are static per (C, J_p, J_w, decode-bucket) combination and
+    ride the existing bucketing machinery; the scheduler keeps C at
+    ``chunk_tokens`` for every non-final chunk so steady-state traffic
+    reuses one compiled step.
+
+    Returns (decode logits (B, V) fp32, chunk logits (1, V) fp32,
+    updated cache).
+    """
+    def mixed_step(params, batch):
+        chunk_logits, cache = lm.prefill_chunk(
+            params, {"tokens": batch["chunk_tokens"],
+                     "pages": batch["chunk_pages"],
+                     "write_pages": batch["chunk_write_pages"],
+                     "cache": batch["cache"]}, cfg, mesh=mesh)
+        dbatch = {"token": batch["token"], "cur_len": batch["cur_len"],
+                  "block_table": batch["block_table"], "cache": cache}
+        logits, cache = lm.decode_step(params, dbatch, cfg, mesh=mesh) \
+            if mesh is not None else lm.decode_step(params, dbatch, cfg)
+        if mesh is not None:
+            from repro.dist import sharding as SH
+            sub = cache["moe"] if cfg.family == "moe" else cache
+            leaf = sub["ckv"] if cfg.mla is not None else sub["k"]
+            pspecs = SH.paged_cache_pspecs(
+                cfg, mesh, logits.shape[0],
+                seq_shard=(cfg.decode_shard == "seq"),
+                n_pages=leaf.shape[1],
+                quantized=(("ckv_scale" if cfg.mla is not None
+                            else "k_scale") in sub))
+            shardings = SH.to_shardings(mesh, pspecs)
+            cache = jax.tree.map(jax.lax.with_sharding_constraint,
+                                 cache, shardings)
+        return logits, chunk_logits, cache
+
+    return mixed_step
+
+
 # ======================================================================
 # abstract input specs (dry-run)
 # ======================================================================

@@ -457,3 +457,133 @@ def _decode_partial_paged_q8_pallas(q, k_pool, v_pool, k_scale, v_scale,
     from repro.kernels import ops
     return ops.vwr_paged_flash_decode_q8(q, k_pool, v_pool, k_scale,
                                          v_scale, table, counts)
+
+
+# ---------------- chunked prefill (query chunk vs the paged pool) -------------
+#
+# Chunked prefill splits a prompt into fixed-token slices that ride
+# inside the shared decode step.  Chunk k's attention decomposes into
+# two partials under the flash combine contract:
+#
+#   * a PREFIX partial — the (C, d) query chunk against the prompt's
+#     prior pages (earlier chunks + prefix-cache hits resident via the
+#     block table), masked per page by valid counts.  This is the
+#     registered op below: the pallas backend stages each prior page
+#     once for all C queries.
+#   * a SELF partial — the C x C causal block over the chunk's own
+#     freshly computed KV (``chunk_self_attn_partial``).
+#
+# ``merge_partials`` folds the two (and, in dist.decode, per-shard
+# prefix partials) into one normalized output.
+
+def merge_partials(a, b):
+    """Flash-combine two (o_tilde, m, l) partials over the same
+    queries.  Exact: a fully masked partial (m = NEG_INF, l = 0)
+    contributes nothing."""
+    o1, m1, l1 = a
+    o2, m2, l2 = b
+    m = jnp.maximum(m1, m2)
+    s1 = jnp.where(m1 > NEG_INF / 2, jnp.exp(m1 - m), 0.0)
+    s2 = jnp.where(m2 > NEG_INF / 2, jnp.exp(m2 - m), 0.0)
+    return (o1 * s1[..., None] + o2 * s2[..., None], m,
+            l1 * s1 + l2 * s2)
+
+
+def normalize_partial(o_t, l, dtype):
+    return (o_t / jnp.maximum(l, 1e-30)[..., None]).astype(dtype)
+
+
+def chunk_prefix_attend_partial(
+    q: jax.Array,            # (C, H, Dh) — one prompt's query chunk
+    k_pool: jax.Array,       # (n_pages, page_size, KV, Dh) shared pool
+    v_pool: jax.Array,
+    table: jax.Array,        # (J,) int32 the chunk's PRIOR pages
+    counts: jax.Array,       # (J,) int32 valid tokens per page
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """XLA gather reference for the chunk-prefix contract.  Returns
+    fp32 (o_tilde (C,H,Dh), m (C,H), l (C,H))."""
+    C, H, Dh = q.shape
+    n_pages, ps, KV, _ = k_pool.shape
+    G = H // KV
+    J = table.shape[0]
+    tbl = jnp.clip(table, 0, n_pages - 1)
+    k = k_pool[tbl].reshape(J * ps, KV, Dh)
+    v = v_pool[tbl].reshape(J * ps, KV, Dh)
+    valid = (jnp.arange(ps)[None, :] < counts[:, None]).reshape(J * ps)
+    qf = q.astype(jnp.float32).reshape(C, KV, G, Dh) / (Dh ** 0.5)
+    s = jnp.einsum("chgd,thd->chgt", qf, k.astype(jnp.float32))
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where((m > NEG_INF / 2)[..., None], p, 0.0)
+    l = p.sum(axis=-1)
+    o_t = jnp.einsum("chgt,thd->chgd", p, v.astype(jnp.float32))
+    return (o_t.reshape(C, H, Dh), m.reshape(C, H), l.reshape(C, H))
+
+
+def chunk_self_attn_partial(q, k, v):
+    """Causal partial over the chunk's OWN KV: q (C,H,Dh) against
+    k/v (C,KV,Dh), position i attending keys [0, i].  A small dense
+    (C, C) block — stays XLA."""
+    C, H, Dh = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(C, KV, G, Dh) / (Dh ** 0.5)
+    s = jnp.einsum("chgd,thd->chgt", qf, k.astype(jnp.float32))
+    causal = jnp.arange(C)[:, None] >= jnp.arange(C)[None, :]
+    s = jnp.where(causal[:, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where((m > NEG_INF / 2)[..., None], p, 0.0)
+    l = p.sum(axis=-1)
+    o_t = jnp.einsum("chgt,thd->chgd", p, v.astype(jnp.float32))
+    return (o_t.reshape(C, H, Dh), m.reshape(C, H), l.reshape(C, H))
+
+
+def chunk_prefill_attend(q, chunk_k, chunk_v, k_pool, v_pool, table,
+                         counts, *, backend="xla"):
+    """Full chunked-prefill attention for one chunk: prefix partial
+    (registered op ``chunk_prefix_paged``, q8 routed by the pool's
+    scale sidecars being passed as ``k_pool``/``v_pool`` dequantized
+    upstream) merged with the within-chunk causal partial, normalized.
+    Returns (C, H, Dh) in q's dtype."""
+    ps = k_pool.shape[1]
+    J = table.shape[0]
+    prefix = D.dispatch("chunk_prefix_paged", backend, q, k_pool,
+                        v_pool, table, counts, page_size=ps,
+                        max_pages=J)
+    self_p = chunk_self_attn_partial(q, chunk_k, chunk_v)
+    o_t, _, l = merge_partials(prefix, self_p)
+    return normalize_partial(o_t, l, q.dtype)
+
+
+@D.register("chunk_prefix_paged", "xla")
+def _chunk_prefix_paged_xla(q, k_pool, v_pool, table, counts, *,
+                            page_size=None, max_pages=None, tune=True):
+    return chunk_prefix_attend_partial(q, k_pool, v_pool, table, counts)
+
+
+@D.register("chunk_prefix_paged", "pallas")
+def _chunk_prefix_paged_pallas(q, k_pool, v_pool, table, counts, *,
+                               page_size=None, max_pages=None,
+                               tune=True):
+    from repro.kernels import ops
+    return ops.vwr_chunk_prefix_attend(q, k_pool, v_pool, table, counts)
+
+
+@D.register("chunk_prefix_paged_q8", "xla")
+def _chunk_prefix_paged_q8_xla(q, k_pool, v_pool, k_scale, v_scale,
+                               table, counts, *, page_size=None,
+                               max_pages=None, tune=True):
+    kf = k_pool.astype(jnp.float32) * k_scale[:, None, :, None]
+    vf = v_pool.astype(jnp.float32) * v_scale[:, None, :, None]
+    return chunk_prefix_attend_partial(q, kf, vf, table, counts)
+
+
+@D.register("chunk_prefix_paged_q8", "pallas")
+def _chunk_prefix_paged_q8_pallas(q, k_pool, v_pool, k_scale, v_scale,
+                                  table, counts, *, page_size=None,
+                                  max_pages=None, tune=True):
+    from repro.kernels import ops
+    return ops.vwr_chunk_prefix_attend_q8(q, k_pool, v_pool, k_scale,
+                                          v_scale, table, counts)

@@ -1285,6 +1285,42 @@ def prefill_suffix(params, batch, cfg, mesh=None):
     return logits.astype(jnp.float32), caches
 
 
+# ---------------- chunked prefill (one chunk of an in-flight prompt) -----
+
+def prefill_chunk(params, batch, cfg, mesh=None):
+    """One chunk of a chunked prefill: compute the chunk's KV against
+    everything already resident and scatter it into its granted pages.
+
+    batch: ``tokens`` (1, C) int32 chunk tokens at global positions
+    [M, M+C) where M = len(pages) * page_size; ``pages`` (J_p,) int32 —
+    ALL pages holding positions [0, M) in prefix order (prefix-cache
+    matched pages followed by earlier chunks' pages — the scheduler
+    keeps every non-final chunk page-aligned, so the resident prefix is
+    always whole pages); ``write_pages`` (J_w,) int32 — the pages
+    positions [M, M+C) land in; ``cache`` — the live page pools.
+
+    Composes with ``prefill_suffix``: the attention math IS the
+    suffix-prefill math (a chunk is a suffix whose prefix grows chunk
+    by chunk), so every chunk row — and in particular the final chunk's
+    last-token logits — is bit-identical to the corresponding row of a
+    whole-prompt prefill when the pools store the model dtype.  On top
+    of that this writes the chunk's KV into ``write_pages`` (the
+    quantize-on-write scatter for int8 pools), so the NEXT chunk can
+    read it back through the block table.
+
+    Returns (last-chunk-token logits (1, vocab_padded) fp32, updated
+    cache).  Intermediate chunks' logits are discarded by the caller;
+    the final chunk's seed the first generated token.
+    """
+    from repro.engine import paged_cache as PC
+    logits, caches = prefill_suffix(
+        params, {"tokens": batch["tokens"], "pages": batch["pages"],
+                 "cache": batch["cache"]}, cfg, mesh=mesh)
+    table = jnp.asarray(batch["write_pages"], jnp.int32)[None]  # (1, J_w)
+    cache = PC.write_prefill(cfg, batch["cache"], caches, table)
+    return logits, cache
+
+
 # ---------------- xlstm decode uses ml/sl steps with scalar inputs -------
 
 def ssm_decode_supported(cfg) -> bool:

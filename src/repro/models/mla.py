@@ -375,6 +375,84 @@ def _decode_partial_mla_paged_q8_pallas(q_abs, q_rope, ckv_pool,
                                              counts, scale=scale)
 
 
+# ---------------- chunked prefill (absorbed chunk vs latent pools) ------------
+#
+# The MLA sibling of ``attention.chunk_prefix_attend_partial``: an
+# absorbed (C, H, r) query chunk against the latent page pools over the
+# chunk's PRIOR pages.  Returns latent-space fp32 partials
+# (o_tilde (C,H,r), m (C,H), l (C,H)); the within-chunk causal block
+# and ``mla_decode_finish`` live downstream.
+
+def mla_chunk_prefix_attend_partial(q_abs, q_rope, ckv_pool,
+                                    krope_pool, table, counts, *,
+                                    scale):
+    """XLA gather reference for the MLA chunk-prefix contract.
+    table/counts: (J,) prior pages + per-page valid counts."""
+    C, H, r = q_abs.shape
+    n_pages, ps, _ = ckv_pool.shape
+    J = table.shape[0]
+    tbl = jnp.clip(table, 0, n_pages - 1)
+    ckv = ckv_pool[tbl].reshape(J * ps, r)
+    kr = krope_pool[tbl].reshape(J * ps, krope_pool.shape[2])
+    valid = (jnp.arange(ps)[None, :] < counts[:, None]).reshape(J * ps)
+    qa = q_abs.astype(jnp.float32) * scale
+    qr = q_rope.astype(jnp.float32) * scale
+    s = jnp.einsum("chr,tr->cht", qa, ckv.astype(jnp.float32))
+    s = s + jnp.einsum("chr,tr->cht", qr, kr.astype(jnp.float32))
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where((m > NEG_INF / 2)[..., None], p, 0.0)
+    l = p.sum(axis=-1)
+    o_t = jnp.einsum("cht,tr->chr", p, ckv.astype(jnp.float32))
+    return o_t, m, l
+
+
+@D.register("chunk_prefix_mla_paged", "xla")
+def _chunk_prefix_mla_paged_xla(q_abs, q_rope, ckv_pool, krope_pool,
+                                table, counts, *, scale,
+                                page_size=None, max_pages=None,
+                                tune=True):
+    return mla_chunk_prefix_attend_partial(q_abs, q_rope, ckv_pool,
+                                           krope_pool, table, counts,
+                                           scale=scale)
+
+
+@D.register("chunk_prefix_mla_paged", "pallas")
+def _chunk_prefix_mla_paged_pallas(q_abs, q_rope, ckv_pool, krope_pool,
+                                   table, counts, *, scale,
+                                   page_size=None, max_pages=None,
+                                   tune=True):
+    from repro.kernels import ops
+    return ops.vwr_mla_chunk_prefix_attend(q_abs, q_rope, ckv_pool,
+                                           krope_pool, table, counts,
+                                           scale=scale)
+
+
+@D.register("chunk_prefix_mla_paged_q8", "xla")
+def _chunk_prefix_mla_paged_q8_xla(q_abs, q_rope, ckv_pool, krope_pool,
+                                   ckv_scale, krope_scale, table,
+                                   counts, *, scale, page_size=None,
+                                   max_pages=None, tune=True):
+    ckv = ckv_pool.astype(jnp.float32) * ckv_scale[:, None, None]
+    kr = krope_pool.astype(jnp.float32) * krope_scale[:, None, None]
+    return mla_chunk_prefix_attend_partial(q_abs, q_rope, ckv, kr,
+                                           table, counts, scale=scale)
+
+
+@D.register("chunk_prefix_mla_paged_q8", "pallas")
+def _chunk_prefix_mla_paged_q8_pallas(q_abs, q_rope, ckv_pool,
+                                      krope_pool, ckv_scale,
+                                      krope_scale, table, counts, *,
+                                      scale, page_size=None,
+                                      max_pages=None, tune=True):
+    from repro.kernels import ops
+    return ops.vwr_mla_chunk_prefix_attend_q8(q_abs, q_rope, ckv_pool,
+                                              krope_pool, ckv_scale,
+                                              krope_scale, table,
+                                              counts, scale=scale)
+
+
 def mla_absorbed_mqa(p, q_nope, q_rope, cache_ckv, cache_krope, cfg):
     """Absorbed MLA decode as an MQA flash-decode problem.
 

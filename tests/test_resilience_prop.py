@@ -2,13 +2,17 @@
 random alloc/free interleavings against the PageAllocator invariant,
 random admit/step/cancel sequences driving the Scheduler's
 bookkeeping (growth, preemption, parking, rejection, retirement) on a
-model-free fake engine, and random insert/match/evict/decref
-interleavings against the prefix-cache refcount partition (the trie
-plus outstanding holds account for every ref, eviction never drops a
-held page).  Token-level correctness under faults is pinned by
-tests/test_resilience.py; prefix-cache token identity by
-tests/test_prefix_cache.py (which also carries a deterministic mirror
-of the partition property for hypothesis-less environments)."""
+model-free fake engine — with and without chunked prefill, where the
+``pack_chunk`` token-budget rule must never exceed the budget, never
+starve a decoding slot, and keep non-final chunks page-aligned — and
+random insert/match/evict/decref interleavings against the
+prefix-cache refcount partition (the trie plus outstanding holds
+account for every ref, eviction never drops a held page).  Token-level
+correctness under faults is pinned by tests/test_resilience.py;
+prefix-cache token identity by tests/test_prefix_cache.py (which also
+carries a deterministic mirror of the partition property for
+hypothesis-less environments); chunked-prefill token identity by
+tests/test_chunked.py."""
 import types
 
 import jax.numpy as jnp
@@ -23,6 +27,34 @@ from repro.engine import (EngineConfig, PrefixCache, Request,  # noqa: E402
 from repro.engine import paged_cache as PC  # noqa: E402
 from repro.engine.paged_cache import (PageAllocator,  # noqa: E402
                                       PagePoolExhausted)
+from repro.engine.scheduler import pack_chunk  # noqa: E402
+
+
+@settings(max_examples=200, deadline=None)
+@given(remaining=st.integers(1, 512), n_decode=st.integers(0, 64),
+       budget=st.integers(1, 600), ct_pages=st.integers(1, 16),
+       ps=st.sampled_from([1, 2, 4, 8]))
+def test_pack_chunk_never_over_budget_never_starves(
+        remaining, n_decode, budget, ct_pages, ps):
+    """The token-budget packing rule, over its whole domain: the chunk
+    never pushes the step past ``budget`` tokens, decoding slots are
+    never starved (decodes alone filling the budget yields a zero
+    chunk — never the other way around), non-final chunks end
+    page-aligned, a chunk never overshoots the remaining prompt or
+    ``chunk_tokens``, and whenever a whole page (or the whole
+    remainder) fits beside the decodes the prefill makes progress."""
+    ct = ct_pages * ps
+    c = pack_chunk(remaining, n_decode, budget, ct, ps)
+    assert 0 <= c <= min(remaining, ct)
+    if c:
+        assert n_decode + c <= budget   # never exceeds the budget
+    if budget <= n_decode:
+        assert c == 0                   # decode always wins the budget
+    if 0 < c < remaining:
+        assert c % ps == 0              # non-final chunks page-aligned
+    room = min(budget - n_decode, ct)
+    if room >= min(remaining, ps):
+        assert c > 0                    # liveness: chunking advances
 
 
 @settings(max_examples=60, deadline=None)
@@ -173,6 +205,13 @@ class _FakeEngine:
         kv = jnp.zeros((1, 1, S, 1, 1))
         return jnp.zeros((1, self._V)), (kv, kv)
 
+    def mixed_fn(self, params, batch):
+        # unified mixed step: (decode logits, chunk logits, cache) —
+        # zeros keep the scheduler's chunk bookkeeping fully exercised
+        B = batch["token"].shape[0]
+        return (jnp.zeros((B, self._V)), jnp.zeros((1, self._V)),
+                batch["cache"])
+
 
 _OPS = st.lists(
     st.one_of(
@@ -218,6 +257,82 @@ def test_scheduler_invariants_under_random_sequences(ops, max_preempt):
                 gen=b))
         elif op == "step":
             sched.step()
+        elif op == "admit":
+            sched.admit()
+        elif op == "cancel" and a < len(submitted):
+            sched.cancel(a)
+        invariants()
+    out = sched.run()
+    invariants()
+    assert sched.allocator.free_pages == eng.n_pages
+    assert set(out) == set(submitted)
+    for rid in submitted:
+        assert out[rid].status in {
+            RequestStatus.FINISHED, RequestStatus.REJECTED,
+            RequestStatus.CANCELLED, RequestStatus.TIMED_OUT,
+            RequestStatus.FAILED}
+
+
+@settings(max_examples=10, deadline=None)
+@given(_OPS, st.integers(0, 2))
+def test_scheduler_chunked_invariants_under_random_sequences(
+        ops, max_preempt):
+    """The scheduler property with chunked prefill ON: active slots
+    are RUNNING or PREFILLING, a PREFILLING slot's completed prefix is
+    always whole pages (``prefilled`` page-aligned) and tracked in the
+    chunking queue, pages are never aliased across slots OR the queued
+    preempted slots that kept their completed pages, and — the packer's
+    no-starvation guarantee surfaced at the scheduler level — every
+    slot that enters a step RUNNING and leaves it RUNNING emits exactly
+    one token, no matter what chunks rode along."""
+    eng = _FakeEngine()
+    sched = Scheduler(eng, max_preemptions=max_preempt,
+                      chunked_prefill=True, chunk_tokens=4)
+    rng = np.random.default_rng(0)
+    submitted = []
+
+    def invariants():
+        sched.allocator.check()
+        pages = [p for s in sched.slots if s is not None
+                 for p in s.pages]
+        for q in (sched.pending, sched.parked):
+            for item in q:
+                pages.extend(getattr(item, "pages", []))
+        assert len(set(pages)) == len(pages), "page aliased"
+        assert len(pages) == sched.allocator.used_pages
+        for sid, s in enumerate(sched.slots):
+            if s is None:
+                assert sid not in sched._prefilling
+                continue
+            assert s.req.status in (RequestStatus.RUNNING,
+                                    RequestStatus.PREFILLING)
+            if s.req.status is RequestStatus.PREFILLING:
+                assert sid in sched._prefilling
+                assert s.prefilled % eng.page_size == 0
+                assert s.prefilled < len(s.req.tokens)
+            else:
+                assert sid not in sched._prefilling
+
+    for op, a, b in ops:
+        if op == "submit":
+            rid = len(submitted)
+            submitted.append(rid)
+            sched.submit(Request(
+                rid=rid,
+                tokens=rng.integers(0, 8, (a,)).astype(np.int32),
+                gen=b))
+        elif op == "step":
+            running = {sid: (s.req.rid, len(s.out))
+                       for sid, s in enumerate(sched.slots)
+                       if s is not None
+                       and s.req.status is RequestStatus.RUNNING}
+            sched.step()
+            for sid, (rid, n0) in running.items():
+                s = sched.slots[sid]
+                if (s is not None and s.req.rid == rid
+                        and s.req.status is RequestStatus.RUNNING):
+                    assert len(s.out) == n0 + 1, \
+                        f"slot {sid} starved by the chunk"
         elif op == "admit":
             sched.admit()
         elif op == "cancel" and a < len(submitted):
