@@ -57,9 +57,8 @@ class CheckpointStore:
         # would otherwise be traversed as pytrees)
         host = {k: self._to_host_shards(v)
                 for k, v in _leaf_paths(tree).items()}
-        if self._inflight is not None:
-            self._inflight.result()
-            self._inflight = None
+        self.wait()     # join (and clear) the previous async write —
+        # a failure re-raises HERE once, not again at teardown
         if async_:
             self._inflight = self._pool.submit(self._write, step, host)
         else:
@@ -125,10 +124,16 @@ class CheckpointStore:
     def steps(self):
         out = []
         for name in os.listdir(self.dir):
-            if name.startswith("step_") and not name.endswith(".tmp"):
-                if os.path.exists(os.path.join(self.dir, name,
-                                               "_COMPLETE")):
-                    out.append(int(name.split("_")[1]))
+            if not name.startswith("step_") or name.endswith(".tmp"):
+                continue
+            # tolerate stray entries (step_backup, step_old_3, ...):
+            # one unparsable name must not kill restore discovery
+            tail = name[len("step_"):]
+            if not tail.isdigit():
+                continue
+            if os.path.exists(os.path.join(self.dir, name,
+                                           "_COMPLETE")):
+                out.append(int(tail))
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:
@@ -186,6 +191,12 @@ class CheckpointStore:
         return jax.tree.unflatten(treedef, out)
 
     def wait(self):
+        """Join the in-flight async save, re-raising its exception —
+        without this, a failed background write would surface only on
+        the NEXT ``save()`` (or never, at the end of a run).  Call it
+        at run end and from snapshot-cadence teardown; idempotent."""
         if self._inflight is not None:
-            self._inflight.result()
-            self._inflight = None
+            try:
+                self._inflight.result()
+            finally:
+                self._inflight = None

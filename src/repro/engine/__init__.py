@@ -8,17 +8,24 @@ block tables (``engine.paged_cache``) and ``Scheduler`` / ``Request``
 run request-level continuous batching on top of it — every request
 walks the ``RequestStatus`` lifecycle and terminates as a
 ``RequestResult`` (tokens + status/error), with deterministic fault
-injectors in ``engine.faults``.
+injectors in ``engine.faults``.  Durability rides on top: the
+scheduler's full serving state snapshots crash-consistently
+(``engine.snapshot``) and every request event is write-ahead journaled
+(``engine.journal``), so ``runtime.resilience.serve_with_recovery``
+survives process death with bit-identical streams.
 """
 from repro.engine.cache import pad_cache_from_prefill
 from repro.engine.engine import DecodeEngine, EngineConfig
+from repro.engine.journal import RequestJournal, read_events, replay
 from repro.engine.paged_cache import (PageAllocator, PagePoolExhausted,
                                       bucket_table_width, fork_page)
 from repro.engine.prefix_cache import PrefixCache
 from repro.engine.scheduler import (Request, RequestResult, RequestStatus,
                                     Scheduler)
+from repro.engine.snapshot import EngineSnapshotter, restore, snapshot
 
 __all__ = ["DecodeEngine", "EngineConfig", "pad_cache_from_prefill",
            "PageAllocator", "PagePoolExhausted", "PrefixCache", "Request",
-           "RequestResult", "RequestStatus", "Scheduler",
-           "bucket_table_width", "fork_page"]
+           "RequestJournal", "RequestResult", "RequestStatus", "Scheduler",
+           "EngineSnapshotter", "bucket_table_width", "fork_page",
+           "read_events", "replay", "restore", "snapshot"]

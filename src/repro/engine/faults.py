@@ -19,6 +19,10 @@ step-function call index:
     retry budget and surfaces);
   * ``SlowStep(step, delay_s)``      — call ``step`` sleeps first (the
     StragglerMonitor must flag it);
+  * ``CrashFault(step)``             — every call from ``step`` on
+    raises ``CrashError`` (simulated process death: it escapes the
+    bounded step retry by design; only the durable-serving restart
+    loop — snapshot + journal recovery — survives it);
   * ``hold_pages(sched, n)``         — artificial pool pressure: n
     pages vanish from the allocator until the returned ``release()``
     is called (admission serializes / growth preempts — graceful
@@ -49,6 +53,15 @@ class NonFiniteLogitsError(RuntimeError):
     decode step produces NaN/inf logits."""
 
 
+class CrashError(RuntimeError):
+    """Simulated process death: unlike ``InjectedFault`` (transient —
+    the scheduler's bounded step retry heals it), a ``CrashError`` is
+    raised on EVERY wrapped call from the crash step on, so it always
+    escapes the step retry and kills the scheduler loop.  The
+    durable-serving supervisor (``runtime.resilience``'s restart loop
+    around snapshot + journal recovery) is what survives it."""
+
+
 @dataclasses.dataclass
 class NonFiniteLogits:
     """Corrupt one slot's logits at wrapped-call index ``step``."""
@@ -74,7 +87,18 @@ class SlowStep:
     delay_s: float = 0.25
 
 
-Fault = object   # NonFiniteLogits | TransientError | SlowStep
+@dataclasses.dataclass
+class CrashFault:
+    """Raise ``CrashError`` on every wrapped-call index >= ``step`` —
+    deterministic process death at step k.  Raised *before* the step
+    function touches the device, so the cache holds exactly the state
+    of the k-1 completed steps (what a snapshot taken at or before k-1
+    restores)."""
+    step: int
+    message: str = "injected crash (simulated process death)"
+
+
+Fault = object   # NonFiniteLogits | TransientError | SlowStep | CrashFault
 
 
 class FaultyStepFn:
@@ -113,6 +137,9 @@ class FaultyStepFn:
                     and f.step <= k < f.step + f.count:
                 self.injected += 1
                 raise InjectedFault(f"{f.message} (call {k})")
+            elif isinstance(f, CrashFault) and k >= f.step:
+                self.injected += 1
+                raise CrashError(f"{f.message} (call {k})")
         out = list(self.fn(params, batch))
         for f in self.faults:
             if isinstance(f, NonFiniteLogits) and f.step == k:

@@ -39,7 +39,7 @@ allocator; request-level admission / eviction policy lives in
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+from typing import Any, Dict, List, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -469,6 +469,28 @@ class PageAllocator:
             raise ValueError(f"refcounts on pages not handed out: "
                              f"{sorted(ghost)}")
         return True
+
+    def to_state(self) -> Dict[str, Any]:
+        """JSON-serializable snapshot of the pool partition.  The free
+        LIST (not set) is captured in order: ``alloc`` pops from the
+        end, so reproducing the exact order is what makes page
+        assignment — and therefore block tables — deterministic across
+        a snapshot/restore cycle."""
+        return {"n_pages": self.n_pages,
+                "free": list(self._free),
+                "refs": [[int(p), int(r)]
+                         for p, r in sorted(self._refs.items())]}
+
+    def load_state(self, state: Dict[str, Any]) -> None:
+        """Restore a ``to_state`` snapshot (validates the partition)."""
+        if int(state["n_pages"]) != self.n_pages:
+            raise ValueError(
+                f"allocator snapshot covers {state['n_pages']} pages "
+                f"but this pool has {self.n_pages}")
+        self._free = [int(p) for p in state["free"]]
+        self._refs = {int(p): int(r) for p, r in state["refs"]}
+        self._owned = set(self._refs)
+        self.check()
 
 
 # ----------------------------------------------------------------------

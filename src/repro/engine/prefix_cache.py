@@ -200,6 +200,47 @@ class PrefixCache:
 
     # ------------------------------------------------------------------
 
+    def to_state(self) -> Dict[str, Any]:
+        """JSON-serializable trie snapshot: nodes in parent-before-
+        child order, each carrying its page_size-token key, physical
+        page id, LRU stamp and parent index (-1 = root), plus the LRU
+        clock and counters.  Page *refs* are NOT part of this state —
+        the trie's one-ref-per-node ownership lives in the allocator,
+        whose partition is snapshotted separately."""
+        nodes: List[Dict[str, Any]] = []
+        stack: List[Tuple[_Node, int]] = [
+            (c, -1) for c in self._root.children.values()]
+        while stack:
+            nd, pidx = stack.pop()
+            nodes.append({"key": [int(t) for t in nd.key],
+                          "page": int(nd.page),
+                          "last_used": int(nd.last_used),
+                          "parent": pidx})
+            idx = len(nodes) - 1
+            stack.extend((c, idx) for c in nd.children.values())
+        return {"nodes": nodes, "clock": int(self._clock),
+                "stats": dict(self.stats)}
+
+    def load_state(self, state: Dict[str, Any]) -> None:
+        """Rebuild the trie from a ``to_state`` snapshot WITHOUT
+        touching the allocator (the restored allocator partition
+        already carries the trie's refs — increfing again would leak
+        every cached page)."""
+        self._root = _Node((), None, None)
+        built: List[_Node] = []
+        for rec in state["nodes"]:
+            parent = (self._root if rec["parent"] < 0
+                      else built[rec["parent"]])
+            node = _Node(tuple(int(t) for t in rec["key"]),
+                         int(rec["page"]), parent)
+            node.last_used = int(rec["last_used"])
+            parent.children[node.key] = node
+            built.append(node)
+        self._n_nodes = len(built)
+        self._clock = int(state["clock"])
+        self.stats.update(state.get("stats", {}))
+        self.check()
+
     def check(self) -> bool:
         """Structural invariants: node count matches the tree, every
         node's page is handed out with refcount >= 1 (the trie's own

@@ -86,6 +86,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.engine.faults import CrashError
 from repro.engine.paged_cache import (PageAllocator, PagePoolExhausted,
                                       bucket_table_width, fork_page,
                                       write_prefill)
@@ -288,7 +289,8 @@ class Scheduler:
                  prefix_cache: Optional[bool] = None,
                  chunked_prefill: Optional[bool] = None,
                  chunk_tokens: Optional[int] = None,
-                 token_budget: Optional[int] = None):
+                 token_budget: Optional[int] = None,
+                 journal=None, snapshotter=None):
         if not engine.ecfg.paged:
             raise ValueError(
                 "Scheduler needs a paged engine: EngineConfig("
@@ -298,6 +300,12 @@ class Scheduler:
         B, J = engine.ecfg.batch, engine.max_pages
         self.page_size = engine.page_size
         self.allocator = PageAllocator(engine.n_pages)
+        # durability hooks (engine.journal / engine.snapshot): every
+        # submit/cancel/terminal is write-ahead logged, and the
+        # snapshotter cuts the full serving state every N steps off
+        # the step path
+        self.journal = journal
+        self.snapshotter = snapshotter
         self.slots: List[Optional[_Slot]] = [None] * B
         self.table = np.zeros((B, J), np.int32)
         self.lens = np.zeros((B,), np.int32)
@@ -307,7 +315,11 @@ class Scheduler:
         self.enc_budget = (self.cache["cross_k"].shape[2]
                            if self.cfg.family == "audio" else 0)
         self.bucket_tables = bucket_tables
-        self.retry = retry if retry is not None else RetryPolicy()
+        # default policy: transient step faults retry, a simulated
+        # process death (CrashError) surfaces immediately — a crash is
+        # the restart loop's problem, not the step retry's
+        self.retry = retry if retry is not None else RetryPolicy(
+            fatal=(CrashError,))
         self.max_preemptions = max_preemptions
         self.guard_nonfinite = guard_nonfinite
         self.straggler = straggler
@@ -420,6 +432,11 @@ class Scheduler:
     def submit(self, req: Request) -> None:
         req.status = RequestStatus.PENDING
         req.submit_t = time.monotonic()
+        if self.journal is not None:
+            # write-ahead: the submit is on disk (fsynced) before the
+            # scheduler can act on it — an acknowledged request
+            # survives a crash even if no snapshot ever sees it
+            self.journal.submit(req)
         self.pending.append(req)
 
     def results(self) -> Dict[Any, RequestResult]:
@@ -454,6 +471,8 @@ class Scheduler:
                             token_times=(list(token_times)
                                          if token_times else None))
         self.finished[req.rid] = res
+        if self.journal is not None:
+            self.journal.terminal(req.rid, res)
         if lat is not None:
             self._latencies.append(lat)
         if token_times and len(token_times) > 1:
@@ -555,6 +574,10 @@ class Scheduler:
         freed immediately, partial tokens attached), pending, or
         parked.  Returns False if ``rid`` is unknown or already
         terminal."""
+        if self.journal is not None:
+            # intent record — the terminal event that follows is what
+            # replay treats as authoritative
+            self.journal.cancel(rid)
         for slot_id, slot in enumerate(self.slots):
             if slot is not None and slot.req.rid == rid:
                 slot = self._evict(slot_id)
@@ -1164,6 +1187,10 @@ class Scheduler:
                 "finished": len(self.finished),
                 "failed": self.stats["failed"],
                 "retries": self.stats["step_retries"]})
+        if self.snapshotter is not None:
+            # async cadence: the host cut happens here, the disk
+            # writes on the store's background pool
+            self.snapshotter.on_step(self)
 
     def run(self) -> Dict[Any, RequestResult]:
         """Drain the pending queue: admit / step until every request is
@@ -1193,4 +1220,8 @@ class Scheduler:
                     "left to retire — raise EngineConfig.n_pages")
                 continue
             self.step()
+        if self.snapshotter is not None:
+            # surface a failed background snapshot at run end instead
+            # of silently dropping it with the drained queue
+            self.snapshotter.wait()
         return dict(self.finished)

@@ -101,6 +101,25 @@ def build_parser() -> argparse.ArgumentParser:
                     help="with --stream: touch PATH each decode step "
                          "(runtime.resilience.Heartbeat) so an "
                          "external supervisor can detect a hang")
+    ap.add_argument("--snapshot-dir", default=None, metavar="DIR",
+                    help="with --stream: durable serving — every "
+                         "request event write-ahead journaled and the "
+                         "full serving state snapshotted under DIR, "
+                         "the drain supervised by runtime.resilience."
+                         "serve_with_recovery (requests submitted up "
+                         "front; a crash resumes from the latest "
+                         "snapshot + journal replay, finished results "
+                         "recovered verbatim)")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    metavar="N",
+                    help="with --snapshot-dir: snapshot the serving "
+                         "state every N steps (written async, off the "
+                         "step path); 0 = journal-only durability")
+    ap.add_argument("--crash-at", type=int, default=0, metavar="K",
+                    help="with --snapshot-dir: inject engine.faults."
+                         "CrashFault at step K of the first attempt — "
+                         "deterministic simulated process death the "
+                         "restart loop must recover from")
     return ap
 
 
@@ -130,6 +149,95 @@ def engine_config_from_args(args, cfg=None) -> EngineConfig:
     )
 
 
+def _stream_requests(engine, args):
+    """The stream workload both modes share: n requests of varying
+    prompt/gen lengths, half of them opening with a common whole-page
+    "system prompt" when --prefix-cache is on.  Deterministic in the
+    args (seeded rng), which is what lets a durable run be compared
+    bit-for-bit against a crash-free reference."""
+    from repro.engine import Request
+
+    cfg = engine.cfg
+    rng = np.random.default_rng(0)
+    n, P, G = args.stream, args.prompt_len, args.gen
+    shared = None
+    if getattr(args, "prefix_cache", False):
+        sys_pages = max(1, (P // 2) // engine.page_size)
+        shared = rng.integers(
+            2, cfg.vocab, (sys_pages * engine.page_size,)
+        ).astype(np.int32)
+
+    def _prompt(i):
+        body = rng.integers(
+            2, cfg.vocab,
+            (int(rng.integers(max(P // 2, 1), P + 1)),)).astype(np.int32)
+        if shared is not None and i % 2 == 0:
+            return np.concatenate([shared, body])[:P].astype(np.int32)
+        return body
+
+    return [Request(rid=i, tokens=_prompt(i),
+                    gen=int(rng.integers(max(G // 2, 1), G + 1)),
+                    temperature=args.temperature, seed=i)
+            for i in range(n)]
+
+
+def _serve_durable(engine, args):
+    """Durable request-stream mode (--snapshot-dir): the whole stream
+    submitted up front into a journaled, snapshot-cadenced scheduler
+    drained under ``serve_with_recovery``.  With --crash-at K the
+    first attempt dies deterministically at step K (CrashFault); the
+    restart loop restores the latest snapshot, replays the journal and
+    finishes the stream — results the crashed process already produced
+    are recovered verbatim, never recomputed."""
+    import time
+
+    from repro.engine import faults
+    from repro.runtime.resilience import (RestartPolicy,
+                                          serve_with_recovery)
+
+    n = args.stream
+    reqs = _stream_requests(engine, args)
+    attempts = []
+
+    def on_start(sched, fresh):
+        attempts.append(fresh)
+        if fresh and args.crash_at:
+            faults.inject(sched, decode_faults=[
+                faults.CrashFault(step=args.crash_at)])
+
+    def submit(sched):
+        for r in reqs:
+            sched.submit(r)
+
+    t0 = time.time()
+    sched = serve_with_recovery(
+        engine, args.snapshot_dir, submit,
+        snapshot_every=args.snapshot_every,
+        policy=RestartPolicy(max_restarts=5, backoff_s=0.0),
+        on_start=on_start)
+    dt = time.time() - t0
+    assert len(sched.finished) == n, "durable stream lost results"
+
+    st = sched.stats
+    toks = sum(len(v) for v in sched.finished.values())
+    print(f"[serve] {engine.cfg.name} durable stream: {n} requests, "
+          f"{toks} tokens in {dt:.2f}s; attempts "
+          f"{len(attempts)} (crash-at {args.crash_at or '-'}), "
+          f"snapshots {sched.snapshotter.saved} "
+          f"(every {args.snapshot_every or '-'} steps), journal "
+          f"{sched.journal.appended} events appended this process")
+    print(f"[serve] lifecycle: finished "
+          f"{sum(1 for v in sched.finished.values() if v.ok)}, "
+          f"failed {st['failed']}, cancelled {st['cancelled']}, "
+          f"timed_out {st['timed_out']}, rejected {st['rejected']}; "
+          f"steps {st['steps']} (post-recovery process)")
+    for i in range(min(n, 3)):
+        res = sched.finished[i]
+        print(f"    req {i} ({len(reqs[i].tokens)} prompt -> "
+              f"{reqs[i].gen} gen, {res.status.value}):", res[:12])
+    return sched.finished
+
+
 def _serve_stream(engine, args):
     """Request-stream mode: N staggered requests of varying prompt/gen
     lengths continuously batched through ``engine.Scheduler`` — short
@@ -144,12 +252,11 @@ def _serve_stream(engine, args):
     and every fault accounted for in the lifecycle counters."""
     import time
 
-    from repro.engine import Request, Scheduler
+    from repro.engine import Scheduler
     from repro.runtime.resilience import Heartbeat, StragglerMonitor
 
     cfg = engine.cfg
-    rng = np.random.default_rng(0)
-    n, P, G = args.stream, args.prompt_len, args.gen
+    n = args.stream
     straggler = StragglerMonitor(window=32, threshold=4.0, warmup=3)
     heartbeat = (Heartbeat(args.heartbeat, interval_s=0.0)
                  if args.heartbeat else None)
@@ -166,25 +273,7 @@ def _serve_stream(engine, args):
     # varying lengths: prompts in [P/2, P], gens in [G/2, G].  With
     # --prefix-cache, half the stream shares a common "system prompt"
     # prefix (a whole number of pages) so the radix cache actually hits.
-    shared = None
-    if getattr(args, "prefix_cache", False):
-        sys_pages = max(1, (P // 2) // engine.page_size)
-        shared = rng.integers(
-            2, cfg.vocab, (sys_pages * engine.page_size,)
-        ).astype(np.int32)
-
-    def _prompt(i):
-        body = rng.integers(
-            2, cfg.vocab,
-            (int(rng.integers(max(P // 2, 1), P + 1)),)).astype(np.int32)
-        if shared is not None and i % 2 == 0:
-            return np.concatenate([shared, body])[:P].astype(np.int32)
-        return body
-
-    reqs = [Request(rid=i, tokens=_prompt(i),
-                    gen=int(rng.integers(max(G // 2, 1), G + 1)),
-                    temperature=args.temperature, seed=i)
-            for i in range(n)]
+    reqs = _stream_requests(engine, args)
     # staggered arrival: one new request every 2 decode steps
     t0 = time.time()
     arrivals = {i: 2 * i for i in range(n)}
@@ -272,6 +361,8 @@ def main(argv=None):
     cfg = engine.cfg
 
     if args.stream:
+        if args.snapshot_dir:
+            return _serve_durable(engine, args)
         return _serve_stream(engine, args)
 
     B, P, G = args.batch, args.prompt_len, args.gen

@@ -82,9 +82,15 @@ class Heartbeat:
 class RetryPolicy:
     """Bounded retry with linear backoff for one *call* (a decode or
     prefill step), as opposed to ``RestartPolicy`` which governs whole
-    process restarts.  ``max_retries=0`` disables retrying."""
+    process restarts.  ``max_retries=0`` disables retrying.
+
+    ``fatal`` exception types re-raise immediately without burning the
+    retry budget: a simulated process death (``engine.faults.
+    CrashError``) is not a transient blip a retry could heal — the
+    restart loop, not the step retry, is the layer that answers it."""
     max_retries: int = 2
     backoff_s: float = 0.05
+    fatal: tuple = ()
 
 
 def call_with_retries(fn: Callable, *args,
@@ -95,7 +101,8 @@ def call_with_retries(fn: Callable, *args,
     ``policy.max_retries`` times, sleeping ``backoff_s * attempt``
     between attempts (``on_retry(attempt, exc)`` fires before each
     retry).  Re-raises the last exception once the budget is spent —
-    persistent faults are not request-level and must surface."""
+    persistent faults are not request-level and must surface.
+    Exceptions matching ``policy.fatal`` re-raise immediately."""
     policy = policy or RetryPolicy()
     last: Optional[Exception] = None
     for attempt in range(policy.max_retries + 1):
@@ -108,6 +115,8 @@ def call_with_retries(fn: Callable, *args,
         except KeyboardInterrupt:
             raise
         except Exception as e:                      # noqa: BLE001
+            if policy.fatal and isinstance(e, policy.fatal):
+                raise
             last = e
     raise last
 
@@ -153,3 +162,68 @@ def run_with_restarts(make_state: Callable[[Optional[int]], object],
             if attempts > policy.max_restarts:
                 raise
             time.sleep(policy.backoff_s * attempts)
+
+
+def serve_with_recovery(engine, snapshot_dir: str, submit: Callable,
+                        *, snapshot_every: int = 0, keep: int = 3,
+                        policy: RestartPolicy = RestartPolicy(),
+                        on_start: Optional[Callable] = None,
+                        sched_kwargs: Optional[dict] = None):
+    """Durable serving supervisor: ``run_with_restarts`` wrapped around
+    a snapshot-cadenced, journaled scheduler drain.
+
+    The first attempt builds a FRESH scheduler and calls
+    ``submit(sched)`` to enqueue the workload (every submit lands in
+    the write-ahead journal under ``snapshot_dir``); the scheduler then
+    snapshots its full serving state every ``snapshot_every`` steps off
+    the step path (0 = journal-only durability).  When the drain raises
+    — e.g. an ``engine.faults.CrashFault`` simulating process death —
+    the restart loop rebuilds the scheduler from the latest complete
+    snapshot (or from scratch when the crash beat the first cadence)
+    and replays the journal suffix: finished results are recovered
+    verbatim, post-snapshot submits re-queued, in-flight slots resume
+    from their snapshotted pages and RNG state.  ``submit`` is NOT
+    called again on recovery attempts — the journal is the workload's
+    durable record.
+
+    ``on_start(sched, fresh)`` runs after each (re)build — the hook
+    fault-injection tests use to crash only the fresh run.  Returns the
+    scheduler that completed the drain; async snapshot failures surface
+    here (teardown waits on the background writer).
+    """
+    # engine modules import this one — keep the import lazy
+    from repro.engine.journal import RequestJournal, read_events, replay
+    from repro.engine.scheduler import Scheduler
+    from repro.engine.snapshot import EngineSnapshotter, restore
+
+    snapshotter = EngineSnapshotter(snapshot_dir, every=snapshot_every,
+                                    keep=keep)
+    journal = RequestJournal(os.path.join(snapshot_dir, "journal.jsonl"))
+    kw = dict(sched_kwargs or {})
+    done: dict = {}
+
+    def make_state(resume):
+        events = read_events(journal.path)
+        if resume is None and not events:
+            sched = Scheduler(engine, journal=journal,
+                              snapshotter=snapshotter, **kw)
+            submit(sched)
+            fresh = True
+        else:
+            sched = restore(snapshotter, engine, step=resume,
+                            journal=journal, snapshotter=snapshotter,
+                            **kw)
+            replay(sched, events)
+            fresh = False
+        if on_start is not None:
+            on_start(sched, fresh)
+        done["sched"] = sched
+        return sched
+
+    try:
+        run_with_restarts(make_state, lambda s: s.run(), snapshotter,
+                          policy)
+    finally:
+        journal.close()
+        snapshotter.close()     # re-raises a failed async snapshot
+    return done["sched"]

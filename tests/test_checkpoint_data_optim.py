@@ -59,6 +59,41 @@ def test_checkpoint_async(tmp_path):
     assert float(out["x"][0, 0]) == 3.0
 
 
+def test_checkpoint_async_failure_surfaces_on_wait(tmp_path,
+                                                   monkeypatch):
+    """A failed background write re-raises at wait() — exactly once —
+    instead of being dropped (or surfacing only on the NEXT save);
+    after the raise the store is usable again."""
+    store = CheckpointStore(str(tmp_path))
+    tree = {"x": jnp.zeros((2,))}
+    real_write = store._write
+
+    def boom(step, host):
+        raise OSError("disk died")
+
+    monkeypatch.setattr(store, "_write", boom)
+    store.save(1, tree, async_=True)
+    with pytest.raises(OSError, match="disk died"):
+        store.wait()
+    store.wait()                        # idempotent: no second raise
+    monkeypatch.setattr(store, "_write", real_write)
+    store.save(2, tree, async_=True)    # save() joins via wait() too
+    store.wait()
+    assert store.latest_step() == 2
+
+
+def test_checkpoint_steps_skips_stray_dirs(tmp_path):
+    """Non-numeric step_* entries (step_backup, a stray file) must not
+    kill restore discovery."""
+    store = CheckpointStore(str(tmp_path))
+    store.save(3, {"x": jnp.zeros((2,))})
+    os.makedirs(tmp_path / "step_backup")
+    (tmp_path / "step_backup" / "_COMPLETE").write_text("ok")
+    (tmp_path / "step_7b").mkdir()
+    assert store.steps() == [3]
+    assert store.latest_step() == 3
+
+
 # ---------------------------------------------------------------- data
 
 def test_synthetic_determinism():

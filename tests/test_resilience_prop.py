@@ -12,7 +12,13 @@ correctness under faults is pinned by tests/test_resilience.py;
 prefix-cache token identity by tests/test_prefix_cache.py (which also
 carries a deterministic mirror of the partition property for
 hypothesis-less environments); chunked-prefill token identity by
-tests/test_chunked.py."""
+tests/test_chunked.py.  The durable-serving property rides the same
+fake engine: a crash injected at a RANDOM step of a RANDOM
+submit/cancel stream, recovered via snapshot + journal replay
+(``serve_with_recovery``), yields the same result map as the
+crash-free run with the page pool fully drained (real-model
+bit-identity lives in tests/test_snapshot.py)."""
+import tempfile
 import types
 
 import jax.numpy as jnp
@@ -23,11 +29,13 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.engine import (EngineConfig, PrefixCache, Request,  # noqa: E402
-                          RequestStatus, Scheduler)
+                          RequestStatus, Scheduler, faults)
 from repro.engine import paged_cache as PC  # noqa: E402
 from repro.engine.paged_cache import (PageAllocator,  # noqa: E402
                                       PagePoolExhausted)
 from repro.engine.scheduler import pack_chunk  # noqa: E402
+from repro.runtime.resilience import (RestartPolicy,  # noqa: E402
+                                      serve_with_recovery)
 
 
 @settings(max_examples=200, deadline=None)
@@ -407,3 +415,64 @@ def test_scheduler_prefix_cache_invariants_under_random_sequences(
     sched.prefix.clear()
     assert sched.allocator.free_pages == eng.n_pages
     assert set(out) == set(submitted)
+
+
+_WORKLOAD = st.lists(
+    st.one_of(
+        # (submit, prompt_len, gen)
+        st.tuples(st.just("submit"), st.integers(1, 10),
+                  st.integers(1, 5)),
+        # (cancel, submitted-index, _)
+        st.tuples(st.just("cancel"), st.integers(0, 5), st.just(0))),
+    min_size=1, max_size=8)
+
+
+@settings(max_examples=10, deadline=None)
+@given(_WORKLOAD, st.integers(1, 8), st.sampled_from([0, 2]))
+def test_crash_recovery_result_map_identical(ops, crash_step, every):
+    """Crash at a RANDOM step of a RANDOM submit/cancel stream,
+    recover from the latest snapshot (cadence 0 = journal-only) plus
+    the journal, and the final result map — every rid's tokens and
+    terminal status — is identical to the crash-free run's, with the
+    allocator partition intact and the pool fully drained.  (When the
+    stream drains before ``crash_step`` decode calls the crash never
+    fires and recovery is vacuous — hypothesis varies both sides.)"""
+
+    def apply_ops(sched):
+        rng = np.random.default_rng(0)
+        submitted = []
+        for op, a, b in ops:
+            if op == "submit":
+                rid = len(submitted)
+                submitted.append(rid)
+                sched.submit(Request(
+                    rid=rid,
+                    tokens=rng.integers(0, 8, (a,)).astype(np.int32),
+                    gen=b))
+            elif a < len(submitted):
+                sched.cancel(a)
+
+    ref = Scheduler(_FakeEngine())
+    apply_ops(ref)
+    want = ref.run()
+
+    def on_start(sched, fresh):
+        if fresh:       # the crash hits only the pre-recovery process
+            faults.inject(sched, decode_faults=[
+                faults.CrashFault(step=crash_step)])
+
+    eng = _FakeEngine()
+    with tempfile.TemporaryDirectory() as d:
+        sched = serve_with_recovery(
+            eng, d, apply_ops, snapshot_every=every,
+            policy=RestartPolicy(max_restarts=3, backoff_s=0.0),
+            on_start=on_start)
+    assert set(sched.finished) == set(want)
+    for rid, res in want.items():
+        got = sched.finished[rid]
+        assert got.status is res.status, f"req {rid}"
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(res),
+                                      err_msg=f"req {rid}")
+    sched.allocator.check()
+    assert sched.allocator.free_pages == eng.n_pages
