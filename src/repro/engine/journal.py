@@ -29,11 +29,16 @@ changes the restored state:
     already happened in the pre-crash process;
   * ``submit`` of an unknown rid re-queues the request in original
     arrival order (the journal is the arrival order);
-  * ``cancel`` of a still-live rid re-applies.
+  * ``cancel`` of a still-live rid re-applies — unless a ``terminal``
+    for the same rid appears later in the log (cancel is journaled as
+    *intent* before its effect), in which case the cancel is a no-op
+    and the terminal alone is recovered, verbatim.
 
 The log survives its own crash: a torn final line (the process died
-mid-append) is detected and skipped by ``read_events``.  Rids must be
-JSON-representable and unique across the log's lifetime.
+mid-append) is skipped by ``read_events`` and truncated by
+``RequestJournal`` on reopen, so the recovered process's appends start
+on a clean line boundary.  Rids must be JSON-representable and unique
+across the log's lifetime.
 """
 from __future__ import annotations
 
@@ -92,7 +97,13 @@ class RequestJournal:
         d = os.path.dirname(path)
         if d:
             os.makedirs(d, exist_ok=True)
+        _repair_tail(path)
         self._f = open(path, "a", encoding="utf-8")
+        # make the directory entry itself durable: without this, a
+        # crash shortly after creation can lose the whole file — and
+        # every "durably acknowledged" event in it — on filesystems
+        # that don't persist the parent dir as a side effect
+        _fsync_dir(d or ".")
         self.appended = 0
 
     def _append(self, ev: Dict[str, Any]) -> None:
@@ -123,6 +134,40 @@ class RequestJournal:
     def close(self) -> None:
         if not self._f.closed:
             self._f.close()
+
+
+def _repair_tail(path: str) -> None:
+    """Truncate a torn final line (the previous writer died
+    mid-append) before reopening for append.  Anything after the last
+    complete ``\\n``-terminated line was never acknowledged — the
+    append only returns after write+fsync of the full line — so
+    dropping it loses nothing, and NOT dropping it would glue the
+    next append onto the torn fragment, corrupting an event that IS
+    acknowledged and failing recovery on a second crash."""
+    try:
+        if os.path.getsize(path) == 0:
+            return
+    except OSError:
+        return                      # no file yet: nothing to repair
+    with open(path, "rb") as f:
+        data = f.read()
+    if data.endswith(b"\n"):
+        return
+    with open(path, "r+b") as f:
+        f.truncate(data.rfind(b"\n") + 1)
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def _fsync_dir(d: str) -> None:
+    try:
+        fd = os.open(d, os.O_RDONLY)
+    except OSError:
+        return                      # platform can't open dirs: best effort
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def read_events(path: str) -> List[Dict[str, Any]]:
@@ -159,6 +204,11 @@ def replay(sched, events: List[Dict[str, Any]]) -> Dict[str, int]:
     from repro.engine.scheduler import RequestResult, RequestStatus
 
     stats = {"recovered": 0, "requeued": 0, "cancelled": 0, "noop": 0}
+    # rids whose terminal is somewhere in the log: their cancel lines
+    # (journaled as intent BEFORE the terminal) must not re-run
+    # sched.cancel(), which would synthesize a fresh CANCELLED result
+    # from snapshot-time partial state and shadow the verbatim one
+    terminal_rids = {ev["rid"] for ev in events if ev["ev"] == "terminal"}
     saved_journal, sched.journal = sched.journal, None
     try:
         for ev in events:
@@ -184,7 +234,8 @@ def replay(sched, events: List[Dict[str, Any]]) -> Dict[str, int]:
                 sched.submit(request_from_event(ev))
                 stats["requeued"] += 1
             elif kind == "cancel":
-                if rid in sched.finished or not _find_live(sched, rid):
+                if (rid in terminal_rids or rid in sched.finished
+                        or not _find_live(sched, rid)):
                     stats["noop"] += 1
                     continue
                 sched.cancel(rid)

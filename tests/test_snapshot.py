@@ -278,6 +278,75 @@ def test_journal_torn_tail_tolerated_mid_corruption_raises(tmp_path):
     assert read_events(str(tmp_path / "missing.jsonl")) == []
 
 
+def test_journal_reopen_repairs_torn_tail(tmp_path):
+    """Double-crash: the writer dies mid-append, the recovered process
+    reopens the SAME journal and keeps appending, then crashes again.
+    The reopen must truncate the torn fragment so the new appends land
+    on a clean line boundary — otherwise the first post-recovery event
+    is glued onto the fragment, and the second recovery finds corrupt
+    JSON mid-file and fails permanently."""
+    from repro.engine import RequestResult, RequestStatus
+
+    p = str(tmp_path / "j.jsonl")
+    j = RequestJournal(p)
+    j.submit(Request(rid=0, tokens=np.arange(2, 5, dtype=np.int32),
+                     gen=2))
+    j.close()
+    with open(p, "a", encoding="utf-8") as f:
+        f.write('{"ev": "subm')                 # crash #1, mid-append
+
+    j2 = RequestJournal(p)                      # recovered process
+    j2.cancel(0)
+    j2.terminal(0, RequestResult(np.arange(3, dtype=np.int32),
+                                 RequestStatus.CANCELLED,
+                                 error="cancelled mid-flight"))
+    j2.close()
+
+    # crash #2: replay must parse every acknowledged event cleanly —
+    # the torn fragment is gone, nothing was glued onto it
+    evs = read_events(p)
+    assert [e["ev"] for e in evs] == ["submit", "cancel", "terminal"]
+    assert evs[2]["status"] == RequestStatus.CANCELLED.value
+
+    # repair is append-only-safe: a clean journal reopens untouched
+    before = open(p, encoding="utf-8").read()
+    RequestJournal(p).close()
+    assert open(p, encoding="utf-8").read() == before
+
+
+def test_replay_cancel_intent_before_terminal_is_noop(tmp_path):
+    """The scheduler journals a cancel as INTENT before appending the
+    authoritative terminal.  On replay the cancel must not re-run
+    against the restored (snapshot-time) partial state — that would
+    synthesize a fresh CANCELLED result with fewer tokens and wrong
+    latency, shadowing the verbatim terminal that follows."""
+    eng = _engine(_cfg, "bf16")
+    jpath = str(tmp_path / "journal.jsonl")
+    j = RequestJournal(jpath)
+    a = Scheduler(eng, journal=j)
+    reqs = _requests(eng.cfg.vocab)
+    for r in reqs:
+        a.submit(r)
+    a.admit()
+    for _ in range(2):
+        a.step()
+    assert a.cancel(reqs[0].rid)    # journal order: cancel, terminal
+    want = a.run()
+    j.close()
+
+    events = read_events(jpath)
+    kinds = [(e["ev"], e["rid"]) for e in events]
+    assert kinds.index(("cancel", 0)) < kinds.index(("terminal", 0))
+
+    b = Scheduler(eng)
+    stats = replay(b, events)
+    assert stats["cancelled"] == 0  # intent superseded by its terminal
+    _assert_same_results(b.finished, want)
+    assert b.finished[0].latency_s == want[0].latency_s
+    assert b.finished[0].token_times == want[0].token_times
+    assert b.allocator.free_pages == eng.n_pages
+
+
 # ------------------------------------------------- restore validation
 
 
